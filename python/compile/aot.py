@@ -1,0 +1,100 @@
+"""AOT compile path: lower the L2 census model to HLO *text* artifacts.
+
+Run once via ``make artifacts`` (never on the request path):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly.  Lowering goes through
+``mlir_module_to_xla_computation(..., return_tuple=True)`` so the Rust
+side unwraps a tuple (see rust/src/runtime/).
+
+Artifacts written:
+  census_<N>.hlo.txt   one per tile size N (the HLO is shape-specialized)
+  manifest.txt         "name n block" per line, consumed by the Rust
+                       runtime's artifact discovery
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import census as kernels
+from compile.kernels import ref
+
+DEFAULT_SIZES = (256, 1024)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_census(n: int):
+    block = kernels.pick_block(n)
+    fn = functools.partial(model.census, block=block, interpret=True)
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return jax.jit(fn).lower(spec), block
+
+
+def _selfcheck(n: int, block: int) -> None:
+    """Validate the jitted model against the pure-jnp oracle pre-export."""
+    rng = np.random.default_rng(n)
+    a = (rng.random((n, n)) < 0.05).astype(np.float32)
+    a = np.triu(a, 1)
+    a = a + a.T
+    stats, deg = model.census(jnp.asarray(a), block=block, interpret=True)
+    stats_ref, deg_ref = ref.census_ref(jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(stats), np.asarray(stats_ref), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(deg), np.asarray(deg_ref), rtol=1e-5)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--sizes",
+        type=lambda s: tuple(int(x) for x in s.split(",")),
+        default=DEFAULT_SIZES,
+        help="comma-separated census tile sizes",
+    )
+    p.add_argument("--skip-selfcheck", action="store_true")
+    args = p.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for n in args.sizes:
+        lowered, block = lower_census(n)
+        if not args.skip_selfcheck:
+            _selfcheck(n, block)
+        text = to_hlo_text(lowered)
+        name = f"census_{n}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {n} {block}")
+        print(f"wrote {path} ({len(text)} chars, block={block})")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: blocked masked-matmul-reduce for the motif-3 census.
+
+The structural census needs ``triangles = sum((A @ A) * A) / 6`` over the
+dense adjacency matrix ``A``.  That contraction is the compute hot-spot
+(O(N^3) FLOPs); everything else in the census is O(N^2) and stays in plain
+jnp at L2 (`model.py`).
+
+For every output tile ``(i, j)`` the kernel accumulates the K-loop
+``sum_k A[bi, bk] @ A[bk, bj]`` into a VMEM scratch accumulator and, on the
+last K step, masks with the resident ``A[bi, bj]`` tile and reduces to a
+single scalar.  Emitting one scalar per tile (instead of the full ``A @ A``
+product) keeps the HBM write traffic at ``O((N/b)^2)`` instead of
+``O(N^2)`` — the reduction happens while the tile is still in VMEM.
+
+Hardware adaptation (paper -> TPU, see DESIGN.md §Hardware-Adaptation):
+the paper counts size-3 subgraphs by explicit enumeration on CPU workers;
+here the same census is recast as an MXU-shaped blocked contraction.  On a
+real TPU each ``jnp.dot`` maps onto the 128x128 systolic MXU and the
+BlockSpec grid is the HBM<->VMEM schedule.  On this image the kernel MUST
+run with ``interpret=True``: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute.
+
+VMEM footprint per grid step (f32, block ``b``):
+    3 input tiles + 1 scratch accumulator = 4 * b*b * 4 bytes
+    b = 128  ->  256 KiB, well under the ~16 MiB VMEM budget, leaving room
+    for double-buffering the streamed ``x``/``y`` tiles.
+MXU utilization estimate: with b = 128 each K step is exactly one 128^3
+MXU pass; arithmetic intensity = b/6 FLOP/byte (~21 for b=128), compute
+bound on the MXU roofline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tri_kernel(x_ref, y_ref, mask_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step of the masked-matmul-reduce.
+
+    x_ref:    A[bi, bk] tile            (b, b)
+    y_ref:    A[bk, bj] tile            (b, b)
+    mask_ref: A[bi, bj] tile            (b, b)   element-wise mask
+    o_ref:    scalar partial sum for tile (i, j), shape (1, 1)
+    acc_ref:  VMEM scratch accumulator  (b, b) f32
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped contraction; always accumulate in f32.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        masked = acc_ref[...] * mask_ref[...].astype(jnp.float32)
+        o_ref[0, 0] = jnp.sum(masked)
+
+
+def pick_block(n: int, preferred: int = 128) -> int:
+    """Largest power-of-two block <= ``preferred`` that divides ``n``."""
+    b = preferred
+    while b > 1 and n % b != 0:
+        b //= 2
+    if n % b != 0:
+        raise ValueError(f"no power-of-two block divides n={n}")
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def masked_matmul_reduce(a, *, block: int = 128, interpret: bool = True):
+    """Per-tile partial sums of ``(a @ a) * a``.
+
+    Args:
+      a: square (n, n) matrix; ``n`` must be a multiple of ``block``.
+      block: tile edge; 128 matches the TPU MXU.
+      interpret: must stay True on CPU (see module docstring).
+
+    Returns:
+      (n/block, n/block) f32 array of per-tile partial sums; its total
+      equals ``jnp.sum((a @ a) * a)``.
+    """
+    n = a.shape[0]
+    if a.ndim != 2 or a.shape[1] != n:
+        raise ValueError(f"adjacency must be square, got {a.shape}")
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    n_b = n // block
+
+    return pl.pallas_call(
+        functools.partial(_tri_kernel, n_k=n_b),
+        grid=(n_b, n_b, n_b),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, k: (i, k)),  # A[bi,bk]
+            pl.BlockSpec((block, block), lambda i, j, k: (k, j)),  # A[bk,bj]
+            pl.BlockSpec((block, block), lambda i, j, k: (i, j)),  # mask
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_b, n_b), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+        interpret=interpret,
+    )(a, a, a)
+
+
+def triangle_count(a, *, block: int | None = None, interpret: bool = True):
+    """Number of triangles in the undirected adjacency matrix ``a``."""
+    if block is None:
+        block = pick_block(a.shape[0])
+    return jnp.sum(masked_matmul_reduce(a, block=block, interpret=interpret)) / 6.0

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the census kernel (no Pallas).
+
+`python/tests/test_kernel.py` asserts the Pallas kernel against these
+functions; the AOT model is also validated against them before artifacts
+are written.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_matmul_reduce_ref(a, block: int):
+    """Reference for kernels.census.masked_matmul_reduce.
+
+    Computes (a @ a) * a densely, then sums each (block, block) tile.
+    """
+    n = a.shape[0]
+    n_b = n // block
+    full = jnp.matmul(a, a, preferred_element_type=jnp.float32)
+    masked = full * a.astype(jnp.float32)
+    return masked.reshape(n_b, block, n_b, block).sum(axis=(1, 3))
+
+
+def triangle_count_ref(a):
+    """Triangles = sum((A@A) * A) / 6 for an undirected, loop-free A."""
+    full = jnp.matmul(a, a, preferred_element_type=jnp.float32)
+    return jnp.sum(full * a.astype(jnp.float32)) / 6.0
+
+
+def census_ref(a):
+    """Reference for model.census: see model.py for the field layout."""
+    af = a.astype(jnp.float32)
+    deg = af.sum(axis=1)
+    n_active = jnp.sum((deg > 0).astype(jnp.float32))
+    edges = deg.sum() / 2.0
+    wedges = jnp.sum(deg * (deg - 1.0)) / 2.0
+    triangles = triangle_count_ref(a)
+    stats = jnp.stack(
+        [
+            n_active,
+            edges,
+            wedges,
+            triangles,
+            deg.max(),
+            deg.sum(),
+            jnp.sum(deg * deg),
+            jnp.sum(deg * deg * deg),
+        ]
+    )
+    return stats, deg

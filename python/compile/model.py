@@ -1,0 +1,84 @@
+"""L2 JAX model: the structural census over a dense adjacency tile.
+
+The Rust coordinator (L3) calls this computation — AOT-compiled to HLO
+text by `aot.py` and executed through PJRT — for two purposes:
+
+  * Motifs cross-validation: the motif-3 census (edges / wedges /
+    triangles) is an independent, algebraic count of exactly the
+    subgraphs the enumeration engine explores at MS=3.
+  * Load-balancer cost model: degree moments (sum deg^2, sum deg^3) bound
+    the number of size-2/3 extension candidates per vertex, which is the
+    cost estimate used when partitioning ODAG blocks (paper §5.3).
+
+The O(N^3) hot-spot — the masked contraction ``(A@A) * A`` — is the L1
+Pallas kernel (`kernels/census.py`); everything else is O(N^2) jnp and is
+fused by XLA around it.
+
+STATS field layout (f32[8]), shared with rust/src/runtime/census.rs —
+keep in sync:
+  0: n_active   (vertices with degree > 0)
+  1: edges      (undirected edge count)
+  2: wedges     (paths of length 2, open + closed)
+  3: triangles
+  4: max_deg
+  5: sum_deg
+  6: sum_deg2
+  7: sum_deg3
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import census as kernels
+
+STATS_FIELDS = (
+    "n_active",
+    "edges",
+    "wedges",
+    "triangles",
+    "max_deg",
+    "sum_deg",
+    "sum_deg2",
+    "sum_deg3",
+)
+
+
+def census(a, *, block: int | None = None, interpret: bool = True):
+    """Structural census of a dense, undirected, loop-free adjacency tile.
+
+    Args:
+      a: (n, n) f32 adjacency matrix (0/1, symmetric, zero diagonal).
+         Graphs smaller than n are zero-padded by the caller; padding
+         rows/cols have degree 0 and contribute nothing to any field.
+
+    Returns:
+      (stats, deg): f32[8] census (layout above) and f32[n] degrees.
+    """
+    if block is None:
+        block = kernels.pick_block(a.shape[0])
+
+    af = a.astype(jnp.float32)
+    deg = af.sum(axis=1)
+
+    # L1 kernel: per-tile partial sums of (A@A) * A.
+    tri_tiles = kernels.masked_matmul_reduce(af, block=block, interpret=interpret)
+    triangles = jnp.sum(tri_tiles) / 6.0
+
+    n_active = jnp.sum((deg > 0).astype(jnp.float32))
+    edges = deg.sum() / 2.0
+    wedges = jnp.sum(deg * (deg - 1.0)) / 2.0
+
+    stats = jnp.stack(
+        [
+            n_active,
+            edges,
+            wedges,
+            triangles,
+            deg.max(),
+            deg.sum(),
+            jnp.sum(deg * deg),
+            jnp.sum(deg * deg * deg),
+        ]
+    )
+    return stats, deg

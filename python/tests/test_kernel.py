@@ -1,0 +1,142 @@
+"""Pallas census kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, block sizes, densities, and dtypes; every case
+asserts allclose against kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import census, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_adjacency(n, density, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < density).astype(dtype)
+    a = np.triu(a, 1)
+    return a + a.T
+
+
+# ---------------------------------------------------------------------------
+# Deterministic unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_empty_graph():
+    a = jnp.zeros((8, 8), jnp.float32)
+    out = census.masked_matmul_reduce(a, block=4)
+    assert out.shape == (2, 2)
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+def test_single_triangle():
+    a = np.zeros((8, 8), np.float32)
+    for u, v in [(0, 1), (1, 2), (0, 2)]:
+        a[u, v] = a[v, u] = 1.0
+    t = census.triangle_count(jnp.asarray(a), block=4)
+    assert float(t) == 1.0
+
+
+def test_complete_graph_k6():
+    n = 8
+    a = np.ones((n, n), np.float32) - np.eye(n, dtype=np.float32)
+    a[6:, :] = 0.0
+    a[:, 6:] = 0.0  # K6 embedded in an 8x8 tile (2 padding vertices)
+    t = census.triangle_count(jnp.asarray(a), block=4)
+    assert float(t) == 20.0  # C(6,3)
+
+
+def test_block_equals_n():
+    a = random_adjacency(16, 0.3, seed=1)
+    out = census.masked_matmul_reduce(jnp.asarray(a), block=16)
+    assert out.shape == (1, 1)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(ref.masked_matmul_reduce_ref(jnp.asarray(a), 16)),
+        rtol=1e-5,
+    )
+
+
+def test_rejects_non_square():
+    with pytest.raises(ValueError, match="square"):
+        census.masked_matmul_reduce(jnp.zeros((4, 8), jnp.float32), block=4)
+
+
+def test_rejects_indivisible_block():
+    with pytest.raises(ValueError, match="multiple"):
+        census.masked_matmul_reduce(jnp.zeros((12, 12), jnp.float32), block=8)
+
+
+def test_pick_block():
+    assert census.pick_block(256) == 128
+    assert census.pick_block(1024) == 128
+    assert census.pick_block(96) == 32
+    assert census.pick_block(8) == 8
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes x blocks x densities x dtypes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_b=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([4, 8, 16]),
+    density=st.floats(min_value=0.0, max_value=0.9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref(n_b, block, density, seed):
+    n = n_b * block
+    a = jnp.asarray(random_adjacency(n, density, seed))
+    got = census.masked_matmul_reduce(a, block=block)
+    want = ref.masked_matmul_reduce_ref(a, block)
+    assert got.shape == (n_b, n_b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32, 64]),
+    density=st.floats(min_value=0.05, max_value=0.6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_triangle_count_matches_ref(n, density, seed):
+    a = jnp.asarray(random_adjacency(n, density, seed))
+    got = census.triangle_count(a)
+    want = ref.triangle_count_ref(a)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from([np.float32, np.int32, np.float64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_dtypes(dtype, seed):
+    """Non-f32 adjacency inputs accumulate in f32 and match the oracle."""
+    a = random_adjacency(16, 0.3, seed, dtype=dtype)
+    got = census.masked_matmul_reduce(jnp.asarray(a), block=8)
+    want = ref.masked_matmul_reduce_ref(jnp.asarray(a), 8)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want, np.float32), rtol=1e-4
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_b=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_triangle_count_nonnegative_integer(n_b, seed):
+    """Triangle counts of 0/1 adjacency matrices are exact integers."""
+    a = jnp.asarray(random_adjacency(8 * n_b, 0.4, seed))
+    t = float(census.triangle_count(a, block=8))
+    assert t >= 0.0
+    assert abs(t - round(t)) < 1e-3

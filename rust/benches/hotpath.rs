@@ -1,0 +1,147 @@
+//! Hot-path microbenchmarks (no criterion in the offline vendor set;
+//! plain loop timing with med-of-5 reporting). Drives the §Perf
+//! optimization loop in EXPERIMENTS.md.
+//!
+//! ```text
+//! cargo bench --bench hotpath
+//! ```
+
+use std::time::Instant;
+
+use arabesque::embedding::{self, Embedding, Mode};
+use arabesque::graph::gen;
+use arabesque::odag::Odag;
+use arabesque::pattern::{self, canon};
+use arabesque::util::human_count;
+
+/// Run `f` `iters` times, 5 trials; report median ns/op and ops/s.
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
+    let mut trials = Vec::with_capacity(5);
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        trials.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    trials.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = trials[2];
+    println!(
+        "{name:<44} {med:>10.1} ns/op {:>14} ops/s",
+        human_count((1e9 / med) as u64)
+    );
+}
+
+fn main() {
+    println!("=== hot-path microbenchmarks ===");
+    let g = gen::dataset("mico-s", 1.0).unwrap().unlabeled();
+
+    // --- canonicality check (the per-candidate hot path) -------------
+    // A mid-size canonical embedding + its candidates.
+    let parent = {
+        // Greedy: grow a canonical embedding of 4 vertices.
+        let mut words = vec![0u32];
+        while words.len() < 4 {
+            let exts = embedding::extensions(&g, &Embedding::new(words.clone()), Mode::VertexInduced);
+            let next = exts
+                .into_iter()
+                .find(|&x| embedding::is_canonical_extension(&g, Mode::VertexInduced, &words, x))
+                .expect("extension exists");
+            words.push(next);
+        }
+        words
+    };
+    let exts = embedding::extensions(&g, &Embedding::new(parent.clone()), Mode::VertexInduced);
+    let probe = exts[exts.len() / 2];
+    bench("is_canonical_extension (k=4, vertex mode)", 2_000_000, || {
+        std::hint::black_box(embedding::is_canonical_extension(
+            &g,
+            Mode::VertexInduced,
+            std::hint::black_box(&parent),
+            std::hint::black_box(probe),
+        ));
+    });
+
+    // --- extension generation ----------------------------------------
+    let pe = Embedding::new(parent.clone());
+    bench("extensions (k=4, vertex mode)", 200_000, || {
+        std::hint::black_box(embedding::extensions(&g, &pe, Mode::VertexInduced));
+    });
+
+    // --- adjacency test ------------------------------------------------
+    bench("is_neighbor (binary search)", 5_000_000, || {
+        std::hint::black_box(g.is_neighbor(std::hint::black_box(17), std::hint::black_box(900)));
+    });
+
+    // --- quick pattern extraction --------------------------------------
+    bench("quick_pattern (k=4, vertex mode)", 500_000, || {
+        std::hint::black_box(pattern::quick_pattern(&g, &pe, Mode::VertexInduced));
+    });
+
+    // --- pattern canonization ------------------------------------------
+    let qp = pattern::quick_pattern(&g, &pe, Mode::VertexInduced);
+    bench("canonicalize (4-vertex pattern)", 100_000, || {
+        std::hint::black_box(canon::canonicalize(std::hint::black_box(&qp)));
+    });
+    let k6 = {
+        let mut edges = Vec::new();
+        for u in 0..6u8 {
+            for v in (u + 1)..6 {
+                edges.push((u, v, 0));
+            }
+        }
+        pattern::Pattern::new(vec![0; 6], edges)
+    };
+    bench("canonicalize (K6, worst case)", 20_000, || {
+        std::hint::black_box(canon::canonicalize(std::hint::black_box(&k6)));
+    });
+
+    // --- ODAG add + enumerate -----------------------------------------
+    let embs: Vec<Vec<u32>> = {
+        let mut out = Vec::new();
+        let r = arabesque::engine::Cluster::new(arabesque::engine::Config::new(1, 1))
+            .run(&g, &arabesque::apps::Cliques::new(3));
+        let _ = r;
+        // Collect canonical triangles directly.
+        for a in 0..200u32 {
+            for &(b, _) in g.neighbors(a) {
+                if b <= a {
+                    continue;
+                }
+                for &(c, _) in g.neighbors(b) {
+                    if c > b && g.is_neighbor(a, c) {
+                        out.push(vec![a, b, c]);
+                    }
+                }
+            }
+        }
+        out
+    };
+    println!("(odag input: {} triangle embeddings)", embs.len());
+    bench("odag add (k=3)", 50_000, {
+        let mut o = Odag::new(3);
+        let mut i = 0usize;
+        let embs = &embs;
+        move || {
+            o.add(&embs[i % embs.len()]);
+            i += 1;
+        }
+    });
+    let mut odag = Odag::new(3);
+    for e in &embs {
+        odag.add(e);
+    }
+    bench("odag enumerate (full)", 200, || {
+        let mut n = 0u64;
+        odag.enumerate(&g, Mode::VertexInduced, 0, 1, 64, |_| n += 1);
+        std::hint::black_box(n);
+    });
+    bench("odag enumerate (1 of 8 partitions)", 1_000, || {
+        let mut n = 0u64;
+        odag.enumerate(&g, Mode::VertexInduced, 3, 8, 64, |_| n += 1);
+        std::hint::black_box(n);
+    });
+    bench("odag costs()", 2_000, || {
+        std::hint::black_box(odag.costs());
+    });
+}

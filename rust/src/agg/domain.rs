@@ -1,0 +1,203 @@
+//! Minimum image-based support (paper §2, Bringmann & Nijssen [7]).
+//!
+//! The *domain* of pattern position `i` is the set of distinct input
+//! graph vertices mapped to `i` by any embedding of the pattern (under
+//! any pattern automorphism — symmetric positions share their images).
+//! Support = the minimum domain size across positions. The metric is
+//! anti-monotonic: extending a pattern can only shrink its support,
+//! which is what lets FSM prune whole exploration subtrees.
+
+use std::collections::HashSet;
+
+use crate::graph::VertexId;
+
+/// Per-position distinct vertex sets for one pattern.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DomainSupport {
+    domains: Vec<HashSet<VertexId>>,
+}
+
+impl DomainSupport {
+    pub fn new(positions: usize) -> Self {
+        DomainSupport { domains: vec![HashSet::new(); positions] }
+    }
+
+    /// Build from one embedding's vertices (in pattern-position order),
+    /// expanded over the pattern's automorphisms: for each automorphism
+    /// σ, vertex at position `i` also supports position `σ(i)`.
+    pub fn from_embedding(vertices: &[VertexId], automorphisms: &[Vec<u8>]) -> Self {
+        let mut d = DomainSupport::new(vertices.len());
+        for auto in automorphisms {
+            for (i, &v) in vertices.iter().enumerate() {
+                d.domains[auto[i] as usize].insert(v);
+            }
+        }
+        d
+    }
+
+    pub fn positions(&self) -> usize {
+        self.domains.len()
+    }
+
+    pub fn add(&mut self, position: usize, v: VertexId) {
+        self.domains[position].insert(v);
+    }
+
+    pub fn contains(&self, position: usize, v: VertexId) -> bool {
+        self.domains[position].contains(&v)
+    }
+
+    pub fn size(&self, position: usize) -> usize {
+        self.domains[position].len()
+    }
+
+    /// Reducer: per-position union.
+    pub fn merge(&mut self, other: DomainSupport) {
+        assert_eq!(self.domains.len(), other.domains.len(), "position count mismatch");
+        for (mine, theirs) in self.domains.iter_mut().zip(other.domains) {
+            mine.extend(theirs);
+        }
+    }
+
+    /// Reorder positions under `perm[old] = new` (quick -> canonical).
+    pub fn permuted(&self, perm: &[u8]) -> DomainSupport {
+        assert_eq!(perm.len(), self.domains.len());
+        let mut out = DomainSupport::new(self.domains.len());
+        for (old, set) in self.domains.iter().enumerate() {
+            out.domains[perm[old] as usize] = set.clone();
+        }
+        out
+    }
+
+    /// Minimum image-based support: min domain size over positions.
+    pub fn support(&self) -> usize {
+        self.domains.iter().map(HashSet::len).min().unwrap_or(0)
+    }
+
+    /// Support with automorphism expansion. Raw domains record each
+    /// embedding's vertex at its own position; under the pattern's
+    /// automorphism group, symmetric positions share their images, so
+    /// the effective domain of position `j` is the union of raw domains
+    /// over `j`'s orbit. (Expansion commutes with union, so it can run
+    /// once per pattern here instead of once per embedding at map time.)
+    pub fn expanded_support(&self, automorphisms: &[Vec<u8>]) -> usize {
+        let n = self.domains.len();
+        if n == 0 {
+            return 0;
+        }
+        let mut best = usize::MAX;
+        for j in 0..n {
+            let mut union: HashSet<VertexId> = HashSet::new();
+            for auto in automorphisms {
+                // i such that auto maps i -> j.
+                if let Some(i) = auto.iter().position(|&x| x as usize == j) {
+                    union.extend(&self.domains[i]);
+                }
+            }
+            if automorphisms.is_empty() {
+                union.extend(&self.domains[j]);
+            }
+            best = best.min(union.len());
+        }
+        best
+    }
+
+    /// Serialized size, for message accounting.
+    pub fn byte_size(&self) -> usize {
+        4 + self.domains.iter().map(|d| 4 + 4 * d.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn support_is_min_over_positions() {
+        let mut d = DomainSupport::new(2);
+        d.add(0, 1);
+        d.add(0, 2);
+        d.add(0, 3);
+        d.add(1, 9);
+        assert_eq!(d.size(0), 3);
+        assert_eq!(d.size(1), 1);
+        assert_eq!(d.support(), 1);
+    }
+
+    #[test]
+    fn merge_unions() {
+        let mut a = DomainSupport::new(2);
+        a.add(0, 1);
+        a.add(1, 5);
+        let mut b = DomainSupport::new(2);
+        b.add(0, 1);
+        b.add(0, 2);
+        b.add(1, 6);
+        a.merge(b);
+        assert_eq!(a.size(0), 2);
+        assert_eq!(a.size(1), 2);
+        assert_eq!(a.support(), 2);
+    }
+
+    #[test]
+    fn duplicates_dont_inflate() {
+        let mut d = DomainSupport::new(1);
+        d.add(0, 4);
+        d.add(0, 4);
+        assert_eq!(d.size(0), 1);
+    }
+
+    #[test]
+    fn from_embedding_with_automorphisms() {
+        // Symmetric edge pattern: automorphisms {id, flip}. One embedding
+        // (10, 20) populates both positions with both vertices.
+        let autos = vec![vec![0u8, 1], vec![1, 0]];
+        let d = DomainSupport::from_embedding(&[10, 20], &autos);
+        assert_eq!(d.size(0), 2);
+        assert_eq!(d.size(1), 2);
+        assert_eq!(d.support(), 2);
+        // Asymmetric pattern: identity only.
+        let d = DomainSupport::from_embedding(&[10, 20], &[vec![0, 1]]);
+        assert_eq!(d.size(0), 1);
+        assert_eq!(d.support(), 1);
+    }
+
+    #[test]
+    fn permuted_moves_sets() {
+        let mut d = DomainSupport::new(2);
+        d.add(0, 7);
+        let p = d.permuted(&[1, 0]);
+        assert!(p.contains(1, 7));
+        assert!(!p.contains(0, 7));
+    }
+
+    #[test]
+    fn expanded_support_uses_orbits() {
+        // Symmetric edge pattern, raw domains {1,2} at pos 0 and {3} at
+        // pos 1. Orbit {0,1}: both expanded domains = {1,2,3} -> 3.
+        let mut d = DomainSupport::new(2);
+        d.add(0, 1);
+        d.add(0, 2);
+        d.add(1, 3);
+        let flip = vec![vec![0u8, 1], vec![1, 0]];
+        assert_eq!(d.expanded_support(&flip), 3);
+        // Identity only: support = min(2, 1) = 1.
+        assert_eq!(d.expanded_support(&[vec![0, 1]]), 1);
+        // Empty automorphism list behaves like identity.
+        assert_eq!(d.expanded_support(&[]), 1);
+    }
+
+    #[test]
+    fn paper_fig2_support() {
+        // Paper Fig 2: pattern blue-yellow-blue; two embeddings
+        // ⟨1,2,3⟩ and ⟨3,2,1⟩ (automorphic — only one is counted).
+        // The blue endpoints domain = {1,3} (via the flip automorphism),
+        // yellow middle = {2}; support = 1.
+        let autos = vec![vec![0u8, 1, 2], vec![2, 1, 0]]; // path flip
+        let d = DomainSupport::from_embedding(&[1, 2, 3], &autos);
+        assert_eq!(d.size(0), 2); // {1, 3}
+        assert_eq!(d.size(1), 1); // {2}
+        assert_eq!(d.size(2), 2); // {1, 3}
+        assert_eq!(d.support(), 1);
+    }
+}

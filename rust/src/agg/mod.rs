@@ -1,0 +1,373 @@
+//! Aggregation framework (paper §4.1) and two-level pattern aggregation
+//! (paper §5.4).
+//!
+//! Applications `map(key, value)` during `process`; values are merged by
+//! key with an application-defined reduction (here: the closed set of
+//! reductions the paper's applications need — integer sum and FSM domain
+//! union). Aggregated values become readable in the *next* exploration
+//! step via `read_aggregate` (BSP semantics).
+//!
+//! Pattern-keyed aggregation is the expensive case: the reducer key must
+//! be the *canonical* pattern, and canonization is graph isomorphism.
+//! Two-level aggregation first reduces locally by **quick pattern**
+//! (linear-time key), then canonizes once per distinct quick pattern —
+//! paper Table 4 shows this cuts isomorphism computations by up to
+//! 10 orders of magnitude.
+
+pub mod domain;
+
+use std::collections::HashMap;
+
+use crate::pattern::{canon, Pattern};
+
+pub use domain::DomainSupport;
+
+/// An aggregation value. The paper exposes arbitrary `<K,V>` reducers;
+/// the applications use integer counts (Motifs) and minimum-image
+/// domains (FSM), which we make explicit so values can cross worker
+/// boundaries without runtime reflection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AggVal {
+    Long(i64),
+    Domain(DomainSupport),
+}
+
+impl AggVal {
+    /// The reduction: sum for `Long`, per-position union for `Domain`.
+    pub fn merge(&mut self, other: AggVal) {
+        match (self, other) {
+            (AggVal::Long(a), AggVal::Long(b)) => *a += b,
+            (AggVal::Domain(a), AggVal::Domain(b)) => a.merge(b),
+            _ => panic!("mismatched aggregation value kinds"),
+        }
+    }
+
+    /// Reorder positional data under a pattern permutation
+    /// (`perm[old] = new`); no-op for scalars.
+    pub fn permuted(&self, perm: &[u8]) -> AggVal {
+        match self {
+            AggVal::Long(v) => AggVal::Long(*v),
+            AggVal::Domain(d) => AggVal::Domain(d.permuted(perm)),
+        }
+    }
+
+    pub fn as_long(&self) -> i64 {
+        match self {
+            AggVal::Long(v) => *v,
+            _ => panic!("not a Long aggregation value"),
+        }
+    }
+
+    pub fn as_domain(&self) -> &DomainSupport {
+        match self {
+            AggVal::Domain(d) => d,
+            _ => panic!("not a Domain aggregation value"),
+        }
+    }
+
+    /// Serialized size, for message/byte accounting.
+    pub fn byte_size(&self) -> usize {
+        match self {
+            AggVal::Long(_) => 8,
+            AggVal::Domain(d) => d.byte_size(),
+        }
+    }
+}
+
+/// Counters reported by the engine (Table 4 / Fig 11 inputs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AggStats {
+    /// Embeddings mapped into pattern aggregation.
+    pub mapped: u64,
+    /// Graph-isomorphism (canonization) invocations.
+    pub canonize_calls: u64,
+    /// Distinct quick patterns seen this step.
+    pub quick_patterns: u64,
+}
+
+/// Per-worker pattern-keyed aggregator with optional two-level mode.
+#[derive(Debug, Default)]
+pub struct PatternAggregator {
+    /// Level 1: reduce by quick pattern (cheap key). Only in two-level mode.
+    quick: HashMap<Pattern, AggVal>,
+    /// Canonical-keyed results (level 2, or direct in one-level mode).
+    canonical: HashMap<Pattern, AggVal>,
+    /// quick pattern -> (canonical pattern, perm). Persisted across
+    /// supersteps; a cache hit still cost one canonization when first
+    /// inserted, which is what `canonize_calls` counts.
+    canon_cache: HashMap<Pattern, (Pattern, Vec<u8>)>,
+    pub two_level: bool,
+    pub stats: AggStats,
+}
+
+impl PatternAggregator {
+    pub fn new(two_level: bool) -> Self {
+        PatternAggregator { two_level, ..Default::default() }
+    }
+
+    /// Map a value keyed by the embedding's *quick* pattern. The value's
+    /// positional data (FSM domains) must be in quick-pattern positions;
+    /// the aggregator applies the canonical permutation itself.
+    pub fn map(&mut self, quick: Pattern, val: AggVal) {
+        self.map_ref(&quick, val);
+    }
+
+    /// Like [`Self::map`], but clones the key only when it is first seen
+    /// — the hot-path form (one `map` per processed embedding, but only
+    /// a handful of distinct quick patterns).
+    pub fn map_ref(&mut self, quick: &Pattern, val: AggVal) {
+        self.stats.mapped += 1;
+        if self.two_level {
+            match self.quick.get_mut(quick) {
+                Some(v) => v.merge(val),
+                None => {
+                    self.quick.insert(quick.clone(), val);
+                }
+            }
+        } else {
+            // One-level: canonize per *embedding* (what the paper's
+            // ablation in Fig 11 measures).
+            let (canon_p, perm) = self.canonize_now(quick);
+            let val = val.permuted(&perm);
+            match self.canonical.get_mut(&canon_p) {
+                Some(v) => v.merge(val),
+                None => {
+                    self.canonical.insert(canon_p, val);
+                }
+            }
+        }
+    }
+
+    /// FSM fast path: add one embedding's vertices to the per-position
+    /// domains of its quick pattern without materializing a
+    /// per-embedding [`DomainSupport`] (saves one allocation of k hash
+    /// sets per processed embedding).
+    pub fn map_domain(&mut self, quick: &Pattern, vertices: &[crate::graph::VertexId]) {
+        self.stats.mapped += 1;
+        if self.two_level {
+            let entry = match self.quick.get_mut(quick) {
+                Some(v) => v,
+                None => self
+                    .quick
+                    .entry(quick.clone())
+                    .or_insert_with(|| AggVal::Domain(DomainSupport::new(vertices.len()))),
+            };
+            match entry {
+                AggVal::Domain(d) => {
+                    for (i, &v) in vertices.iter().enumerate() {
+                        d.add(i, v);
+                    }
+                }
+                _ => panic!("mismatched aggregation value kinds"),
+            }
+        } else {
+            let (canon_p, perm) = self.canonize_now(quick);
+            let entry = self
+                .canonical
+                .entry(canon_p)
+                .or_insert_with(|| AggVal::Domain(DomainSupport::new(vertices.len())));
+            match entry {
+                AggVal::Domain(d) => {
+                    for (i, &v) in vertices.iter().enumerate() {
+                        d.add(perm[i] as usize, v);
+                    }
+                }
+                _ => panic!("mismatched aggregation value kinds"),
+            }
+        }
+    }
+
+    fn canonize_now(&mut self, quick: &Pattern) -> (Pattern, Vec<u8>) {
+        self.stats.canonize_calls += 1;
+        canon::canonicalize(quick)
+    }
+
+    /// End-of-step flush: drain local state into a canonical-keyed map
+    /// ready for the global merge. Two-level mode canonizes once per
+    /// distinct quick pattern here (cache lookups are free).
+    pub fn flush(&mut self) -> HashMap<Pattern, AggVal> {
+        self.stats.quick_patterns += self.quick.len() as u64;
+        let quick = std::mem::take(&mut self.quick);
+        for (qp, val) in quick {
+            let (canon_p, perm) = match self.canon_cache.get(&qp) {
+                Some(hit) => hit.clone(),
+                None => {
+                    let computed = self.canonize_now(&qp);
+                    self.canon_cache.insert(qp.clone(), computed.clone());
+                    computed
+                }
+            };
+            let val = val.permuted(&perm);
+            match self.canonical.get_mut(&canon_p) {
+                Some(v) => v.merge(val),
+                None => {
+                    self.canonical.insert(canon_p, val);
+                }
+            }
+        }
+        std::mem::take(&mut self.canonical)
+    }
+}
+
+/// Merge per-worker canonical maps into the global aggregate (the
+/// reducer side; key ownership and message counting live in the engine).
+pub fn merge_global(
+    parts: Vec<HashMap<Pattern, AggVal>>,
+) -> HashMap<Pattern, AggVal> {
+    let mut out: HashMap<Pattern, AggVal> = HashMap::new();
+    for part in parts {
+        for (k, v) in part {
+            match out.get_mut(&k) {
+                Some(cur) => cur.merge(v),
+                None => {
+                    out.insert(k, v);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Integer-keyed aggregator (paper: "aggregation can group embeddings by
+/// an arbitrary integer value or by pattern").
+#[derive(Debug, Default)]
+pub struct IntAggregator {
+    pub map: HashMap<i64, AggVal>,
+}
+
+impl IntAggregator {
+    pub fn map_value(&mut self, key: i64, val: AggVal) {
+        match self.map.get_mut(&key) {
+            Some(v) => v.merge(val),
+            None => {
+                self.map.insert(key, val);
+            }
+        }
+    }
+
+    pub fn flush(&mut self) -> HashMap<i64, AggVal> {
+        std::mem::take(&mut self.map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edge_pattern(l0: u32, l1: u32) -> Pattern {
+        Pattern::new(vec![l0, l1], vec![(0, 1, 0)])
+    }
+
+    #[test]
+    fn two_level_merges_isomorphic_quick_patterns() {
+        let mut agg = PatternAggregator::new(true);
+        // (blue,yellow) x2 and (yellow,blue) x1 — paper §5.4 example.
+        agg.map(edge_pattern(0, 1), AggVal::Long(1));
+        agg.map(edge_pattern(0, 1), AggVal::Long(1));
+        agg.map(edge_pattern(1, 0), AggVal::Long(1));
+        let out = agg.flush();
+        assert_eq!(out.len(), 1, "one canonical pattern");
+        assert_eq!(out.values().next().unwrap().as_long(), 3);
+        // Only 2 canonizations (one per distinct quick pattern)...
+        assert_eq!(agg.stats.canonize_calls, 2);
+        // ...for 3 mapped embeddings.
+        assert_eq!(agg.stats.mapped, 3);
+    }
+
+    #[test]
+    fn one_level_canonizes_per_embedding() {
+        let mut agg = PatternAggregator::new(false);
+        for _ in 0..5 {
+            agg.map(edge_pattern(0, 1), AggVal::Long(1));
+        }
+        let out = agg.flush();
+        assert_eq!(out.values().next().unwrap().as_long(), 5);
+        assert_eq!(agg.stats.canonize_calls, 5);
+    }
+
+    #[test]
+    fn both_modes_agree() {
+        let inputs = [
+            edge_pattern(0, 1),
+            edge_pattern(1, 0),
+            edge_pattern(2, 2),
+            edge_pattern(0, 1),
+        ];
+        let mut two = PatternAggregator::new(true);
+        let mut one = PatternAggregator::new(false);
+        for p in &inputs {
+            two.map(p.clone(), AggVal::Long(1));
+            one.map(p.clone(), AggVal::Long(1));
+        }
+        let a = two.flush();
+        let b = one.flush();
+        assert_eq!(a, b);
+        assert!(two.stats.canonize_calls < one.stats.canonize_calls);
+    }
+
+    #[test]
+    fn cache_persists_across_steps() {
+        let mut agg = PatternAggregator::new(true);
+        agg.map(edge_pattern(0, 1), AggVal::Long(1));
+        agg.flush();
+        agg.map(edge_pattern(0, 1), AggVal::Long(1));
+        agg.flush();
+        assert_eq!(agg.stats.canonize_calls, 1, "second step hits the cache");
+    }
+
+    #[test]
+    fn domain_values_permuted_to_canonical_positions() {
+        // Quick patterns (5,3) and (3,5): same canonical pattern; the
+        // domain positions must land consistently.
+        let mut agg = PatternAggregator::new(true);
+        let mut d1 = DomainSupport::new(2);
+        d1.add(0, 10); // vertex 10 at quick position 0 (label 5)
+        d1.add(1, 20); // vertex 20 at quick position 1 (label 3)
+        agg.map(edge_pattern(5, 3), AggVal::Domain(d1));
+        let mut d2 = DomainSupport::new(2);
+        d2.add(0, 30); // label 3 side
+        d2.add(1, 40); // label 5 side
+        agg.map(edge_pattern(3, 5), AggVal::Domain(d2));
+        let out = agg.flush();
+        assert_eq!(out.len(), 1);
+        let (canon_p, val) = out.into_iter().next().unwrap();
+        // Canonical pattern sorts label 3 first.
+        assert_eq!(canon_p.vlabels, vec![3, 5]);
+        let dom = val.as_domain();
+        // Position 0 (label 3) collects {20, 30}; position 1 {10, 40}.
+        assert_eq!(dom.size(0), 2);
+        assert_eq!(dom.size(1), 2);
+        assert!(dom.contains(0, 20) && dom.contains(0, 30));
+        assert!(dom.contains(1, 10) && dom.contains(1, 40));
+    }
+
+    #[test]
+    fn merge_global_sums() {
+        let p = edge_pattern(0, 0);
+        let mut a = HashMap::new();
+        a.insert(p.clone(), AggVal::Long(2));
+        let mut b = HashMap::new();
+        b.insert(p.clone(), AggVal::Long(3));
+        let out = merge_global(vec![a, b]);
+        assert_eq!(out[&p].as_long(), 5);
+    }
+
+    #[test]
+    fn int_aggregator() {
+        let mut agg = IntAggregator::default();
+        agg.map_value(7, AggVal::Long(1));
+        agg.map_value(7, AggVal::Long(2));
+        agg.map_value(8, AggVal::Long(5));
+        let out = agg.flush();
+        assert_eq!(out[&7].as_long(), 3);
+        assert_eq!(out[&8].as_long(), 5);
+        assert!(agg.map.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched")]
+    fn mixed_kinds_panic() {
+        let mut v = AggVal::Long(1);
+        v.merge(AggVal::Domain(DomainSupport::new(1)));
+    }
+}

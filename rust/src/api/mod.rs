@@ -1,0 +1,271 @@
+//! The filter-process programming model (paper §3, §4.1).
+//!
+//! An application implements [`GraphMiningApp`]: mandatory `filter` (φ)
+//! and `process` (π), optional `aggregation_filter` (α),
+//! `aggregation_process` (β) and `should_expand` (the inverse of the
+//! paper's `terminationFilter`). The engine guarantees *completeness*
+//! (every embedding with φ = α = true is processed exactly once up to
+//! automorphism) provided the application functions are
+//! **automorphism-invariant** and **anti-monotonic** (paper §3.1).
+//!
+//! Framework services (`output`, `map`, `readAggregate`, `mapOutput`)
+//! are provided through [`Ctx`], handed to every application callback.
+
+use std::collections::HashMap;
+
+use crate::agg::{AggVal, IntAggregator, PatternAggregator};
+use crate::embedding::{Embedding, Mode};
+use crate::graph::LabeledGraph;
+use crate::output::OutputSink;
+use crate::pattern::{self, Pattern};
+
+/// Exploration mode, re-exported at the API level (paper §3.1: the
+/// application chooses edge-based or vertex-based exploration at
+/// initialization).
+pub type ExplorationMode = Mode;
+
+/// Read/write context passed to every user function (paper Fig 3's
+/// "Arabesque functions invoked by applications").
+pub struct Ctx<'a> {
+    /// Current exploration step (1 = single-word embeddings).
+    pub step: usize,
+    /// Pattern-keyed aggregates from the *previous* step (`readAggregate`).
+    pub prev_pattern_aggs: &'a HashMap<Pattern, AggVal>,
+    /// Integer-keyed aggregates from the previous step.
+    pub prev_int_aggs: &'a HashMap<i64, AggVal>,
+    /// Current-step pattern aggregation (`map` with a pattern key).
+    pub pattern_agg: &'a mut PatternAggregator,
+    /// Output aggregation (`mapOutput`): reduced once, when the whole
+    /// computation ends.
+    pub output_agg: &'a mut PatternAggregator,
+    /// Current-step integer aggregation.
+    pub int_agg: &'a mut IntAggregator,
+    /// Direct output (`output`): written to the sink immediately.
+    pub sink: &'a dyn OutputSink,
+    /// quick -> canonical cache for read-side lookups, persisted per
+    /// worker across steps.
+    pub canon_cache: &'a mut HashMap<Pattern, (Pattern, Vec<u8>)>,
+    /// Quick pattern of the embedding currently being processed,
+    /// precomputed by the engine so applications don't re-derive it.
+    pub current_quick: Option<Pattern>,
+    /// Per-worker automorphism-group cache keyed by canonical pattern
+    /// (FSM's support computation), persisted across steps.
+    pub autos_cache: &'a mut HashMap<Pattern, Vec<Vec<u8>>>,
+    /// Per-step application scratch memo, cleared by the engine at every
+    /// superstep. FSM caches each pattern's support here so the α filter
+    /// computes it once per (pattern, step) instead of per embedding.
+    pub step_memo: &'a mut HashMap<Pattern, i64>,
+}
+
+impl Ctx<'_> {
+    /// `output(value)` — write one result value.
+    pub fn output(&self, value: &str) {
+        self.sink.write(value);
+    }
+
+    /// Quick pattern of the embedding currently being processed
+    /// (engine-provided during `process`/`aggregation_*` calls).
+    pub fn quick(&self) -> &Pattern {
+        self.current_quick.as_ref().expect("no current embedding")
+    }
+
+    /// `map(pattern-of-e, value)` — aggregate `val` under the embedding's
+    /// pattern. Two-level aggregation makes this cheap: the key is the
+    /// quick pattern; canonization happens once per distinct quick
+    /// pattern at the end of the step.
+    pub fn map_pattern(&mut self, quick: Pattern, val: AggVal) {
+        self.pattern_agg.map(quick, val);
+    }
+
+    /// `mapOutput(pattern-of-e, value)` — like `map_pattern` but reduced
+    /// only when the whole computation ends.
+    pub fn map_output_pattern(&mut self, quick: Pattern, val: AggVal) {
+        self.output_agg.map(quick, val);
+    }
+
+    /// `map(pattern(e), value)` for the embedding currently being
+    /// processed — avoids cloning the quick pattern per embedding.
+    pub fn map_current(&mut self, val: AggVal) {
+        let q = self.current_quick.as_ref().expect("no current embedding");
+        self.pattern_agg.map_ref(q, val);
+    }
+
+    /// `mapOutput(pattern(e), value)` for the current embedding.
+    pub fn map_output_current(&mut self, val: AggVal) {
+        let q = self.current_quick.as_ref().expect("no current embedding");
+        self.output_agg.map_ref(q, val);
+    }
+
+    /// FSM fast path: feed the current embedding's vertex domains into
+    /// pattern aggregation without per-embedding allocation.
+    pub fn map_domain_current(&mut self, vertices: &[crate::graph::VertexId]) {
+        let q = self.current_quick.as_ref().expect("no current embedding");
+        self.pattern_agg.map_domain(q, vertices);
+    }
+
+    /// `map(int key, value)`.
+    pub fn map_int(&mut self, key: i64, val: AggVal) {
+        self.int_agg.map_value(key, val);
+    }
+
+    /// `readAggregate` keyed by the pattern of embedding `e`: canonizes
+    /// the quick pattern (cached) and looks up the previous step's
+    /// aggregate.
+    pub fn read_pattern_aggregate(
+        &mut self,
+        g: &LabeledGraph,
+        e: &Embedding,
+        mode: Mode,
+    ) -> Option<&AggVal> {
+        let quick = pattern::quick_pattern(g, e, mode);
+        let (canon_p, _) = self
+            .canon_cache
+            .entry(quick.clone())
+            .or_insert_with(|| pattern::canon::canonicalize(&quick))
+            .clone();
+        self.prev_pattern_aggs.get(&canon_p)
+    }
+
+    /// `readAggregate` with an integer key.
+    pub fn read_int_aggregate(&self, key: i64) -> Option<&AggVal> {
+        self.prev_int_aggs.get(&key)
+    }
+
+    /// Canonical pattern of a quick pattern, through the worker cache.
+    pub fn canonical_of(&mut self, quick: &Pattern) -> (Pattern, Vec<u8>) {
+        self.canon_cache
+            .entry(quick.clone())
+            .or_insert_with(|| pattern::canon::canonicalize(quick))
+            .clone()
+    }
+
+    /// Automorphism group of a (canonical) pattern, cached per worker.
+    pub fn automorphisms_of(&mut self, canonical: &Pattern) -> &Vec<Vec<u8>> {
+        self.autos_cache
+            .entry(canonical.clone())
+            .or_insert_with(|| pattern::canon::automorphisms(canonical))
+    }
+}
+
+/// End-of-run data handed to [`GraphMiningApp::report`].
+pub struct RunAggregates {
+    /// Union of every step's pattern aggregates (patterns of different
+    /// sizes never collide, so the union is well defined).
+    pub pattern_history: HashMap<Pattern, AggVal>,
+    /// Final reduced output aggregation (`mapOutput`/`reduceOutput`).
+    pub pattern_output: HashMap<Pattern, AggVal>,
+    /// Union of every step's integer aggregates.
+    pub int_history: HashMap<i64, AggVal>,
+}
+
+/// A graph mining application under the filter-process model.
+///
+/// Requirements (paper §3.1, enforced by tests, not the compiler):
+/// * **automorphism invariance** — all functions return the same result
+///   for automorphic embeddings;
+/// * **anti-monotonicity** — if `filter` (or `aggregation_filter`)
+///   rejects `e`, it rejects every extension of `e`.
+pub trait GraphMiningApp: Send + Sync {
+    /// Vertex-based or edge-based exploration.
+    fn mode(&self) -> ExplorationMode;
+
+    /// φ — should this candidate embedding be processed (and explored)?
+    fn filter(&self, g: &LabeledGraph, e: &Embedding, ctx: &mut Ctx) -> bool;
+
+    /// π — process an embedding (produce outputs, feed aggregations).
+    fn process(&self, g: &LabeledGraph, e: &Embedding, ctx: &mut Ctx);
+
+    /// α — re-examined at the start of the *following* step, when the
+    /// aggregates collected in the embedding's generation step are
+    /// available. Returning false prunes the embedding before expansion.
+    fn aggregation_filter(&self, _g: &LabeledGraph, _e: &Embedding, _ctx: &mut Ctx) -> bool {
+        true
+    }
+
+    /// β — runs right after a successful `aggregation_filter`.
+    fn aggregation_process(&self, _g: &LabeledGraph, _e: &Embedding, _ctx: &mut Ctx) {}
+
+    /// Inverse of the paper's `terminationFilter`: return false to stop
+    /// extending `e` (it is still processed). Purely an optimization to
+    /// skip a final all-filtered exploration step.
+    fn should_expand(&self, _g: &LabeledGraph, _e: &Embedding) -> bool {
+        true
+    }
+
+    /// End-of-run reporting: write summary values (frequent patterns,
+    /// motif counts, ...) to the sink.
+    fn report(&self, _g: &LabeledGraph, _aggs: &RunAggregates, _sink: &dyn OutputSink) {}
+
+    /// Application name for logs/benches.
+    fn name(&self) -> &'static str {
+        "app"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::output::MemorySink;
+
+    /// Minimal context wiring check: map + flush + read.
+    #[test]
+    fn ctx_roundtrip() {
+        let g = LabeledGraph::from_edges(vec![0, 1], &[(0, 1, 0)]);
+        let mut pattern_agg = PatternAggregator::new(true);
+        let mut output_agg = PatternAggregator::new(true);
+        let mut int_agg = IntAggregator::default();
+        let sink = MemorySink::new();
+        let mut cache = HashMap::new();
+        let mut autos = HashMap::new();
+        let mut memo = HashMap::new();
+
+        // Step s: map under the single-edge quick pattern.
+        let prev_p = HashMap::new();
+        let prev_i = HashMap::new();
+        {
+            let mut ctx = Ctx {
+                step: 1,
+                prev_pattern_aggs: &prev_p,
+                prev_int_aggs: &prev_i,
+                pattern_agg: &mut pattern_agg,
+                output_agg: &mut output_agg,
+                int_agg: &mut int_agg,
+                sink: &sink,
+                canon_cache: &mut cache,
+                current_quick: None,
+                autos_cache: &mut autos,
+                step_memo: &mut memo,
+            };
+            let e = Embedding::new(vec![0]); // edge 0
+            let q = pattern::quick_pattern(&g, &e, Mode::EdgeInduced);
+            ctx.map_pattern(q, AggVal::Long(1));
+            ctx.map_int(3, AggVal::Long(10));
+            ctx.output("hello");
+        }
+        let flushed = pattern_agg.flush();
+        let ints = int_agg.flush();
+
+        // Step s+1: read them back.
+        {
+            let mut ctx = Ctx {
+                step: 2,
+                prev_pattern_aggs: &flushed,
+                prev_int_aggs: &ints,
+                pattern_agg: &mut pattern_agg,
+                output_agg: &mut output_agg,
+                int_agg: &mut int_agg,
+                sink: &sink,
+                canon_cache: &mut cache,
+                current_quick: None,
+                autos_cache: &mut autos,
+                step_memo: &mut memo,
+            };
+            let e = Embedding::new(vec![0]);
+            let v = ctx.read_pattern_aggregate(&g, &e, Mode::EdgeInduced);
+            assert_eq!(v.unwrap().as_long(), 1);
+            assert_eq!(ctx.read_int_aggregate(3).unwrap().as_long(), 10);
+            assert!(ctx.read_int_aggregate(99).is_none());
+        }
+        assert_eq!(sink.sorted(), vec!["hello"]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Clique finding (paper §2, §4.2 Fig 4c): enumerate all complete
+//! subgraphs up to `max_size` vertices. Local pruning: if an embedding
+//! is not a clique, no extension can be one (anti-monotone), so the
+//! filter cuts the subtree immediately.
+//!
+//! Paper pseudocode:
+//! ```text
+//! boolean filter(e) { return isClique(e); }
+//! void process(e)   { output(e); }
+//! ```
+
+use crate::api::{Ctx, ExplorationMode, GraphMiningApp};
+use crate::embedding::{Embedding, Mode};
+use crate::graph::LabeledGraph;
+
+pub struct Cliques {
+    pub max_size: usize,
+}
+
+impl Cliques {
+    pub fn new(max_size: usize) -> Self {
+        assert!(max_size >= 1);
+        Cliques { max_size }
+    }
+
+    /// Full pairwise clique test. The paper describes the incremental
+    /// variant ("the newly added vertex is connected with all previous
+    /// vertices"), which is equivalent on the normal exploration path
+    /// because parents already passed the filter — but ODAG extraction
+    /// re-applies φ to *spurious* sequences whose prefixes were never
+    /// checked, so φ must decide the full property to stay sound
+    /// (embeddings are ≤ max_size vertices; the extra tests are a
+    /// handful of binary searches).
+    fn is_clique(g: &LabeledGraph, e: &Embedding) -> bool {
+        let w = &e.words;
+        w.iter()
+            .enumerate()
+            .all(|(i, &u)| w[i + 1..].iter().all(|&v| g.is_neighbor(u, v)))
+    }
+}
+
+impl GraphMiningApp for Cliques {
+    fn mode(&self) -> ExplorationMode {
+        Mode::VertexInduced
+    }
+
+    fn filter(&self, g: &LabeledGraph, e: &Embedding, _ctx: &mut Ctx) -> bool {
+        e.len() <= self.max_size && Self::is_clique(g, e)
+    }
+
+    fn process(&self, _g: &LabeledGraph, e: &Embedding, ctx: &mut Ctx) {
+        // Only cliques of >= 2 vertices are interesting output; single
+        // vertices are trivially cliques and are kept solely to seed
+        // exploration.
+        if e.len() >= 2 {
+            ctx.output(&format!("clique {:?}", e.words));
+        }
+    }
+
+    fn should_expand(&self, _g: &LabeledGraph, e: &Embedding) -> bool {
+        e.len() < self.max_size
+    }
+
+    fn name(&self) -> &'static str {
+        "cliques"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Cluster, Config};
+    use crate::graph::gen;
+    use crate::output::MemorySink;
+    use std::sync::Arc;
+
+    #[test]
+    fn k5_clique_counts_by_size() {
+        let g = gen::small("k5").unwrap();
+        // Sizes 2..5: C(5,2)+C(5,3)+C(5,4)+C(5,5) = 10+10+5+1 = 26.
+        let r = Cluster::new(Config::new(1, 2)).run(&g, &Cliques::new(5));
+        assert_eq!(r.num_outputs, 26);
+        // Per-size processed counts (single vertices = step 1).
+        let by_step: Vec<u64> = r.steps.iter().map(|s| s.processed).collect();
+        assert_eq!(by_step, vec![5, 10, 10, 5, 1]);
+    }
+
+    #[test]
+    fn c6_has_no_triangles() {
+        let g = gen::small("c6").unwrap();
+        let r = Cluster::new(Config::new(1, 1)).run(&g, &Cliques::new(4));
+        // Only the 6 edges qualify.
+        assert_eq!(r.num_outputs, 6);
+        // Exploration dies after step 2 (no clique of size 3 to extend...
+        // actually step 3 generates candidates, all filtered).
+        assert!(r.steps.len() <= 3);
+    }
+
+    #[test]
+    fn each_clique_reported_once() {
+        let g = gen::small("diamond").unwrap();
+        let sink = Arc::new(MemorySink::new());
+        let r = Cluster::new(Config::new(2, 2))
+            .run_with_sink(&g, &Cliques::new(3), sink.clone());
+        let rows = sink.sorted();
+        // diamond: 5 edges + 2 triangles = 7 cliques.
+        assert_eq!(rows.len(), 7);
+        let mut dedup = rows.clone();
+        dedup.dedup();
+        assert_eq!(dedup.len(), rows.len(), "automorphic duplicates leaked");
+        let _ = r;
+    }
+
+    #[test]
+    fn filter_is_anti_monotone() {
+        // Direct check of the documented requirement on a random graph:
+        // if a size-3 embedding fails the filter, every extension fails.
+        let g = gen::erdos_renyi(20, 60, 1, 1, 9);
+        for a in 0..20u32 {
+            for b in 0..20u32 {
+                for c in 0..20u32 {
+                    if a == b || b == c || a == c {
+                        continue;
+                    }
+                    let e = Embedding::new(vec![a, b, c]);
+                    if !Cliques::is_clique(&g, &e) {
+                        for d in 0..20u32 {
+                            if ![a, b, c].contains(&d) {
+                                assert!(!Cliques::is_clique(&g, &e.child(d)));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

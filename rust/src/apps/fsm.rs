@@ -1,0 +1,220 @@
+//! Frequent subgraph mining on a single large graph (paper §2, §4.2
+//! Fig 4a): find every pattern whose minimum image-based support [7]
+//! reaches the threshold θ, and output all of their embeddings.
+//!
+//! Edge-based exploration. `process` maps each embedding's per-position
+//! vertex domains under its quick pattern; the reducer unions domains
+//! per canonical pattern; `aggregation_filter` — running one step later,
+//! when the aggregate is complete — prunes embeddings of infrequent
+//! patterns, and `aggregation_process` outputs the surviving (frequent)
+//! embeddings. Support is anti-monotonic, so the pruning is sound.
+
+
+use crate::api::{Ctx, ExplorationMode, GraphMiningApp, RunAggregates};
+use crate::embedding::{Embedding, Mode};
+use crate::graph::LabeledGraph;
+use crate::output::OutputSink;
+use crate::pattern::canon;
+
+pub struct Fsm {
+    /// Minimum image-based support threshold θ.
+    pub support: usize,
+    /// Optional cap on embedding size in *edges* (the paper's "MS=7"
+    /// run caps the exploration depth).
+    pub max_edges: Option<usize>,
+}
+
+impl Fsm {
+    pub fn new(support: usize) -> Self {
+        Fsm { support, max_edges: None }
+    }
+
+    pub fn with_max_edges(mut self, n: usize) -> Self {
+        self.max_edges = Some(n);
+        self
+    }
+
+    /// Support of the embedding's pattern from the previous step's
+    /// aggregate (None if the pattern was never aggregated). Memoized
+    /// per (pattern, step): support is a pure function of the aggregate,
+    /// and α runs once per embedding — without the memo this dominates
+    /// the whole run (it clones domain sets and expands automorphism
+    /// orbits; see EXPERIMENTS.md §Perf).
+    fn pattern_support(&self, _e: &Embedding, ctx: &mut Ctx) -> Option<usize> {
+        let quick = ctx.quick().clone();
+        if let Some(&memo) = ctx.step_memo.get(&quick) {
+            return (memo >= 0).then_some(memo as usize);
+        }
+        let (canon_p, _) = ctx.canonical_of(&quick);
+        let support = match ctx.prev_pattern_aggs.get(&canon_p) {
+            None => None,
+            Some(val) => {
+                let val = val.clone();
+                let autos = ctx.automorphisms_of(&canon_p);
+                Some(val.as_domain().expanded_support(autos))
+            }
+        };
+        ctx.step_memo
+            .insert(quick, support.map_or(-1, |s| s as i64));
+        support
+    }
+}
+
+impl GraphMiningApp for Fsm {
+    fn mode(&self) -> ExplorationMode {
+        Mode::EdgeInduced
+    }
+
+    /// φ: only the size cap (support pruning happens in α once the
+    /// aggregate exists).
+    fn filter(&self, _g: &LabeledGraph, e: &Embedding, _ctx: &mut Ctx) -> bool {
+        self.max_edges.is_none_or(|m| e.len() <= m)
+    }
+
+    /// π: send this embedding's domains to the reducer of its pattern.
+    fn process(&self, g: &LabeledGraph, e: &Embedding, ctx: &mut Ctx) {
+        let vs = e.vertices(g, Mode::EdgeInduced);
+        ctx.map_domain_current(&vs);
+    }
+
+    /// α: embeddings whose pattern fell below θ are pruned before
+    /// expansion (anti-monotonicity of minimum-image support).
+    fn aggregation_filter(&self, _g: &LabeledGraph, e: &Embedding, ctx: &mut Ctx) -> bool {
+        match self.pattern_support(e, ctx) {
+            Some(s) => s >= self.support,
+            None => false,
+        }
+    }
+
+    /// β: output every embedding that survived the frequency filter.
+    fn aggregation_process(&self, g: &LabeledGraph, e: &Embedding, ctx: &mut Ctx) {
+        let vs = e.vertices(g, Mode::EdgeInduced);
+        ctx.output(&format!("frequent embedding v={vs:?} edges={:?}", e.words));
+    }
+
+    fn should_expand(&self, _g: &LabeledGraph, e: &Embedding) -> bool {
+        self.max_edges.is_none_or(|m| e.len() < m)
+    }
+
+    /// Final report: the frequent patterns with their supports.
+    fn report(&self, _g: &LabeledGraph, aggs: &RunAggregates, sink: &dyn OutputSink) {
+        let mut rows: Vec<(crate::pattern::Pattern, usize)> = aggs
+            .pattern_history
+            .iter()
+            .filter_map(|(p, v)| {
+                let autos = canon::automorphisms(p);
+                let s = v.as_domain().expanded_support(&autos);
+                (s >= self.support).then(|| (p.clone(), s))
+            })
+            .collect();
+        rows.sort();
+        for (p, s) in rows {
+            sink.write(&format!("frequent pattern {p} support={s}"));
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fsm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Cluster, Config};
+    use crate::graph::{gen, LabeledGraph};
+    use crate::output::MemorySink;
+    use std::sync::Arc;
+
+    /// A graph where label-0/label-0 edges appear 4 times and a 0-1 edge
+    /// once: supports differ by construction.
+    fn labeled_chain() -> LabeledGraph {
+        // 0(l0)-1(l0)-2(l0)-3(l0)-4(l0)-5(l1): four 0-0 edges, one 0-1.
+        LabeledGraph::from_edges(
+            vec![0, 0, 0, 0, 0, 1],
+            &[(0, 1, 0), (1, 2, 0), (2, 3, 0), (3, 4, 0), (4, 5, 0)],
+        )
+    }
+
+    fn frequent_patterns(g: &LabeledGraph, support: usize, max_edges: usize) -> Vec<String> {
+        let sink = Arc::new(MemorySink::new());
+        let app = Fsm::new(support).with_max_edges(max_edges);
+        Cluster::new(Config::new(1, 2)).run_with_sink(g, &app, sink.clone());
+        sink.sorted()
+            .into_iter()
+            .filter(|l| l.starts_with("frequent pattern"))
+            .collect()
+    }
+
+    #[test]
+    fn single_edge_supports() {
+        let g = labeled_chain();
+        // 0-0 edge: embeddings (0,1),(1,2),(2,3),(3,4); domains (orbit-
+        // expanded, symmetric edge) both = {0,1,2,3,4} -> support 5.
+        // Wait: minimum image = min(|{0..4}|, |{0..4}|) = 5.
+        let rows = frequent_patterns(&g, 5, 1);
+        assert_eq!(rows.len(), 1, "{rows:?}");
+        assert!(rows[0].contains("v=0,0"), "{rows:?}");
+        // 0-1 edge has support 1: visible at θ=1 along with the rest.
+        let rows = frequent_patterns(&g, 1, 1);
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn support_threshold_monotone_in_results() {
+        let g = gen::erdos_renyi(60, 150, 3, 1, 21);
+        let hi = frequent_patterns(&g, 8, 2);
+        let lo = frequent_patterns(&g, 3, 2);
+        // Every pattern frequent at θ=8 is frequent at θ=3.
+        for r in &hi {
+            let pat = r.split(" support=").next().unwrap();
+            assert!(
+                lo.iter().any(|l| l.starts_with(pat)),
+                "{pat} missing at lower threshold"
+            );
+        }
+        assert!(lo.len() >= hi.len());
+    }
+
+    #[test]
+    fn infrequent_patterns_prune_exploration() {
+        let g = labeled_chain();
+        // θ=5: only the 0-0 single edge is frequent; two-edge 0-0-0 paths
+        // have middle-domain {1,2,3} -> support 3 < 5, so exploration
+        // stops. With θ=3 the path is frequent.
+        let rows5 = frequent_patterns(&g, 5, 3);
+        assert_eq!(rows5.len(), 1);
+        let rows3 = frequent_patterns(&g, 3, 3);
+        assert!(rows3.iter().any(|r| r.contains("v=0,0,0")), "{rows3:?}");
+    }
+
+    #[test]
+    fn embeddings_of_frequent_patterns_are_output() {
+        let g = labeled_chain();
+        let sink = Arc::new(MemorySink::new());
+        let app = Fsm::new(5).with_max_edges(2);
+        Cluster::new(Config::new(1, 1)).run_with_sink(&g, &app, sink.clone());
+        let embs: Vec<String> = sink
+            .sorted()
+            .into_iter()
+            .filter(|l| l.starts_with("frequent embedding"))
+            .collect();
+        // The four 0-0 edges are frequent embeddings (output at step 2).
+        assert_eq!(embs.len(), 4, "{embs:?}");
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let g = gen::erdos_renyi(50, 140, 2, 1, 33);
+        let a = frequent_patterns(&g, 4, 2);
+        let sink = Arc::new(MemorySink::new());
+        let app = Fsm::new(4).with_max_edges(2);
+        Cluster::new(Config::new(3, 2)).run_with_sink(&g, &app, sink.clone());
+        let b: Vec<String> = sink
+            .sorted()
+            .into_iter()
+            .filter(|l| l.starts_with("frequent pattern"))
+            .collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's example applications (paper §4.2, Fig 4): frequent
+//! subgraph mining, motif counting, and clique finding — each a handful
+//! of lines over the filter-process API, exactly as the paper argues.
+
+pub mod cliques;
+pub mod fsm;
+pub mod matching;
+pub mod maximal_cliques;
+pub mod motifs;
+
+pub use cliques::Cliques;
+pub use fsm::Fsm;
+pub use matching::Matching;
+pub use maximal_cliques::MaximalCliques;
+pub use motifs::Motifs;

@@ -1,0 +1,339 @@
+//! Centralized (single-threaded) baselines for Table 2.
+//!
+//! Each implements the defining algorithm of the system the paper
+//! compares against (see DESIGN.md "Substitutions"):
+//! * `bron_kerbosch` — maximal cliques with pivoting [8] (Mace [36]);
+//! * `count_cliques` — plain recursive k-clique enumeration;
+//! * `motif_census` — ESU-style exact-size connected induced subgraph
+//!   enumeration with canonical-pattern counting (G-Tries [31]);
+//! * `CentralizedFsm` — level-wise pattern-growth FSM with
+//!   minimum-image support on a single large graph (GRAMI [14] +
+//!   VFLib embedding listing).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::agg::DomainSupport;
+use crate::graph::{LabeledGraph, VertexId};
+use crate::pattern::{canon, quick_pattern, Pattern};
+use crate::embedding::{Embedding, Mode};
+
+/// All maximal cliques (Bron–Kerbosch with greedy pivoting).
+pub fn bron_kerbosch(g: &LabeledGraph) -> Vec<Vec<VertexId>> {
+    fn neighbors_set(g: &LabeledGraph, v: VertexId) -> Vec<VertexId> {
+        g.neighbors(v).iter().map(|&(u, _)| u).collect()
+    }
+    fn bk(
+        g: &LabeledGraph,
+        r: &mut Vec<VertexId>,
+        mut p: Vec<VertexId>,
+        mut x: Vec<VertexId>,
+        out: &mut Vec<Vec<VertexId>>,
+    ) {
+        if p.is_empty() && x.is_empty() {
+            if !r.is_empty() {
+                out.push(r.clone());
+            }
+            return;
+        }
+        // Pivot: vertex of P ∪ X with most neighbors in P.
+        let pivot = p
+            .iter()
+            .chain(x.iter())
+            .copied()
+            .max_by_key(|&u| p.iter().filter(|&&w| g.is_neighbor(u, w)).count())
+            .unwrap();
+        let cands: Vec<VertexId> =
+            p.iter().copied().filter(|&v| !g.is_neighbor(pivot, v)).collect();
+        for v in cands {
+            let nv = neighbors_set(g, v);
+            let p2: Vec<VertexId> = p.iter().copied().filter(|u| nv.contains(u)).collect();
+            let x2: Vec<VertexId> = x.iter().copied().filter(|u| nv.contains(u)).collect();
+            r.push(v);
+            bk(g, r, p2, x2, out);
+            r.pop();
+            p.retain(|&u| u != v);
+            x.push(v);
+        }
+    }
+    let mut out = Vec::new();
+    let p: Vec<VertexId> = (0..g.num_vertices() as VertexId).collect();
+    bk(g, &mut Vec::new(), p, Vec::new(), &mut out);
+    out
+}
+
+/// Count all cliques with 2..=max_size vertices (recursive extension by
+/// larger-id common neighbors — each clique counted once).
+pub fn count_cliques(g: &LabeledGraph, max_size: usize) -> u64 {
+    fn rec(g: &LabeledGraph, clique: &mut Vec<VertexId>, max: usize, count: &mut u64) {
+        if clique.len() >= 2 {
+            *count += 1;
+        }
+        if clique.len() == max {
+            return;
+        }
+        let last = *clique.last().unwrap();
+        // Extend with v > last adjacent to the whole clique.
+        let candidates: Vec<VertexId> = g
+            .neighbors(last)
+            .iter()
+            .map(|&(u, _)| u)
+            .filter(|&u| u > last && clique.iter().all(|&w| g.is_neighbor(u, w)))
+            .collect();
+        for v in candidates {
+            clique.push(v);
+            rec(g, clique, max, count);
+            clique.pop();
+        }
+    }
+    let mut count = 0;
+    for v in 0..g.num_vertices() as VertexId {
+        rec(g, &mut vec![v], max_size, &mut count);
+    }
+    count
+}
+
+/// Exact-size-k census of connected vertex-induced subgraphs, grouped by
+/// canonical pattern (ESU / Wernicke enumeration: each subgraph visited
+/// exactly once).
+pub fn motif_census(g: &LabeledGraph, k: usize) -> HashMap<Pattern, u64> {
+    let mut counts: HashMap<Pattern, u64> = HashMap::new();
+    let mut canon_cache: HashMap<Pattern, Pattern> = HashMap::new();
+    let n = g.num_vertices() as VertexId;
+
+    fn extend(
+        g: &LabeledGraph,
+        root: VertexId,
+        sub: &mut Vec<VertexId>,
+        ext: Vec<VertexId>,
+        k: usize,
+        counts: &mut HashMap<Pattern, u64>,
+        cache: &mut HashMap<Pattern, Pattern>,
+    ) {
+        if sub.len() == k {
+            let e = Embedding::new(sub.clone());
+            let qp = quick_pattern(g, &e, Mode::VertexInduced);
+            let cp = cache
+                .entry(qp.clone())
+                .or_insert_with(|| canon::canonicalize(&qp).0)
+                .clone();
+            *counts.entry(cp).or_insert(0) += 1;
+            return;
+        }
+        let mut ext = ext;
+        while let Some(w) = ext.pop() {
+            // Exclusive neighborhood: neighbors of w, > root, not already
+            // in sub or ext, and not adjacent to sub \ {w}'s members...
+            // (standard ESU: not in N(sub)).
+            let mut ext2 = ext.clone();
+            for &(u, _) in g.neighbors(w) {
+                if u > root
+                    && !sub.contains(&u)
+                    && !ext2.contains(&u)
+                    && u != w
+                    && !sub.iter().any(|&s| g.is_neighbor(s, u))
+                {
+                    ext2.push(u);
+                }
+            }
+            sub.push(w);
+            extend(g, root, sub, ext2, k, counts, cache);
+            sub.pop();
+        }
+    }
+
+    if k == 0 {
+        return counts;
+    }
+    for v in 0..n {
+        if k == 1 {
+            let e = Embedding::new(vec![v]);
+            let qp = quick_pattern(g, &e, Mode::VertexInduced);
+            let cp = canon_cache
+                .entry(qp.clone())
+                .or_insert_with(|| canon::canonicalize(&qp).0)
+                .clone();
+            *counts.entry(cp).or_insert(0) += 1;
+            continue;
+        }
+        let ext: Vec<VertexId> =
+            g.neighbors(v).iter().map(|&(u, _)| u).filter(|&u| u > v).collect();
+        extend(g, v, &mut vec![v], ext, k, &mut counts, &mut canon_cache);
+    }
+    counts
+}
+
+/// Frequent pattern found by [`CentralizedFsm`].
+#[derive(Debug, Clone)]
+pub struct FrequentPattern {
+    pub pattern: Pattern,
+    pub support: usize,
+    pub embeddings: usize,
+}
+
+/// Level-wise pattern-growth FSM with minimum image-based support.
+///
+/// Keeps state *per pattern* (the TLP organization): embeddings of each
+/// frequent pattern are materialized as canonical edge sets, extended by
+/// one edge per level, deduplicated set-wise (a deliberately different
+/// mechanism from the engine's canonicality, so the two implementations
+/// cross-validate).
+pub struct CentralizedFsm {
+    pub support: usize,
+    pub max_edges: usize,
+}
+
+impl CentralizedFsm {
+    pub fn new(support: usize, max_edges: usize) -> Self {
+        CentralizedFsm { support, max_edges }
+    }
+
+    /// Run to completion; returns all frequent patterns of 1..=max_edges
+    /// edges. `per_level` receives (level, live pattern count) for
+    /// instrumentation.
+    pub fn run(&self, g: &LabeledGraph) -> Vec<FrequentPattern> {
+        let mut out = Vec::new();
+        // Level 1: single edges grouped by canonical pattern.
+        let mut groups: HashMap<Pattern, Vec<Vec<u32>>> = HashMap::new();
+        for eid in 0..g.num_edges() as u32 {
+            let e = Embedding::new(vec![eid]);
+            let qp = quick_pattern(g, &e, Mode::EdgeInduced);
+            let cp = canon::canonicalize(&qp).0;
+            groups.entry(cp).or_default().push(vec![eid]);
+        }
+        let mut level = 1usize;
+        while !groups.is_empty() && level <= self.max_edges {
+            let mut next: HashMap<Pattern, Vec<Vec<u32>>> = HashMap::new();
+            let mut frequent: Vec<(Pattern, Vec<Vec<u32>>)> = Vec::new();
+            for (p, embs) in groups {
+                let sup = self.pattern_support(g, &p, &embs);
+                if sup >= self.support {
+                    out.push(FrequentPattern {
+                        pattern: p.clone(),
+                        support: sup,
+                        embeddings: embs.len(),
+                    });
+                    frequent.push((p, embs));
+                }
+            }
+            if level == self.max_edges {
+                break;
+            }
+            // Extend each frequent pattern's embeddings by one edge.
+            let mut seen: HashSet<Vec<u32>> = HashSet::new();
+            for (_, embs) in &frequent {
+                for emb in embs {
+                    let e = Embedding::new(emb.clone());
+                    for x in crate::embedding::extensions(g, &e, Mode::EdgeInduced) {
+                        let mut key = emb.clone();
+                        key.push(x);
+                        key.sort_unstable();
+                        if !seen.insert(key.clone()) {
+                            continue; // set-wise dedup
+                        }
+                        let child = {
+                            let mut w = emb.clone();
+                            w.push(x);
+                            Embedding::new(w)
+                        };
+                        let qp = quick_pattern(g, &child, Mode::EdgeInduced);
+                        let cp = canon::canonicalize(&qp).0;
+                        next.entry(cp).or_default().push(child.words);
+                    }
+                }
+            }
+            groups = next;
+            level += 1;
+        }
+        out.sort_by(|a, b| a.pattern.cmp(&b.pattern));
+        out
+    }
+
+    /// Minimum-image support of `p` over its embedding list.
+    fn pattern_support(&self, g: &LabeledGraph, p: &Pattern, embs: &[Vec<u32>]) -> usize {
+        let autos = canon::automorphisms(p);
+        let mut dom = DomainSupport::new(p.num_vertices());
+        for words in embs {
+            let e = Embedding::new(words.clone());
+            let qp = quick_pattern(g, &e, Mode::EdgeInduced);
+            let (_, perm) = canon::canonicalize(&qp);
+            let vs = e.vertices(g, Mode::EdgeInduced);
+            for (i, &v) in vs.iter().enumerate() {
+                dom.add(perm[i] as usize, v);
+            }
+        }
+        dom.expanded_support(&autos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn bk_on_small_graphs() {
+        let g = gen::small("k5").unwrap();
+        let mc = bron_kerbosch(&g);
+        assert_eq!(mc.len(), 1);
+        assert_eq!(mc[0].len(), 5);
+
+        let g = gen::small("diamond").unwrap();
+        let mut mc = bron_kerbosch(&g);
+        for c in &mut mc {
+            c.sort_unstable();
+        }
+        mc.sort();
+        assert_eq!(mc, vec![vec![0, 1, 2], vec![1, 2, 3]]);
+    }
+
+    #[test]
+    fn clique_counts() {
+        let g = gen::small("k5").unwrap();
+        assert_eq!(count_cliques(&g, 5), 26); // 10+10+5+1
+        assert_eq!(count_cliques(&g, 3), 20); // 10+10
+        let g = gen::small("c6").unwrap();
+        assert_eq!(count_cliques(&g, 4), 6); // edges only
+    }
+
+    #[test]
+    fn motif_census_small() {
+        let g = gen::small("diamond").unwrap();
+        let c3 = motif_census(&g, 3);
+        // 2 triangles + 2 chains.
+        let mut v: Vec<u64> = c3.values().copied().collect();
+        v.sort();
+        assert_eq!(v, vec![2, 2]);
+        let total1: u64 = motif_census(&g, 1).values().sum();
+        assert_eq!(total1, 4);
+        let total2: u64 = motif_census(&g, 2).values().sum();
+        assert_eq!(total2, 5); // edges
+    }
+
+    #[test]
+    fn esu_counts_each_subgraph_once() {
+        let g = gen::erdos_renyi(20, 50, 1, 1, 123);
+        // Compare against the brute-force in apps::motifs tests' spirit:
+        // total = number of connected induced size-3 subgraphs.
+        let total: u64 = motif_census(&g, 3).values().sum();
+        // Wedges + triangles counts all connected 3-sets.
+        // wedge_count counts paths; triangles are counted 3x as wedges:
+        // wedge_count counts paths; triangles counted 3x as wedges.
+        let tri = g.triangle_count();
+        let chains = g.wedge_count() - 3 * tri;
+        assert_eq!(total, chains + tri);
+    }
+
+    #[test]
+    fn fsm_finds_frequent_edge() {
+        // Chain of five 0-0 edges + one 0-1 edge (same as apps::fsm test).
+        let g = crate::graph::LabeledGraph::from_edges(
+            vec![0, 0, 0, 0, 0, 1],
+            &[(0, 1, 0), (1, 2, 0), (2, 3, 0), (3, 4, 0), (4, 5, 0)],
+        );
+        let res = CentralizedFsm::new(5, 2).run(&g);
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].support, 5);
+        let res = CentralizedFsm::new(3, 2).run(&g);
+        assert!(res.len() >= 2); // edge + 0-0-0 path
+    }
+}

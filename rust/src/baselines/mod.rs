@@ -1,0 +1,17 @@
+//! Baselines the paper evaluates against (§3.2, §6.2):
+//!
+//! * [`centralized`] — single-threaded state-of-the-art stand-ins:
+//!   Bron–Kerbosch maximal cliques (Mace), ESU motif census (G-Tries),
+//!   pattern-growth FSM (GRAMI+VFLib). Table 2 compares these with
+//!   Arabesque on one thread.
+//! * [`tlv`] — "Think Like a Vertex": embedding exploration implemented
+//!   the way a Pregel/Giraph program would, with per-vertex embedding
+//!   state and message replication to border vertices. Fig 7 shows its
+//!   message explosion and hotspots.
+//! * [`tlp`] — "Think Like a Pattern": pattern-partitioned level-wise
+//!   mining (the distributed-GRAMI construction of §6.2); scalability is
+//!   capped by the number of frequent patterns.
+
+pub mod centralized;
+pub mod tlp;
+pub mod tlv;

@@ -1,0 +1,237 @@
+//! "Think Like a Pattern" distributed FSM (paper §3.2, §6.2).
+//!
+//! The paper derives this baseline from GRAMI by partitioning *patterns*
+//! across workers: each level, every live pattern is assigned to one
+//! worker, which (re)computes the pattern's embeddings and support.
+//! Scalability is structurally capped: with `p` frequent patterns at a
+//! level, at most `p` workers are busy — and pattern popularity is
+//! heavily skewed, so even those are imbalanced. `per_level_busy`
+//! exposes exactly that effect for Fig 7.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::agg::DomainSupport;
+use crate::embedding::{self, Embedding, Mode};
+use crate::graph::LabeledGraph;
+use crate::pattern::{canon, quick_pattern, Pattern};
+
+pub struct TlpResult {
+    pub wall: Duration,
+    /// Simulated BSP time: per level, busiest worker (thread CPU time)
+    /// + the shuffle — comparable with `RunResult::sim_wall`.
+    pub sim_wall: Duration,
+    /// Frequent patterns (canonical) with supports.
+    pub frequent: Vec<(Pattern, usize)>,
+    /// (level, per-worker busy time) — the load-balance evidence.
+    pub per_level_busy: Vec<Vec<Duration>>,
+    /// Live (frequent) patterns per level: the parallelism ceiling.
+    pub patterns_per_level: Vec<usize>,
+    /// Messages: embedding groups shipped between pattern owners.
+    pub messages: u64,
+}
+
+pub struct TlpCluster {
+    pub workers: usize,
+}
+
+impl TlpCluster {
+    pub fn new(workers: usize) -> Self {
+        TlpCluster { workers }
+    }
+
+    /// Distributed-GRAMI FSM: minimum-image support threshold `support`,
+    /// patterns capped at `max_edges` edges.
+    pub fn run_fsm(&self, g: &LabeledGraph, support: usize, max_edges: usize) -> TlpResult {
+        let w = self.workers;
+        let t0 = Instant::now();
+        let mut frequent: Vec<(Pattern, usize)> = Vec::new();
+        let mut per_level_busy: Vec<Vec<Duration>> = Vec::new();
+        let mut patterns_per_level: Vec<usize> = Vec::new();
+        let mut messages = 0u64;
+        let mut sim_wall = Duration::ZERO;
+
+        // Level 1 embeddings grouped by canonical pattern.
+        let mut groups: HashMap<Pattern, Vec<Vec<u32>>> = HashMap::new();
+        for eid in 0..g.num_edges() as u32 {
+            let e = Embedding::new(vec![eid]);
+            let qp = quick_pattern(g, &e, Mode::EdgeInduced);
+            let cp = canon::canonicalize(&qp).0;
+            groups.entry(cp).or_default().push(vec![eid]);
+        }
+
+        let mut level = 1usize;
+        while !groups.is_empty() && level <= max_edges {
+            // Deterministic pattern -> worker assignment (round robin over
+            // sorted patterns: the best case for TLP balance).
+            let mut assigned: Vec<Vec<(Pattern, Vec<Vec<u32>>)>> = vec![Vec::new(); w];
+            let mut sorted: Vec<_> = groups.into_iter().collect();
+            sorted.sort_by(|a, b| a.0.cmp(&b.0));
+            patterns_per_level.push(sorted.len());
+            for (i, kv) in sorted.into_iter().enumerate() {
+                messages += 1; // group shipped to its owner
+                assigned[i % w].push(kv);
+            }
+
+            // Each worker processes its patterns: support + extension.
+            let busy: Mutex<Vec<Duration>> = Mutex::new(vec![Duration::ZERO; w]);
+            let results: Vec<(Vec<(Pattern, usize)>, HashMap<Pattern, Vec<Vec<u32>>>)> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = assigned
+                        .into_iter()
+                        .enumerate()
+                        .map(|(wid, mine)| {
+                            let busy = &busy;
+                            scope.spawn(move || {
+                                let idle = mine.is_empty();
+                                let cpu0 = crate::stats::thread_cpu_time();
+                                let mut freq = Vec::new();
+                                let mut produced: HashMap<Pattern, Vec<Vec<u32>>> =
+                                    HashMap::new();
+                                for (p, embs) in mine {
+                                    let sup = pattern_support(g, &p, &embs);
+                                    if sup < support {
+                                        continue;
+                                    }
+                                    freq.push((p, sup));
+                                    if level == max_edges {
+                                        continue;
+                                    }
+                                    // Extend embeddings by one edge; dedup
+                                    // set-wise within this pattern.
+                                    let mut seen: HashSet<Vec<u32>> = HashSet::new();
+                                    for emb in &embs {
+                                        let e = Embedding::new(emb.clone());
+                                        for x in
+                                            embedding::extensions(g, &e, Mode::EdgeInduced)
+                                        {
+                                            let mut key = emb.clone();
+                                            key.push(x);
+                                            key.sort_unstable();
+                                            if !seen.insert(key) {
+                                                continue;
+                                            }
+                                            let mut words = emb.clone();
+                                            words.push(x);
+                                            let child = Embedding::new(words);
+                                            let qp = quick_pattern(
+                                                g, &child, Mode::EdgeInduced,
+                                            );
+                                            let cp = canon::canonicalize(&qp).0;
+                                            produced
+                                                .entry(cp)
+                                                .or_default()
+                                                .push(child.words);
+                                        }
+                                    }
+                                }
+                                if !idle {
+                                    busy.lock().unwrap()[wid] =
+                                        crate::stats::thread_cpu_time().saturating_sub(cpu0);
+                                }
+                                (freq, produced)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+            let level_busy = busy.into_inner().unwrap();
+            sim_wall += level_busy.iter().max().copied().unwrap_or_default();
+            per_level_busy.push(level_busy);
+            let t_shuffle = Instant::now();
+
+            // Shuffle produced groups to next-level owners; different
+            // workers may produce embeddings of the same pattern (the
+            // same subgraph reached from different parents), so dedup
+            // globally by edge set.
+            let mut next: HashMap<Pattern, Vec<Vec<u32>>> = HashMap::new();
+            let mut seen: HashSet<Vec<u32>> = HashSet::new();
+            for (freq, produced) in results {
+                frequent.extend(freq);
+                for (p, embs) in produced {
+                    messages += 1;
+                    for emb in embs {
+                        let mut key = emb.clone();
+                        key.sort_unstable();
+                        if seen.insert(key) {
+                            next.entry(p.clone()).or_default().push(emb);
+                        }
+                    }
+                }
+            }
+            groups = next;
+            sim_wall += t_shuffle.elapsed();
+            level += 1;
+        }
+
+        frequent.sort();
+        TlpResult {
+            wall: t0.elapsed(),
+            sim_wall,
+            frequent,
+            per_level_busy,
+            patterns_per_level,
+            messages,
+        }
+    }
+}
+
+/// Minimum-image support of a pattern over materialized embeddings.
+fn pattern_support(g: &LabeledGraph, p: &Pattern, embs: &[Vec<u32>]) -> usize {
+    let autos = canon::automorphisms(p);
+    let mut dom = DomainSupport::new(p.num_vertices());
+    for words in embs {
+        let e = Embedding::new(words.clone());
+        let qp = quick_pattern(g, &e, Mode::EdgeInduced);
+        let (_, perm) = canon::canonicalize(&qp);
+        let vs = e.vertices(g, Mode::EdgeInduced);
+        for (i, &v) in vs.iter().enumerate() {
+            dom.add(perm[i] as usize, v);
+        }
+    }
+    dom.expanded_support(&autos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::centralized::CentralizedFsm;
+    use crate::graph::gen;
+
+    #[test]
+    fn tlp_matches_centralized_fsm() {
+        let g = gen::erdos_renyi(50, 140, 3, 1, 33);
+        let tlp = TlpCluster::new(4).run_fsm(&g, 4, 2);
+        let cen = CentralizedFsm::new(4, 2).run(&g);
+        let tlp_pats: Vec<&Pattern> = tlp.frequent.iter().map(|(p, _)| p).collect();
+        let cen_pats: Vec<&Pattern> = cen.iter().map(|f| &f.pattern).collect();
+        assert_eq!(tlp_pats, cen_pats);
+        for ((_, s1), f) in tlp.frequent.iter().zip(cen.iter()) {
+            assert_eq!(*s1, f.support);
+        }
+    }
+
+    #[test]
+    fn tlp_parallelism_capped_by_patterns() {
+        let g = gen::erdos_renyi(60, 160, 2, 1, 7);
+        let r = TlpCluster::new(8).run_fsm(&g, 3, 2);
+        // At every level, at most `patterns` workers can have been busy.
+        for (lvl, busy) in r.per_level_busy.iter().enumerate() {
+            let active = busy.iter().filter(|d| !d.is_zero()).count();
+            assert!(
+                active <= r.patterns_per_level[lvl].min(8),
+                "level {lvl}: {active} active > {} patterns",
+                r.patterns_per_level[lvl]
+            );
+        }
+    }
+
+    #[test]
+    fn tlp_deterministic() {
+        let g = gen::erdos_renyi(40, 100, 2, 1, 3);
+        let a = TlpCluster::new(2).run_fsm(&g, 3, 2);
+        let b = TlpCluster::new(5).run_fsm(&g, 3, 2);
+        assert_eq!(a.frequent, b.frequent);
+    }
+}

@@ -1,0 +1,359 @@
+//! "Think Like a Vertex" embedding exploration (paper §3.2, §6.2).
+//!
+//! The construction the paper evaluates: per-vertex embedding state, BSP
+//! supersteps, and an embedding replicated to *all its border vertices*
+//! so each can extend it with its own neighbors. A globally maintained
+//! visited set (sharded by embedding hash) deduplicates the copies —
+//! exactly the coordination Arabesque's canonicality makes unnecessary.
+//!
+//! Runs the same [`GraphMiningApp`] as the main engine, so results are
+//! directly comparable; the interesting outputs are the wall time, the
+//! message count (the paper reports 120M TLV messages vs 137K for
+//! Arabesque on CiteSeer FSM), and the per-worker load imbalance caused
+//! by high-degree vertices.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::agg::{self, AggVal};
+use crate::api::{Ctx, GraphMiningApp, RunAggregates};
+use crate::embedding::{self, Embedding, Mode};
+use crate::engine::WorkerState;
+use crate::graph::{LabeledGraph, VertexId};
+use crate::output::{CountingSink, OutputSink};
+use crate::pattern::Pattern;
+
+pub struct TlvResult {
+    pub wall: Duration,
+    /// Simulated BSP time: per superstep, busiest worker (thread CPU
+    /// time) + the dedup-owner phase — comparable with
+    /// `RunResult::sim_wall` (single-core testbed, see DESIGN.md).
+    pub sim_wall: Duration,
+    /// Total messages (embedding copies to border vertices + dedup
+    /// routing + aggregation traffic).
+    pub messages: u64,
+    pub processed: u64,
+    pub num_outputs: u64,
+    /// Busy time per worker in the final superstep (hotspot evidence).
+    pub per_worker_busy: Vec<Duration>,
+    pub steps: usize,
+}
+
+/// TLV cluster: `workers` vertex-partitioned workers.
+pub struct TlvCluster {
+    pub workers: usize,
+    pub max_steps: usize,
+}
+
+impl TlvCluster {
+    pub fn new(workers: usize) -> Self {
+        TlvCluster { workers, max_steps: 64 }
+    }
+
+    pub fn run(&self, g: &LabeledGraph, app: &dyn GraphMiningApp) -> TlvResult {
+        self.run_with_sink(g, app, Arc::new(CountingSink::default()))
+    }
+
+    pub fn run_with_sink(
+        &self,
+        g: &LabeledGraph,
+        app: &dyn GraphMiningApp,
+        sink: Arc<dyn OutputSink>,
+    ) -> TlvResult {
+        let mode = app.mode();
+        let w = self.workers;
+        let t0 = Instant::now();
+        let owner = |v: VertexId| (v as usize) % w;
+
+        let mut messages = 0u64;
+        let mut processed = 0u64;
+        let mut sim_wall = Duration::ZERO;
+        let mut states: Vec<WorkerState> = (0..w).map(|_| WorkerState::new(true)).collect();
+        let mut prev_pattern_aggs: HashMap<Pattern, AggVal> = HashMap::new();
+        let prev_int_aggs: HashMap<i64, AggVal> = HashMap::new();
+        let mut pattern_history: HashMap<Pattern, AggVal> = HashMap::new();
+        let mut per_worker_busy = vec![Duration::ZERO; w];
+
+        // Per-vertex inboxes: embeddings to extend at that vertex. Step 1
+        // seeds single-word embeddings at their home vertex (vertex mode:
+        // the vertex itself; edge mode: the edge's smaller endpoint).
+        let mut inboxes: Vec<Vec<(VertexId, Vec<u32>)>> = vec![Vec::new(); w];
+        match mode {
+            Mode::VertexInduced => {
+                for v in 0..g.num_vertices() as VertexId {
+                    inboxes[owner(v)].push((v, vec![v]));
+                    messages += 1;
+                }
+            }
+            Mode::EdgeInduced => {
+                // A seed edge is local state at BOTH endpoints (each can
+                // extend it with its own incident edges); φ/π run only at
+                // the src copy so the embedding is processed once.
+                for eid in 0..g.num_edges() as u32 {
+                    let e = g.edge(eid);
+                    inboxes[owner(e.src)].push((e.src, vec![eid]));
+                    inboxes[owner(e.dst)].push((e.dst, vec![eid]));
+                    messages += 2;
+                }
+            }
+        }
+
+        let mut step = 1usize;
+        let mut total_steps = 0usize;
+        while step <= self.max_steps && inboxes.iter().any(|b| !b.is_empty()) {
+            total_steps = step;
+            // ---- compute: each worker extends embeddings at its vertices.
+            let batches = std::mem::replace(&mut inboxes, vec![Vec::new(); w]);
+            let results: Vec<(Vec<Vec<u32>>, HashMap<Pattern, AggVal>, Duration, u64)> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = batches
+                        .into_iter()
+                        .zip(states.iter_mut())
+                        .map(|(batch, state)| {
+                            let prev_p = &prev_pattern_aggs;
+                            let prev_i = &prev_int_aggs;
+                            let sink = Arc::clone(&sink);
+                            scope.spawn(move || {
+                                let cpu0 = crate::stats::thread_cpu_time();
+                                state.step_memo.clear(); // new superstep
+                                let mut produced: Vec<Vec<u32>> = Vec::new();
+                                let mut local_processed = 0u64;
+                                let mut ctx = Ctx {
+                                    step,
+                                    prev_pattern_aggs: prev_p,
+                                    prev_int_aggs: prev_i,
+                                    pattern_agg: &mut state.pattern_agg,
+                                    output_agg: &mut state.output_agg,
+                                    int_agg: &mut state.int_agg,
+                                    sink: sink.as_ref(),
+                                    canon_cache: &mut state.canon_cache,
+                                    current_quick: None,
+                                    autos_cache: &mut state.autos_cache,
+                                    step_memo: &mut state.step_memo,
+                                };
+                                for (v, words) in batch {
+                                    let e = Embedding::new(words);
+                                    if e.len() == 1 {
+                                        // Seed: φ gates expansion at every
+                                        // copy; π and the processed count
+                                        // run only at the primary copy
+                                        // (src endpoint in edge mode).
+                                        let primary = match mode {
+                                            Mode::VertexInduced => true,
+                                            Mode::EdgeInduced => {
+                                                g.edge(e.words[0]).src == v
+                                            }
+                                        };
+                                        let quick =
+                                            crate::pattern::quick_pattern(g, &e, mode);
+                                        ctx.current_quick = Some(quick);
+                                        if !app.filter(g, &e, &mut ctx) {
+                                            continue;
+                                        }
+                                        if primary {
+                                            app.process(g, &e, &mut ctx);
+                                            local_processed += 1;
+                                        }
+                                        if !app.should_expand(g, &e) {
+                                            continue;
+                                        }
+                                        ctx.current_quick = None;
+                                    } else {
+                                        // α before expansion, as Algorithm 1.
+                                        // β runs at one designated border
+                                        // copy (the smallest vertex) so each
+                                        // embedding is β-processed once.
+                                        let primary = e
+                                            .vertices(g, mode)
+                                            .iter()
+                                            .min()
+                                            .copied()
+                                            == Some(v);
+                                        let quick =
+                                            crate::pattern::quick_pattern(g, &e, mode);
+                                        ctx.current_quick = Some(quick);
+                                        let ok = app.aggregation_filter(g, &e, &mut ctx);
+                                        if ok && primary {
+                                            app.aggregation_process(g, &e, &mut ctx);
+                                        }
+                                        ctx.current_quick = None;
+                                        if !ok {
+                                            continue;
+                                        }
+                                    }
+                                    // Extend with THIS vertex's local
+                                    // information only (the TLV constraint):
+                                    // its neighbor vertices, or its incident
+                                    // edges in edge mode.
+                                    for &(u, eid) in g.neighbors(v) {
+                                        let cand = match mode {
+                                            Mode::VertexInduced => u,
+                                            Mode::EdgeInduced => eid,
+                                        };
+                                        if !e.words.contains(&cand)
+                                            && embedding::is_canonical_extension(
+                                                g, mode, &e.words, cand,
+                                            )
+                                        {
+                                            let mut child = e.words.clone();
+                                            child.push(cand);
+                                            produced.push(child);
+                                        }
+                                    }
+                                }
+                                let part = state.pattern_agg.flush();
+                                let busy =
+                                    crate::stats::thread_cpu_time().saturating_sub(cpu0);
+                                (produced, part, busy, local_processed)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+
+            // ---- dedup phase: route children to hash owners ----------
+            let t_seq = Instant::now();
+            let mut agg_parts = Vec::new();
+            let mut dedup: HashSet<Vec<u32>> = HashSet::new();
+            let mut unique: Vec<Vec<u32>> = Vec::new();
+            for (wid, (produced, part, busy, lp)) in results.into_iter().enumerate() {
+                per_worker_busy[wid] = busy;
+                processed += lp;
+                messages += produced.len() as u64; // one routing msg each
+                agg_parts.push(part);
+                for child in produced {
+                    if dedup.insert(child.clone()) {
+                        unique.push(child);
+                    }
+                }
+            }
+
+            // ---- φ/π at the dedup owners, then replicate to borders ---
+            // (sequential: this models the owner shard's work; the paper's
+            // bottleneck is the message volume, which we count.)
+            {
+                let state = &mut states[0];
+                let mut ctx = Ctx {
+                    step,
+                    prev_pattern_aggs: &prev_pattern_aggs,
+                    prev_int_aggs: &prev_int_aggs,
+                    pattern_agg: &mut state.pattern_agg,
+                    output_agg: &mut state.output_agg,
+                    int_agg: &mut state.int_agg,
+                    sink: sink.as_ref(),
+                    canon_cache: &mut state.canon_cache,
+                    current_quick: None,
+                    autos_cache: &mut state.autos_cache,
+                    step_memo: &mut state.step_memo,
+                };
+                for child in unique {
+                    let e = Embedding::new(child.clone());
+                    let quick = crate::pattern::quick_pattern(g, &e, mode);
+                    ctx.current_quick = Some(quick);
+                    if !app.filter(g, &e, &mut ctx) {
+                        continue;
+                    }
+                    app.process(g, &e, &mut ctx);
+                    processed += 1;
+                    if app.should_expand(g, &e) {
+                        // Replicate to every border vertex (the paper's
+                        // "significant number of duplicate messages").
+                        for v in e.vertices(g, mode) {
+                            inboxes[owner(v)].push((v, child.clone()));
+                            messages += 1;
+                        }
+                    }
+                }
+                agg_parts.push(state.pattern_agg.flush());
+            }
+
+            let step_aggs = agg::merge_global(agg_parts);
+            for (k, v) in &step_aggs {
+                match pattern_history.get_mut(k) {
+                    Some(cur) => cur.merge(v.clone()),
+                    None => {
+                        pattern_history.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+            messages += step_aggs.len() as u64 * (w as u64); // broadcast
+            prev_pattern_aggs = step_aggs;
+            sim_wall += per_worker_busy.iter().max().copied().unwrap_or_default()
+                + t_seq.elapsed();
+            step += 1;
+        }
+
+        // Final output aggregation + report.
+        let mut out_parts = Vec::new();
+        for s in &mut states {
+            out_parts.push(s.output_agg.flush());
+        }
+        let aggregates = RunAggregates {
+            pattern_history,
+            pattern_output: agg::merge_global(out_parts),
+            int_history: HashMap::new(),
+        };
+        app.report(g, &aggregates, sink.as_ref());
+
+        TlvResult {
+            wall: t0.elapsed(),
+            sim_wall,
+            messages,
+            processed,
+            num_outputs: sink.count(),
+            per_worker_busy,
+            steps: total_steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{Cliques, Motifs};
+    use crate::engine::{Cluster, Config};
+    use crate::graph::gen;
+
+    #[test]
+    fn tlv_matches_engine_on_cliques() {
+        let g = gen::small("k5").unwrap();
+        let tlv = TlvCluster::new(2).run(&g, &Cliques::new(4));
+        let eng = Cluster::new(Config::new(1, 2)).run(&g, &Cliques::new(4));
+        assert_eq!(tlv.num_outputs, eng.num_outputs);
+    }
+
+    #[test]
+    fn tlv_matches_engine_on_motifs() {
+        let g = gen::erdos_renyi(25, 70, 2, 1, 5);
+        let app = Motifs::new(3);
+        let tlv = TlvCluster::new(3).run(&g, &app);
+        let eng = Cluster::new(Config::new(1, 3)).run(&g, &app);
+        assert_eq!(tlv.processed, eng.processed);
+    }
+
+    #[test]
+    fn tlv_message_explosion() {
+        // TLV messages are a large multiple of the embeddings explored;
+        // the engine's ODAG broadcast counts far fewer messages.
+        let g = gen::erdos_renyi(40, 150, 1, 1, 9);
+        let app = Motifs::new(3);
+        let tlv = TlvCluster::new(4).run(&g, &app);
+        let eng = Cluster::new(Config::new(2, 2)).run(&g, &app);
+        assert!(
+            tlv.messages > 4 * eng.comm.messages,
+            "tlv {} vs engine {}",
+            tlv.messages,
+            eng.comm.messages
+        );
+    }
+
+    #[test]
+    fn tlv_hotspot_on_star() {
+        // Star graph: the hub's owner does almost all expansion work.
+        let g = gen::small("star6").unwrap();
+        let r = TlvCluster::new(3).run(&g, &Motifs::new(3));
+        assert!(r.processed > 0);
+        assert!(r.steps >= 2);
+    }
+}

@@ -1,0 +1,202 @@
+//! Incremental embedding canonicality (paper Algorithm 2 + Appendix).
+//!
+//! Definition 1 (vertex-based): the sequence `⟨v1..vn⟩` is canonical iff
+//!   P1: `v1` is the smallest id in the embedding,
+//!   P2: every `vi` (i>1) has a neighbor among `v1..v(i-1)` (connectivity),
+//!   P3: for the *first* earlier neighbor `vh` of `vj`, no vertex between
+//!       positions h and j has an id greater than `vj`.
+//!
+//! Equivalently (constructive form, Appendix Thm 3): start from the
+//! smallest vertex, then repeatedly visit the smallest-id unvisited
+//! vertex adjacent to the visited set.
+//!
+//! The edge-based case is the same algorithm over edge ids with edge
+//! incidence (shared endpoint) as the neighbor relation — the paper calls
+//! it "analogous" (§5.1); the proofs carry over verbatim because they
+//! only use the neighbor relation and the total order on ids.
+
+use crate::graph::LabeledGraph;
+
+use super::{Embedding, Mode};
+
+/// Neighbor relation between two words under the given mode.
+#[inline]
+fn related(g: &LabeledGraph, mode: Mode, a: u32, b: u32) -> bool {
+    match mode {
+        Mode::VertexInduced => g.is_neighbor(a, b),
+        Mode::EdgeInduced => g.edge(a).incident(g.edge(b)),
+    }
+}
+
+/// Paper Algorithm 2: is `parent + [w]` canonical, assuming `parent` is
+/// canonical? O(n) in the embedding size; this is the per-candidate hot
+/// path of the whole system.
+#[inline]
+pub fn is_canonical_extension(g: &LabeledGraph, mode: Mode, parent: &[u32], w: u32) -> bool {
+    if parent.is_empty() {
+        return true; // all 1-word embeddings are canonical
+    }
+    if parent[0] > w {
+        return false;
+    }
+    let mut found_neighbour = false;
+    for &p in parent {
+        if !found_neighbour {
+            if related(g, mode, p, w) {
+                found_neighbour = true;
+            }
+        } else if p > w {
+            return false;
+        }
+    }
+    // A candidate produced by `extensions()` is always connected, so
+    // found_neighbour holds there; for arbitrary inputs (ODAG spurious
+    // paths) a non-connected word is NOT a valid canonical extension.
+    found_neighbour
+}
+
+/// Full (non-incremental) canonicality: every prefix must be a canonical
+/// extension. Used when validating whole sequences (tests, ODAG loads).
+pub fn is_canonical(g: &LabeledGraph, mode: Mode, words: &[u32]) -> bool {
+    for i in 1..words.len() {
+        if !is_canonical_extension(g, mode, &words[..i], words[i]) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Construct the canonical automorphism of an embedding (Appendix Thm 3):
+/// smallest word first, then repeatedly the smallest related unvisited
+/// word. Returns `None` if the word set is not connected.
+pub fn canonical_form(g: &LabeledGraph, mode: Mode, words: &[u32]) -> Option<Embedding> {
+    if words.is_empty() {
+        return Some(Embedding::empty());
+    }
+    let mut remaining: Vec<u32> = words.to_vec();
+    remaining.sort_unstable();
+    remaining.dedup();
+    let mut out = Vec::with_capacity(remaining.len());
+    out.push(remaining.remove(0));
+    while !remaining.is_empty() {
+        // Smallest remaining word related to the visited set; `remaining`
+        // is sorted, so the first hit is the smallest.
+        let pos = remaining
+            .iter()
+            .position(|&w| out.iter().any(|&v| related(g, mode, v, w)))?;
+        out.push(remaining.remove(pos));
+    }
+    Some(Embedding::new(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::LabeledGraph;
+
+    /// Paper Fig 2-like graph: path 0-1-2-3 with chord 0-2.
+    fn g() -> LabeledGraph {
+        LabeledGraph::from_edges(vec![0, 1, 0, 1], &[(0, 1, 0), (1, 2, 0), (2, 3, 0), (0, 2, 0)])
+    }
+
+    #[test]
+    fn single_word_always_canonical() {
+        let g = g();
+        for v in 0..4 {
+            assert!(is_canonical_extension(&g, Mode::VertexInduced, &[], v));
+        }
+    }
+
+    #[test]
+    fn smallest_first_rule() {
+        let g = g();
+        // ⟨1, 0⟩: 0 < first word 1 -> not canonical.
+        assert!(!is_canonical_extension(&g, Mode::VertexInduced, &[1], 0));
+        assert!(is_canonical_extension(&g, Mode::VertexInduced, &[0], 1));
+    }
+
+    #[test]
+    fn paper_rule_p3() {
+        let g = g();
+        // ⟨0, 2, 1⟩: 1's first neighbor in prefix is 0 (pos 0); vertex 2 at
+        // a later position has id > 1 -> NOT canonical.
+        assert!(!is_canonical_extension(&g, Mode::VertexInduced, &[0, 2], 1));
+        // ⟨0, 1, 2⟩ is canonical.
+        assert!(is_canonical_extension(&g, Mode::VertexInduced, &[0, 1], 2));
+    }
+
+    #[test]
+    fn exactly_one_automorphism_is_canonical() {
+        let g = g();
+        // All orderings of the triangle {0,1,2}.
+        let perms: Vec<Vec<u32>> = vec![
+            vec![0, 1, 2],
+            vec![0, 2, 1],
+            vec![1, 0, 2],
+            vec![1, 2, 0],
+            vec![2, 0, 1],
+            vec![2, 1, 0],
+        ];
+        let canonical: Vec<_> = perms
+            .iter()
+            .filter(|p| is_canonical(&g, Mode::VertexInduced, p))
+            .collect();
+        assert_eq!(canonical.len(), 1, "uniqueness violated: {canonical:?}");
+        assert_eq!(*canonical[0], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn canonical_form_matches_check() {
+        let g = g();
+        let cf = canonical_form(&g, Mode::VertexInduced, &[2, 3, 1]).unwrap();
+        assert!(is_canonical(&g, Mode::VertexInduced, &cf.words));
+        assert_eq!(cf.words, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn canonical_form_disconnected_is_none() {
+        let g = LabeledGraph::from_edges(vec![0; 4], &[(0, 1, 0), (2, 3, 0)]);
+        assert!(canonical_form(&g, Mode::VertexInduced, &[0, 2]).is_none());
+    }
+
+    #[test]
+    fn disconnected_extension_rejected() {
+        let g = g();
+        // 3 is not adjacent to {0,1}.
+        assert!(!is_canonical_extension(&g, Mode::VertexInduced, &[0, 1], 3));
+    }
+
+    #[test]
+    fn edge_mode_canonicality() {
+        let g = g();
+        let e01 = g.edge_between(0, 1).unwrap();
+        let e12 = g.edge_between(1, 2).unwrap();
+        let e23 = g.edge_between(2, 3).unwrap();
+        // Edge ids: from_edges sorts by (src,dst): (0,1)=0, (0,2)=1, (1,2)=2, (2,3)=3.
+        assert!(is_canonical_extension(&g, Mode::EdgeInduced, &[e01], e12));
+        // ⟨e12, e01⟩: e01 < e12 -> not canonical.
+        assert!(!is_canonical_extension(&g, Mode::EdgeInduced, &[e12], e01));
+        // Non-incident pair rejected: (0,1) and (2,3) share no endpoint.
+        assert!(!is_canonical_extension(&g, Mode::EdgeInduced, &[e01], e23));
+    }
+
+    #[test]
+    fn edge_mode_uniqueness_on_path() {
+        let g = g();
+        // Path of edges {(0,1),(1,2),(2,3)} = words {0,2,3}: exactly one
+        // ordering is canonical.
+        let words = [0u32, 2, 3];
+        let mut canonical = 0;
+        let perms = [
+            [0, 2, 3], [0, 3, 2], [2, 0, 3], [2, 3, 0], [3, 0, 2], [3, 2, 0],
+        ];
+        for p in perms {
+            if is_canonical(&g, Mode::EdgeInduced, &p) {
+                canonical += 1;
+            }
+        }
+        assert_eq!(canonical, 1);
+        let cf = canonical_form(&g, Mode::EdgeInduced, &words).unwrap();
+        assert!(is_canonical(&g, Mode::EdgeInduced, &cf.words));
+    }
+}

@@ -1,0 +1,241 @@
+//! Embeddings and coordination-free canonicality (paper §3, §5.1, Alg. 2).
+//!
+//! An embedding is a connected subgraph of the input graph, represented
+//! as the sequence of vertex ids (vertex-induced exploration) or edge ids
+//! (edge-induced exploration) *in visit order* — the sequence uniquely
+//! identifies the embedding (paper §5.1).
+//!
+//! The canonicality check is the paper's central coordination-free
+//! technique: among all automorphic copies of an embedding exactly one
+//! sequence is *canonical* (uniqueness), and the canonical child of a
+//! canonical parent is always reachable by a single extension
+//! (extendibility) — so workers can prune duplicates locally, with no
+//! communication. Both properties are exercised by the property tests in
+//! `rust/tests/properties.rs`.
+
+pub mod canon;
+
+use crate::graph::{EdgeId, LabeledGraph, VertexId};
+
+pub use canon::{canonical_form, is_canonical, is_canonical_extension};
+
+/// Exploration mode (paper §3.1): each step extends an embedding by one
+/// incident vertex (vertex-induced) or one incident edge (edge-induced).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    VertexInduced,
+    EdgeInduced,
+}
+
+/// An embedding: ids in visit order. For `VertexInduced` the words are
+/// vertex ids; for `EdgeInduced` they are edge ids.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Embedding {
+    pub words: Vec<u32>,
+}
+
+impl Embedding {
+    pub fn new(words: Vec<u32>) -> Self {
+        Embedding { words }
+    }
+
+    pub fn empty() -> Self {
+        Embedding { words: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Extend by one word (no checks; callers validate canonicality).
+    pub fn child(&self, w: u32) -> Embedding {
+        let mut words = Vec::with_capacity(self.words.len() + 1);
+        words.extend_from_slice(&self.words);
+        words.push(w);
+        Embedding { words }
+    }
+
+    /// The vertices of the embedding, in first-visit order.
+    pub fn vertices(&self, g: &LabeledGraph, mode: Mode) -> Vec<VertexId> {
+        match mode {
+            Mode::VertexInduced => self.words.clone(),
+            Mode::EdgeInduced => {
+                let mut vs: Vec<VertexId> = Vec::with_capacity(self.words.len() + 1);
+                for &eid in &self.words {
+                    let e = g.edge(eid);
+                    // Visit order: for the first edge push (src, dst)
+                    // (src < dst); afterwards push the new endpoint.
+                    if vs.is_empty() {
+                        vs.push(e.src);
+                        vs.push(e.dst);
+                    } else {
+                        if !vs.contains(&e.src) {
+                            vs.push(e.src);
+                        }
+                        if !vs.contains(&e.dst) {
+                            vs.push(e.dst);
+                        }
+                    }
+                }
+                vs
+            }
+        }
+    }
+
+    /// Number of distinct vertices.
+    pub fn num_vertices(&self, g: &LabeledGraph, mode: Mode) -> usize {
+        match mode {
+            Mode::VertexInduced => self.words.len(),
+            Mode::EdgeInduced => self.vertices(g, mode).len(),
+        }
+    }
+
+    /// The edges of the embedding.
+    /// Vertex-induced: all graph edges among the embedding's vertices.
+    /// Edge-induced: exactly the listed edges.
+    pub fn edges(&self, g: &LabeledGraph, mode: Mode) -> Vec<EdgeId> {
+        match mode {
+            Mode::VertexInduced => {
+                let vs = &self.words;
+                let mut es = Vec::new();
+                for (i, &u) in vs.iter().enumerate() {
+                    for &v in &vs[i + 1..] {
+                        if let Some(eid) = g.edge_between(u, v) {
+                            es.push(eid);
+                        }
+                    }
+                }
+                es
+            }
+            Mode::EdgeInduced => self.words.clone(),
+        }
+    }
+}
+
+/// All single-word extensions of `e`: incident vertices (vertex mode) or
+/// incident edges (edge mode) not already in the embedding.
+///
+/// This is the candidate set `C` of paper Algorithm 1 for one parent;
+/// candidates still need the canonicality check + filter. Candidate
+/// order is deterministic (by attaching member position, then neighbor
+/// order). Duplicates (a candidate adjacent to several members) are
+/// suppressed without a set: a candidate is emitted only at its *first*
+/// adjacent member — an O(k) test that keeps this hot path
+/// allocation-free beyond the output vector.
+pub fn extensions(g: &LabeledGraph, e: &Embedding, mode: Mode) -> Vec<u32> {
+    let mut out: Vec<u32> = Vec::new();
+    match mode {
+        Mode::VertexInduced => {
+            let words = &e.words;
+            for (i, &v) in words.iter().enumerate() {
+                for &(u, _) in g.neighbors(v) {
+                    if words.contains(&u) {
+                        continue;
+                    }
+                    // First-neighbor dedup.
+                    if words[..i].iter().any(|&p| g.is_neighbor(p, u)) {
+                        continue;
+                    }
+                    out.push(u);
+                }
+            }
+        }
+        Mode::EdgeInduced => {
+            let vs = e.vertices(g, mode);
+            for (i, &v) in vs.iter().enumerate() {
+                for &(_, eid) in g.neighbors(v) {
+                    if e.words.contains(&eid) {
+                        continue;
+                    }
+                    // First-endpoint dedup: an incident edge is emitted
+                    // at the first embedding vertex it touches.
+                    let ed = g.edge(eid);
+                    if vs[..i].iter().any(|&p| ed.touches(p)) {
+                        continue;
+                    }
+                    out.push(eid);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The initial candidate set (paper: the "undefined" embedding expands to
+/// all vertices or all edges of `G`).
+pub fn initial_candidates(g: &LabeledGraph, mode: Mode) -> Vec<u32> {
+    match mode {
+        Mode::VertexInduced => (0..g.num_vertices() as u32).collect(),
+        Mode::EdgeInduced => (0..g.num_edges() as u32).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::LabeledGraph;
+
+    fn path4() -> LabeledGraph {
+        // 0-1-2-3 path plus chord 0-2 (the paper's Fig 2 shape).
+        LabeledGraph::from_edges(vec![0, 1, 0, 1], &[(0, 1, 0), (1, 2, 0), (2, 3, 0), (0, 2, 0)])
+    }
+
+    #[test]
+    fn vertex_mode_vertices_and_edges() {
+        let g = path4();
+        let e = Embedding::new(vec![0, 1, 2]);
+        assert_eq!(e.vertices(&g, Mode::VertexInduced), vec![0, 1, 2]);
+        // Vertex-induced: includes the chord 0-2 => 3 edges.
+        assert_eq!(e.edges(&g, Mode::VertexInduced).len(), 3);
+        assert_eq!(e.num_vertices(&g, Mode::VertexInduced), 3);
+    }
+
+    #[test]
+    fn edge_mode_vertices_in_visit_order() {
+        let g = path4();
+        let e01 = g.edge_between(0, 1).unwrap();
+        let e12 = g.edge_between(1, 2).unwrap();
+        let emb = Embedding::new(vec![e01, e12]);
+        assert_eq!(emb.vertices(&g, Mode::EdgeInduced), vec![0, 1, 2]);
+        assert_eq!(emb.num_vertices(&g, Mode::EdgeInduced), 3);
+        assert_eq!(emb.edges(&g, Mode::EdgeInduced), vec![e01, e12]);
+    }
+
+    #[test]
+    fn vertex_extensions_exclude_members() {
+        let g = path4();
+        let e = Embedding::new(vec![1]);
+        assert_eq!(extensions(&g, &e, Mode::VertexInduced), vec![0, 2]);
+        let e = Embedding::new(vec![0, 1]);
+        assert_eq!(extensions(&g, &e, Mode::VertexInduced), vec![2]);
+    }
+
+    #[test]
+    fn edge_extensions_are_incident() {
+        let g = path4();
+        let e01 = g.edge_between(0, 1).unwrap();
+        let emb = Embedding::new(vec![e01]);
+        let exts = extensions(&g, &emb, Mode::EdgeInduced);
+        // Edges incident to {0,1}: (1,2) and (0,2).
+        assert_eq!(exts.len(), 2);
+        assert!(!exts.contains(&e01));
+    }
+
+    #[test]
+    fn initial_candidates_cover_graph() {
+        let g = path4();
+        assert_eq!(initial_candidates(&g, Mode::VertexInduced).len(), 4);
+        assert_eq!(initial_candidates(&g, Mode::EdgeInduced).len(), 4);
+    }
+
+    #[test]
+    fn child_appends() {
+        let e = Embedding::new(vec![3, 1]);
+        assert_eq!(e.child(7).words, vec![3, 1, 7]);
+        assert_eq!(e.len(), 2); // parent unchanged
+    }
+}

@@ -1,0 +1,476 @@
+//! The BSP exploration engine (paper §3.1 Algorithm 1, §4.3, §5).
+//!
+//! The paper runs workers as Giraph "vertices" over a 20-server Hadoop
+//! cluster; here the cluster is simulated in-process: a [`Cluster`] has
+//! `servers × threads_per_server` workers (OS threads per superstep),
+//! a BSP barrier between supersteps, and explicit accounting of every
+//! byte and message that would cross a *server* boundary (ODAG
+//! broadcast, aggregation shuffle). All of the paper's techniques are
+//! algorithmic, so their behaviour — compression ratios, load balance,
+//! canonization counts, phase breakdowns — is observable in-process
+//! (see DESIGN.md "Substitutions").
+//!
+//! One superstep executes paper Algorithm 1:
+//!
+//! ```text
+//! for each embedding e in my partition of I:
+//!     (ODAG mode) re-apply φ to drop spurious extractions
+//!     if α(e):   β(e)
+//!                for each extension e' of e:
+//!                    if e' canonical and φ(e'):
+//!                        π(e'); if shouldExpand(e'): F ← F ∪ {e'}
+//! barrier: flush + merge aggregations (two-level), merge + broadcast F
+//! ```
+
+mod worker;
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::agg::{self, AggStats, AggVal};
+use crate::api::{GraphMiningApp, RunAggregates};
+use crate::graph::LabeledGraph;
+use crate::odag::OdagStore;
+use crate::output::{CountingSink, OutputSink};
+use crate::pattern::Pattern;
+use crate::stats::{CommStats, PhaseTimes, StepStats};
+
+pub use worker::WorkerState;
+
+/// Engine configuration. `servers` models the paper's physical machines
+/// (the unit of network-byte accounting); `threads_per_server` the
+/// per-machine execution threads (the paper uses 32).
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub servers: usize,
+    pub threads_per_server: usize,
+    /// Store the frontier as per-pattern ODAGs (paper §5.2). When false,
+    /// plain embedding lists are used (the paper's fallback — Fig 10).
+    pub use_odag: bool,
+    /// Two-level pattern aggregation (paper §5.4). When false, every
+    /// mapped embedding is canonized individually (Fig 11's ablation).
+    pub two_level_agg: bool,
+    /// Load-balancing block size `b` (paper §5.3): workers claim blocks
+    /// of this many consecutive path indices round-robin.
+    pub block: u64,
+    /// Safety cap on exploration steps (applications normally terminate
+    /// via `should_expand` / empty frontiers).
+    pub max_steps: usize,
+}
+
+impl Config {
+    pub fn new(servers: usize, threads_per_server: usize) -> Self {
+        Config {
+            servers,
+            threads_per_server,
+            use_odag: true,
+            two_level_agg: true,
+            block: 64,
+            max_steps: 64,
+        }
+    }
+
+    /// Total worker count.
+    pub fn workers(&self) -> usize {
+        self.servers * self.threads_per_server
+    }
+
+    pub fn with_odag(mut self, on: bool) -> Self {
+        self.use_odag = on;
+        self
+    }
+
+    pub fn with_two_level(mut self, on: bool) -> Self {
+        self.two_level_agg = on;
+        self
+    }
+
+    pub fn with_block(mut self, b: u64) -> Self {
+        self.block = b;
+        self
+    }
+
+    pub fn with_max_steps(mut self, n: usize) -> Self {
+        self.max_steps = n;
+        self
+    }
+}
+
+/// The frontier `F`/`I` of Algorithm 1, in one of the two storage
+/// representations the paper compares.
+pub enum Frontier {
+    /// Step 1's virtual frontier: expands to every vertex/edge of G.
+    Init,
+    /// Plain embedding list (word sequences).
+    List(Vec<Vec<u32>>),
+    /// One ODAG per pattern (paper §5.2).
+    Odag(OdagStore),
+}
+
+impl Frontier {
+    fn is_empty(&self) -> bool {
+        match self {
+            Frontier::Init => false,
+            Frontier::List(v) => v.is_empty(),
+            Frontier::Odag(s) => s.is_empty(),
+        }
+    }
+}
+
+/// Everything a run produces (per-step records + totals).
+pub struct RunResult {
+    pub steps: Vec<StepStats>,
+    pub wall: std::time::Duration,
+    /// Simulated BSP wall time: Σ per-step (busiest worker + merge).
+    /// The scalability metric on this single-core testbed (see
+    /// `StepStats::sim_wall`).
+    pub sim_wall: std::time::Duration,
+    /// Values written through `output()` + report().
+    pub num_outputs: u64,
+    /// Embeddings processed by π across the run (the paper's
+    /// "embeddings" in Tables 4/5).
+    pub processed: u64,
+    /// Candidates that passed canonicality (pre-φ).
+    pub candidates: u64,
+    pub comm: CommStats,
+    pub phases: PhaseTimes,
+    pub agg_stats: AggStats,
+    /// Distinct canonical patterns seen in pattern aggregation.
+    pub canonical_patterns: u64,
+    /// Peak frontier footprint over steps, as stored.
+    pub peak_frontier_bytes: u64,
+    pub aggregates: RunAggregates,
+}
+
+impl RunResult {
+    pub fn total_frontier(&self) -> u64 {
+        self.steps.iter().map(|s| s.frontier).sum()
+    }
+}
+
+/// The simulated cluster: the paper's coordinator, scoped to a run.
+pub struct Cluster {
+    pub cfg: Config,
+}
+
+impl Cluster {
+    pub fn new(cfg: Config) -> Self {
+        assert!(cfg.servers >= 1 && cfg.threads_per_server >= 1);
+        Cluster { cfg }
+    }
+
+    /// Run an application to completion, counting outputs only.
+    pub fn run(&self, g: &LabeledGraph, app: &dyn GraphMiningApp) -> RunResult {
+        self.run_with_sink(g, app, Arc::new(CountingSink::default()))
+    }
+
+    /// Run with a caller-provided output sink.
+    pub fn run_with_sink(
+        &self,
+        g: &LabeledGraph,
+        app: &dyn GraphMiningApp,
+        sink: Arc<dyn OutputSink>,
+    ) -> RunResult {
+        let cfg = &self.cfg;
+        let w = cfg.workers();
+        let t_run = Instant::now();
+
+        let mut states: Vec<WorkerState> = (0..w)
+            .map(|_| WorkerState::new(cfg.two_level_agg))
+            .collect();
+        let mut frontier = Frontier::Init;
+        let mut prev_pattern_aggs: HashMap<Pattern, AggVal> = HashMap::new();
+        let mut prev_int_aggs: HashMap<i64, AggVal> = HashMap::new();
+        let mut pattern_history: HashMap<Pattern, AggVal> = HashMap::new();
+        let mut int_history: HashMap<i64, AggVal> = HashMap::new();
+
+        let mut steps: Vec<StepStats> = Vec::new();
+        let mut comm_total = CommStats::default();
+        let mut phases_total = PhaseTimes::default();
+        let mut candidates_total = 0u64;
+        let mut processed_total = 0u64;
+        let mut peak_frontier_bytes = 0u64;
+
+        let mut step = 1usize;
+        while step <= cfg.max_steps && !frontier.is_empty() {
+            let t_step = Instant::now();
+
+            // ---- compute phase: one scoped thread per worker --------
+            let outs: Vec<worker::WorkerOut> = std::thread::scope(|scope| {
+                let frontier = &frontier;
+                let prev_p = &prev_pattern_aggs;
+                let prev_i = &prev_int_aggs;
+                let handles: Vec<_> = states
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(wid, state)| {
+                        let sink = Arc::clone(&sink);
+                        scope.spawn(move || {
+                            worker::run_step(
+                                wid, cfg, g, app, frontier, prev_p, prev_i, state,
+                                sink.as_ref(), step,
+                            )
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+            });
+
+            // ---- barrier: merge results (coordinator side) ----------
+            let t_merge = Instant::now();
+            let mut st = StepStats { step, ..Default::default() };
+            let mut agg_parts = Vec::with_capacity(w);
+            let mut int_parts: Vec<HashMap<i64, AggVal>> = Vec::with_capacity(w);
+            let mut merged_list: Vec<Vec<u32>> = Vec::new();
+            let mut merged_odags = OdagStore::new();
+
+            for (wid, mut out) in outs.into_iter().enumerate() {
+                st.candidates += out.candidates;
+                st.processed += out.processed;
+                st.frontier += out.frontier_added;
+                st.list_bytes += out.list_bytes;
+                st.phases.merge(&out.phases);
+                st.busy_max = st.busy_max.max(out.busy);
+                st.busy_sum += out.busy;
+                processed_total += out.processed;
+
+                // Aggregation shuffle accounting: each (key, value) goes
+                // to its owner worker; only cross-server entries cost
+                // network messages/bytes.
+                let src_server = wid / cfg.threads_per_server;
+                for (k, v) in &out.pattern_part {
+                    let owner = owner_of(k, w) / cfg.threads_per_server;
+                    if owner != src_server {
+                        st.comm.add(1, (k.byte_size() + v.byte_size()) as u64);
+                    }
+                }
+                for (k, v) in &out.int_part {
+                    let owner = (*k as u64 as usize % w) / cfg.threads_per_server;
+                    if owner != src_server {
+                        st.comm.add(1, (8 + v.byte_size()) as u64);
+                    }
+                }
+                agg_parts.push(std::mem::take(&mut out.pattern_part));
+                int_parts.push(std::mem::take(&mut out.int_part));
+
+                // Frontier shuffle accounting: worker-local frontiers are
+                // serialized and merged at their owners.
+                if cfg.use_odag {
+                    st.comm.add(
+                        out.frontier_odag.by_pattern.len() as u64,
+                        out.frontier_odag.byte_size() as u64,
+                    );
+                    merged_odags.merge(&out.frontier_odag);
+                } else {
+                    st.comm.add(out.frontier_added, out.local_list_bytes());
+                    merged_list.extend(out.frontier_list);
+                }
+            }
+
+            // Global aggregates for the NEXT step's α / readAggregate.
+            let step_pattern_aggs = agg::merge_global(agg_parts);
+            let step_int_aggs: HashMap<i64, AggVal> = {
+                let mut out: HashMap<i64, AggVal> = HashMap::new();
+                for part in int_parts {
+                    for (k, v) in part {
+                        match out.get_mut(&k) {
+                            Some(cur) => cur.merge(v),
+                            None => {
+                                out.insert(k, v);
+                            }
+                        }
+                    }
+                }
+                out
+            };
+            // Aggregate broadcast: replicated to every other server.
+            let agg_bytes: u64 = step_pattern_aggs
+                .iter()
+                .map(|(k, v)| (k.byte_size() + v.byte_size()) as u64)
+                .sum::<u64>()
+                + step_int_aggs.values().map(|v| 8 + v.byte_size() as u64).sum::<u64>();
+            st.comm.add(
+                (step_pattern_aggs.len() + step_int_aggs.len()) as u64
+                    * (cfg.servers as u64 - 1),
+                agg_bytes * (cfg.servers as u64 - 1),
+            );
+
+            // History for report().
+            for (k, v) in &step_pattern_aggs {
+                match pattern_history.get_mut(k) {
+                    Some(cur) => cur.merge(v.clone()),
+                    None => {
+                        pattern_history.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+            for (k, v) in &step_int_aggs {
+                match int_history.get_mut(k) {
+                    Some(cur) => cur.merge(v.clone()),
+                    None => {
+                        int_history.insert(*k, v.clone());
+                    }
+                }
+            }
+            prev_pattern_aggs = step_pattern_aggs;
+            prev_int_aggs = step_int_aggs;
+
+            // Next frontier + broadcast accounting (paper: each
+            // per-pattern global ODAG is replicated at every worker —
+            // i.e. once per *server* over the network).
+            // Either representation is merged and replicated at every
+            // worker (paper §5.2: partitioning happens at extraction), so
+            // both pay the broadcast — ODAGs just pay far fewer bytes.
+            frontier = if cfg.use_odag {
+                st.frontier_bytes = merged_odags.byte_size() as u64;
+                st.comm.add(
+                    merged_odags.by_pattern.len() as u64 * (cfg.servers as u64 - 1),
+                    st.frontier_bytes * (cfg.servers as u64 - 1),
+                );
+                Frontier::Odag(merged_odags)
+            } else {
+                st.frontier_bytes = st.list_bytes;
+                st.comm.add(
+                    (!merged_list.is_empty()) as u64 * (cfg.servers as u64 - 1),
+                    st.frontier_bytes * (cfg.servers as u64 - 1),
+                );
+                Frontier::List(merged_list)
+            };
+
+            peak_frontier_bytes = peak_frontier_bytes.max(st.frontier_bytes);
+            candidates_total += st.candidates;
+            comm_total.merge(&st.comm);
+            phases_total.merge(&st.phases);
+            st.merge_wall = t_merge.elapsed();
+            st.sim_wall = st.busy_max + st.merge_wall;
+            st.wall = t_step.elapsed();
+            steps.push(st);
+            step += 1;
+        }
+
+        // ---- end of computation: reduce output aggregation ----------
+        let mut out_parts = Vec::with_capacity(w);
+        let mut agg_stats = AggStats::default();
+        for s in &mut states {
+            out_parts.push(s.output_agg.flush());
+            agg_stats.mapped += s.pattern_agg.stats.mapped + s.output_agg.stats.mapped;
+            agg_stats.canonize_calls +=
+                s.pattern_agg.stats.canonize_calls + s.output_agg.stats.canonize_calls;
+            agg_stats.quick_patterns +=
+                s.pattern_agg.stats.quick_patterns + s.output_agg.stats.quick_patterns;
+        }
+        let pattern_output = agg::merge_global(out_parts);
+
+        let aggregates = RunAggregates {
+            pattern_history,
+            pattern_output,
+            int_history,
+        };
+        app.report(g, &aggregates, sink.as_ref());
+        let _ = sink.finish();
+
+        let canonical_patterns = aggregates
+            .pattern_history
+            .len()
+            .max(aggregates.pattern_output.len()) as u64;
+
+        let sim_wall = steps.iter().map(|s| s.sim_wall).sum();
+        RunResult {
+            steps,
+            wall: t_run.elapsed(),
+            sim_wall,
+            num_outputs: sink.count(),
+            processed: processed_total,
+            candidates: candidates_total,
+            comm: comm_total,
+            phases: phases_total,
+            agg_stats,
+            canonical_patterns,
+            peak_frontier_bytes,
+            aggregates,
+        }
+    }
+}
+
+/// Deterministic owner worker for an aggregation key.
+fn owner_of(p: &Pattern, workers: usize) -> usize {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    p.hash(&mut h);
+    (h.finish() % workers as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::cliques::Cliques;
+    use crate::apps::motifs::Motifs;
+    use crate::graph::gen;
+
+    #[test]
+    fn config_workers() {
+        assert_eq!(Config::new(4, 8).workers(), 32);
+    }
+
+    #[test]
+    fn cliques_on_k5_all_worker_counts() {
+        // K5 has C(5,2)=10 + C(5,3)=10 + C(5,4)=5 cliques of sizes 2..4.
+        let g = gen::small("k5").unwrap();
+        for (servers, threads) in [(1, 1), (1, 4), (2, 2), (3, 3)] {
+            let r = Cluster::new(Config::new(servers, threads)).run(&g, &Cliques::new(4));
+            assert_eq!(r.num_outputs, 25, "servers={servers} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn odag_and_list_agree() {
+        let g = gen::erdos_renyi(40, 120, 2, 1, 3);
+        let app = Motifs::new(3);
+        let a = Cluster::new(Config::new(2, 2).with_odag(true)).run(&g, &app);
+        let b = Cluster::new(Config::new(2, 2).with_odag(false)).run(&g, &app);
+        assert_eq!(a.processed, b.processed);
+        assert_eq!(a.total_frontier(), b.total_frontier());
+    }
+
+    #[test]
+    fn two_level_toggle_agrees() {
+        let g = gen::erdos_renyi(30, 90, 3, 1, 11);
+        let app = Motifs::new(3);
+        let a = Cluster::new(Config::new(1, 4).with_two_level(true)).run(&g, &app);
+        let b = Cluster::new(Config::new(1, 4).with_two_level(false)).run(&g, &app);
+        assert_eq!(a.processed, b.processed);
+        // Same final counts per motif.
+        let mut av: Vec<_> = a.aggregates.pattern_output.iter()
+            .map(|(k, v)| (k.clone(), v.as_long())).collect();
+        let mut bv: Vec<_> = b.aggregates.pattern_output.iter()
+            .map(|(k, v)| (k.clone(), v.as_long())).collect();
+        av.sort();
+        bv.sort();
+        assert_eq!(av, bv);
+        // But far fewer canonization calls with two-level on.
+        assert!(a.agg_stats.canonize_calls < b.agg_stats.canonize_calls);
+    }
+
+    #[test]
+    fn step_stats_recorded() {
+        let g = gen::small("k5").unwrap();
+        let r = Cluster::new(Config::new(1, 2)).run(&g, &Cliques::new(3));
+        assert_eq!(r.steps.len(), 3); // sizes 1, 2, 3
+        assert!(r.steps[0].frontier > 0);
+        assert!(r.peak_frontier_bytes > 0);
+        assert!(r.wall.as_nanos() > 0);
+    }
+
+    #[test]
+    fn comm_zero_on_single_server_aggs() {
+        // With one server there is no cross-server aggregation traffic;
+        // ODAG "merge" messages are still counted (they model the
+        // map-reduce step) but broadcast bytes must be zero.
+        let g = gen::small("k5").unwrap();
+        let r = Cluster::new(Config::new(1, 4)).run(&g, &Cliques::new(3));
+        // Broadcast terms multiply by (servers-1) == 0; merge terms remain.
+        let r2 = Cluster::new(Config::new(2, 2)).run(&g, &Cliques::new(3));
+        assert!(r2.comm.bytes > r.comm.bytes);
+    }
+}

@@ -1,0 +1,265 @@
+//! Per-worker superstep execution (the inner loop of paper Algorithm 1).
+
+use std::collections::HashMap;
+
+use crate::agg::{AggVal, IntAggregator, PatternAggregator};
+use crate::api::{Ctx, GraphMiningApp};
+use crate::embedding::{self, Embedding};
+use crate::graph::LabeledGraph;
+use crate::odag::OdagStore;
+use crate::output::OutputSink;
+use crate::pattern::{self, Pattern};
+use crate::stats::{Phase, PhaseTimes};
+
+use super::{Config, Frontier};
+
+/// State a worker keeps across supersteps: its aggregators (with the
+/// quick→canonical cache that makes two-level aggregation amortize) and
+/// the read-side canonization cache.
+pub struct WorkerState {
+    pub pattern_agg: PatternAggregator,
+    pub output_agg: PatternAggregator,
+    pub int_agg: IntAggregator,
+    pub canon_cache: HashMap<Pattern, (Pattern, Vec<u8>)>,
+    pub autos_cache: HashMap<Pattern, Vec<Vec<u8>>>,
+    /// Per-step scratch for applications (see `Ctx::step_memo`).
+    pub step_memo: HashMap<Pattern, i64>,
+}
+
+impl WorkerState {
+    pub fn new(two_level: bool) -> Self {
+        WorkerState {
+            pattern_agg: PatternAggregator::new(two_level),
+            output_agg: PatternAggregator::new(two_level),
+            int_agg: IntAggregator::default(),
+            canon_cache: HashMap::new(),
+            autos_cache: HashMap::new(),
+            step_memo: HashMap::new(),
+        }
+    }
+}
+
+/// What one worker hands back to the coordinator at the barrier.
+#[derive(Default)]
+pub struct WorkerOut {
+    /// Frontier additions, in the representation the run uses.
+    pub frontier_list: Vec<Vec<u32>>,
+    pub frontier_odag: OdagStore,
+    pub frontier_added: u64,
+    /// Bytes the frontier additions occupy as a plain list
+    /// (4-byte length prefix + 4 bytes/word) — Fig 9's comparison series.
+    pub list_bytes: u64,
+    /// Canonical-keyed aggregation flushes for the global merge.
+    pub pattern_part: HashMap<Pattern, AggVal>,
+    pub int_part: HashMap<i64, AggVal>,
+    /// Candidates surviving canonicality (handed to φ).
+    pub candidates: u64,
+    /// Candidates processed by π (passed φ).
+    pub processed: u64,
+    pub phases: PhaseTimes,
+    /// This worker's total compute time for the step.
+    pub busy: std::time::Duration,
+}
+
+impl WorkerOut {
+    pub fn local_list_bytes(&self) -> u64 {
+        self.frontier_list.iter().map(|w| 4 + 4 * w.len() as u64).sum()
+    }
+}
+
+/// Execute worker `wid`'s share of one superstep.
+#[allow(clippy::too_many_arguments)]
+pub fn run_step(
+    wid: usize,
+    cfg: &Config,
+    g: &LabeledGraph,
+    app: &dyn GraphMiningApp,
+    frontier: &Frontier,
+    prev_pattern_aggs: &HashMap<Pattern, AggVal>,
+    prev_int_aggs: &HashMap<i64, AggVal>,
+    state: &mut WorkerState,
+    sink: &dyn OutputSink,
+    step: usize,
+) -> WorkerOut {
+    let mode = app.mode();
+    let w = cfg.workers();
+    let mut out = WorkerOut::default();
+    let mut phases = PhaseTimes::default();
+    let cpu0 = crate::stats::thread_cpu_time();
+    // New superstep: previous-step aggregates changed, app memos expire.
+    state.step_memo.clear();
+
+    // ---- R: extract this worker's partition of I -------------------
+    let parents: Vec<Vec<u32>> = phases.timed(Phase::Read, || match frontier {
+        Frontier::Init => Vec::new(),
+        Frontier::List(all) => {
+            // Round-robin blocks of `block` embeddings (paper §5.3).
+            let b = cfg.block as usize;
+            all.iter()
+                .enumerate()
+                .filter(|(i, _)| (i / b) % w == wid)
+                .map(|(_, e)| e.clone())
+                .collect()
+        }
+        Frontier::Odag(store) => {
+            let mut mine = Vec::new();
+            // Deterministic pattern order + one global path-index space,
+            // so round-robin blocks interleave across patterns (a single
+            // pattern smaller than one block would otherwise put all its
+            // work on one worker).
+            let mut pats: Vec<&Pattern> = store.by_pattern.keys().collect();
+            pats.sort_unstable();
+            let mut offset = 0u64;
+            for pat in pats {
+                let odag = &store.by_pattern[pat];
+                offset = odag.enumerate_from(g, mode, wid, w, cfg.block, offset, |words| {
+                    // Drop spurious sequences whose quick pattern differs
+                    // from this ODAG's pattern: such an embedding lives in
+                    // (and is extracted from) its own pattern's ODAG —
+                    // without this check it would be processed twice.
+                    let e = Embedding::new(words.to_vec());
+                    if pattern::quick_pattern(g, &e, mode) == *pat {
+                        mine.push(e.words);
+                    }
+                });
+            }
+            mine
+        }
+    });
+
+    let mut ctx = Ctx {
+        step,
+        prev_pattern_aggs,
+        prev_int_aggs,
+        pattern_agg: &mut state.pattern_agg,
+        output_agg: &mut state.output_agg,
+        int_agg: &mut state.int_agg,
+        sink,
+        canon_cache: &mut state.canon_cache,
+        current_quick: None,
+        autos_cache: &mut state.autos_cache,
+        step_memo: &mut state.step_memo,
+    };
+
+    // A closure would fight the borrow checker here; keep the candidate
+    // handling inline in both branches instead.
+    // `$pquick`/`$pverts`: the parent's quick pattern and visit-order
+    // vertex list, computed once per parent — each child's quick pattern
+    // derives from them in O(k) instead of an O(k^2) rescan.
+    macro_rules! handle_candidate {
+        ($parent:expr, $word:expr, $pquick:expr, $pverts:expr) => {{
+            let child = Embedding::new({
+                let mut v = Vec::with_capacity($parent.len() + 1);
+                v.extend_from_slice($parent);
+                v.push($word);
+                v
+            });
+            out.candidates += 1;
+            // U: φ first — most candidates die here in pruning apps, so
+            // the quick pattern is computed only for survivors.
+            ctx.current_quick = None;
+            let keep = phases.timed(Phase::User, || app.filter(g, &child, &mut ctx));
+            if keep {
+                out.processed += 1;
+                // P: child quick pattern by incremental extension.
+                let quick = phases.timed(Phase::PatternAgg, || {
+                    pattern::quick_pattern_extend(g, $pquick, $pverts, $word, mode).0
+                });
+                ctx.current_quick = Some(quick);
+                // U: π + termination filter in one timed section (the
+                // per-call clock overhead is visible at millions of
+                // candidates per step).
+                let expand = phases.timed(Phase::User, || {
+                    app.process(g, &child, &mut ctx);
+                    app.should_expand(g, &child)
+                });
+                if expand {
+                    // W: store into the frontier representation.
+                    phases.timed(Phase::Write, || {
+                        if cfg.use_odag {
+                            let quick = ctx.current_quick.as_ref().unwrap();
+                            out.frontier_odag.add(quick, &child.words);
+                        } else {
+                            out.frontier_list.push(child.words.clone());
+                        }
+                    });
+                    out.frontier_added += 1;
+                    out.list_bytes += 4 + 4 * child.words.len() as u64;
+                }
+            }
+            ctx.current_quick = None;
+        }};
+    }
+
+    match frontier {
+        Frontier::Init => {
+            // Step 1: the "undefined" embedding expands to all words.
+            let words = embedding::initial_candidates(g, mode);
+            let b = cfg.block as usize;
+            let empty: [u32; 0] = [];
+            let empty_quick = Pattern::new(vec![], vec![]);
+            let empty_verts: [u32; 0] = [];
+            for (i, word) in words.into_iter().enumerate() {
+                if (i / b) % w != wid {
+                    continue;
+                }
+                handle_candidate!(&empty, word, &empty_quick, &empty_verts);
+            }
+        }
+        _ => {
+            for parent_words in &parents {
+                let parent = Embedding::new(parent_words.clone());
+                // Parent quick pattern + visit-order vertices: reused by
+                // α and by every child's incremental quick pattern.
+                let (parent_quick, parent_verts) = phases.timed(Phase::PatternAgg, || {
+                    (pattern::quick_pattern(g, &parent, mode), parent.vertices(g, mode))
+                });
+                ctx.current_quick = Some(parent_quick);
+                // ODAG extraction can surface spurious sequences; re-apply
+                // φ (anti-monotonicity makes the full-embedding check
+                // cover every prefix — see odag module docs).
+                if matches!(frontier, Frontier::Odag(_)) {
+                    let ok = phases.timed(Phase::User, || app.filter(g, &parent, &mut ctx));
+                    if !ok {
+                        ctx.current_quick = None;
+                        continue;
+                    }
+                }
+                // α with the aggregates of the parent's generation step.
+                let alpha =
+                    phases.timed(Phase::User, || app.aggregation_filter(g, &parent, &mut ctx));
+                if !alpha {
+                    ctx.current_quick = None;
+                    continue;
+                }
+                phases.timed(Phase::User, || app.aggregation_process(g, &parent, &mut ctx));
+                let parent_quick = ctx.current_quick.take().unwrap();
+
+                // G: extension candidates.
+                let exts =
+                    phases.timed(Phase::Generate, || embedding::extensions(g, &parent, mode));
+                // C: canonicality filter (the per-candidate hot path).
+                let canonical: Vec<u32> = phases.timed(Phase::Canonicality, || {
+                    exts.into_iter()
+                        .filter(|&x| {
+                            embedding::is_canonical_extension(g, mode, parent_words, x)
+                        })
+                        .collect()
+                });
+                for x in canonical {
+                    handle_candidate!(parent_words, x, &parent_quick, &parent_verts);
+                }
+            }
+        }
+    }
+
+    drop(ctx);
+
+    // ---- P: flush current-step aggregation (canonize quick patterns) --
+    out.pattern_part = phases.timed(Phase::PatternAgg, || state.pattern_agg.flush());
+    out.int_part = state.int_agg.flush();
+    out.phases = phases;
+    // Thread CPU time, not wall: workers may share cores (see stats).
+    out.busy = crate::stats::thread_cpu_time().saturating_sub(cpu0);
+    out
+}

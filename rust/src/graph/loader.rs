@@ -1,0 +1,198 @@
+//! On-disk graph formats.
+//!
+//! Primary format is the one used by the original Arabesque release
+//! (one line per vertex):
+//!
+//! ```text
+//! <vertex id> <vertex label> [<neighbor id> ...]
+//! ```
+//!
+//! plus an extended variant with edge labels
+//! (`<neighbor id>:<edge label>`), and a plain edge-list format
+//! (`u v [label]` per line, `# v <id> <label>` lines for vertex labels).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Label, LabeledGraph, VertexId};
+
+/// Load the Arabesque vertex-per-line format (see module docs).
+pub fn load_arabesque(path: &Path) -> Result<LabeledGraph> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    parse_arabesque(BufReader::new(f))
+}
+
+/// Parse the Arabesque format from any reader (exposed for tests).
+pub fn parse_arabesque<R: BufRead>(r: R) -> Result<LabeledGraph> {
+    let mut vlabels: Vec<(VertexId, Label)> = Vec::new();
+    let mut edges: Vec<(VertexId, VertexId, Label)> = Vec::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut tok = line.split_whitespace();
+        let vid: VertexId = tok
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad vertex id", lineno + 1))?;
+        let vlabel: Label = tok
+            .next()
+            .with_context(|| format!("line {}: missing vertex label", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad vertex label", lineno + 1))?;
+        vlabels.push((vid, vlabel));
+        for t in tok {
+            let (nid, elabel) = match t.split_once(':') {
+                Some((n, l)) => (
+                    n.parse().with_context(|| format!("line {}: bad neighbor", lineno + 1))?,
+                    l.parse().with_context(|| format!("line {}: bad edge label", lineno + 1))?,
+                ),
+                None => (
+                    t.parse().with_context(|| format!("line {}: bad neighbor", lineno + 1))?,
+                    0,
+                ),
+            };
+            edges.push((vid, nid, elabel));
+        }
+    }
+    vlabels.sort_unstable_by_key(|&(v, _)| v);
+    for (i, &(v, _)) in vlabels.iter().enumerate() {
+        if v as usize != i {
+            bail!("vertex ids must be dense 0..n, missing or duplicate id near {v}");
+        }
+    }
+    let labels: Vec<Label> = vlabels.into_iter().map(|(_, l)| l).collect();
+    Ok(LabeledGraph::from_edges(labels, &edges))
+}
+
+/// Write a graph in the Arabesque vertex-per-line format (with edge
+/// labels when any edge label is nonzero).
+pub fn save_arabesque(g: &LabeledGraph, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let edge_labels = g.edges().iter().any(|e| e.label != 0);
+    for v in 0..g.num_vertices() as VertexId {
+        write!(w, "{} {}", v, g.vertex_label(v))?;
+        for &(u, eid) in g.neighbors(v) {
+            if edge_labels {
+                write!(w, " {}:{}", u, g.edge(eid).label)?;
+            } else {
+                write!(w, " {}", u)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Load a plain edge list: `u v [edge label]` lines; optional
+/// `# v <id> <label>` lines assign vertex labels (default label 0).
+pub fn load_edge_list(path: &Path) -> Result<LabeledGraph> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut max_v: i64 = -1;
+    let mut vlabel_pairs: Vec<(VertexId, Label)> = Vec::new();
+    let mut edges: Vec<(VertexId, VertexId, Label)> = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# v ") {
+            let mut tok = rest.split_whitespace();
+            let id: VertexId = tok.next().context("bad # v line")?.parse()?;
+            let lab: Label = tok.next().context("bad # v line")?.parse()?;
+            vlabel_pairs.push((id, lab));
+            max_v = max_v.max(id as i64);
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let mut tok = line.split_whitespace();
+        let u: VertexId = tok
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad source", lineno + 1))?;
+        let v: VertexId = tok
+            .next()
+            .with_context(|| format!("line {}: missing target", lineno + 1))?
+            .parse()?;
+        let l: Label = match tok.next() {
+            Some(t) => t.parse()?,
+            None => 0,
+        };
+        max_v = max_v.max(u as i64).max(v as i64);
+        edges.push((u, v, l));
+    }
+    let n = (max_v + 1) as usize;
+    let mut vlabels = vec![0 as Label; n];
+    for (id, lab) in vlabel_pairs {
+        vlabels[id as usize] = lab;
+    }
+    Ok(LabeledGraph::from_edges(vlabels, &edges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_simple() {
+        let text = "0 3 1 2\n1 4 0\n2 5 0\n";
+        let g = parse_arabesque(Cursor::new(text)).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.vertex_label(0), 3);
+        assert!(g.is_neighbor(0, 2));
+    }
+
+    #[test]
+    fn parse_edge_labels() {
+        let text = "0 1 1:7\n1 2 0:7\n";
+        let g = parse_arabesque(Cursor::new(text)).unwrap();
+        assert_eq!(g.edge(g.edge_between(0, 1).unwrap()).label, 7);
+    }
+
+    #[test]
+    fn parse_rejects_sparse_ids() {
+        let text = "0 1\n5 1\n";
+        assert!(parse_arabesque(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn parse_skips_comments_blank() {
+        let text = "# header\n\n0 1 1\n1 1 0\n";
+        let g = parse_arabesque(Cursor::new(text)).unwrap();
+        assert_eq!(g.num_vertices(), 2);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let g = crate::graph::gen::erdos_renyi(40, 80, 3, 1, 99);
+        let dir = std::env::temp_dir().join(format!("arab_loader_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.graph");
+        save_arabesque(&g, &p).unwrap();
+        let h = load_arabesque(&p).unwrap();
+        assert_eq!(g.num_vertices(), h.num_vertices());
+        assert_eq!(g.num_edges(), h.num_edges());
+        for v in 0..g.num_vertices() as VertexId {
+            assert_eq!(g.vertex_label(v), h.vertex_label(v));
+            assert_eq!(
+                g.neighbors(v).iter().map(|&(u, _)| u).collect::<Vec<_>>(),
+                h.neighbors(v).iter().map(|&(u, _)| u).collect::<Vec<_>>()
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,342 @@
+//! The immutable, labeled input graph (paper §2).
+//!
+//! Arabesque workers each hold a read-only copy of the whole input graph
+//! with incremental numeric ids (paper §4.3); this module is that copy:
+//! a CSR adjacency with vertex labels, plus an explicit undirected edge
+//! table (edge ids are the unit of edge-based exploration).
+
+pub mod gen;
+pub mod loader;
+
+use std::fmt;
+
+/// Vertex id (incremental, dense).
+pub type VertexId = u32;
+/// Edge id (incremental, dense; one id per *undirected* edge).
+pub type EdgeId = u32;
+/// Label (arbitrary domain-specific attribute; 0 is a valid label).
+pub type Label = u32;
+
+/// One undirected edge; `src < dst` always holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub src: VertexId,
+    pub dst: VertexId,
+    pub label: Label,
+}
+
+impl Edge {
+    /// The endpoint that is not `v`. Panics if `v` is not an endpoint.
+    pub fn other(&self, v: VertexId) -> VertexId {
+        if v == self.src {
+            self.dst
+        } else {
+            debug_assert_eq!(v, self.dst);
+            self.src
+        }
+    }
+
+    pub fn touches(&self, v: VertexId) -> bool {
+        self.src == v || self.dst == v
+    }
+
+    /// Do two edges share an endpoint?
+    pub fn incident(&self, other: &Edge) -> bool {
+        self.touches(other.src) || self.touches(other.dst)
+    }
+}
+
+/// Immutable labeled undirected graph in CSR form.
+///
+/// Neighbor lists are sorted by vertex id, enabling `O(log d)` adjacency
+/// tests — the single most frequent operation in canonicality checking
+/// and clique filtering.
+#[derive(Clone)]
+pub struct LabeledGraph {
+    vlabels: Vec<Label>,
+    /// CSR offsets into `adj`; length = |V| + 1.
+    offsets: Vec<usize>,
+    /// (neighbor vertex, incident edge id), sorted by neighbor id.
+    adj: Vec<(VertexId, EdgeId)>,
+    edges: Vec<Edge>,
+    /// Number of distinct vertex labels (cached for generators/stats).
+    n_vlabels: u32,
+}
+
+impl LabeledGraph {
+    /// Build from vertex labels and an undirected edge list.
+    ///
+    /// Self-loops are rejected; duplicate edges are deduplicated (first
+    /// label wins), matching the paper's simple-graph assumption.
+    pub fn from_edges(vlabels: Vec<Label>, edge_list: &[(VertexId, VertexId, Label)]) -> Self {
+        let n = vlabels.len();
+        let mut norm: Vec<(VertexId, VertexId, Label)> = edge_list
+            .iter()
+            .filter(|&&(u, v, _)| u != v)
+            .map(|&(u, v, l)| if u < v { (u, v, l) } else { (v, u, l) })
+            .collect();
+        norm.sort_unstable_by_key(|&(u, v, _)| (u, v));
+        norm.dedup_by_key(|&mut (u, v, _)| (u, v));
+
+        let edges: Vec<Edge> = norm
+            .iter()
+            .map(|&(u, v, l)| {
+                assert!((v as usize) < n, "edge endpoint {v} out of range (|V|={n})");
+                Edge { src: u, dst: v, label: l }
+            })
+            .collect();
+
+        let mut deg = vec![0usize; n];
+        for e in &edges {
+            deg[e.src as usize] += 1;
+            deg[e.dst as usize] += 1;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0);
+        for d in &deg {
+            offsets.push(offsets.last().unwrap() + d);
+        }
+        let mut adj = vec![(0u32, 0u32); offsets[n]];
+        let mut cursor = offsets.clone();
+        for (eid, e) in edges.iter().enumerate() {
+            adj[cursor[e.src as usize]] = (e.dst, eid as EdgeId);
+            cursor[e.src as usize] += 1;
+            adj[cursor[e.dst as usize]] = (e.src, eid as EdgeId);
+            cursor[e.dst as usize] += 1;
+        }
+        for v in 0..n {
+            adj[offsets[v]..offsets[v + 1]].sort_unstable_by_key(|&(u, _)| u);
+        }
+        let n_vlabels = vlabels.iter().copied().max().map_or(0, |m| m + 1);
+        LabeledGraph { vlabels, offsets, adj, edges, n_vlabels }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.vlabels.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn num_vertex_labels(&self) -> u32 {
+        self.n_vlabels
+    }
+
+    pub fn vertex_label(&self, v: VertexId) -> Label {
+        self.vlabels[v as usize]
+    }
+
+    pub fn edge(&self, e: EdgeId) -> &Edge {
+        &self.edges[e as usize]
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// `(neighbor, edge id)` pairs sorted by neighbor id.
+    pub fn neighbors(&self, v: VertexId) -> &[(VertexId, EdgeId)] {
+        &self.adj[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    /// Adjacency test via binary search on the sorted neighbor list.
+    pub fn is_neighbor(&self, u: VertexId, v: VertexId) -> bool {
+        let (a, b) = if self.degree(u) <= self.degree(v) { (u, v) } else { (v, u) };
+        self.neighbors(a).binary_search_by_key(&b, |&(w, _)| w).is_ok()
+    }
+
+    /// The edge id between `u` and `v`, if adjacent.
+    pub fn edge_between(&self, u: VertexId, v: VertexId) -> Option<EdgeId> {
+        self.neighbors(u)
+            .binary_search_by_key(&v, |&(w, _)| w)
+            .ok()
+            .map(|i| self.neighbors(u)[i].1)
+    }
+
+    /// Average degree (2|E| / |V|).
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            0.0
+        } else {
+            2.0 * self.num_edges() as f64 / self.num_vertices() as f64
+        }
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// A copy with all vertex and edge labels zeroed. Motif mining
+    /// assumes an unlabeled input graph (paper §2), and the paper's
+    /// Cliques runs likewise see a single structural pattern per step —
+    /// label-free patterns are what make per-pattern ODAGs few and large.
+    pub fn unlabeled(&self) -> LabeledGraph {
+        let edges: Vec<(VertexId, VertexId, Label)> =
+            self.edges.iter().map(|e| (e.src, e.dst, 0)).collect();
+        LabeledGraph::from_edges(vec![0; self.num_vertices()], &edges)
+    }
+
+    /// Dense f32 adjacency padded to `n >= |V|` (input tile for the
+    /// PJRT census executor; padding rows are zero, see model.py).
+    pub fn dense_adjacency(&self, n: usize) -> Vec<f32> {
+        assert!(
+            n >= self.num_vertices(),
+            "tile {n} smaller than |V|={}",
+            self.num_vertices()
+        );
+        let mut a = vec![0f32; n * n];
+        for e in &self.edges {
+            a[e.src as usize * n + e.dst as usize] = 1.0;
+            a[e.dst as usize * n + e.src as usize] = 1.0;
+        }
+        a
+    }
+
+    /// Exact triangle count by enumeration (oracle for the census path).
+    pub fn triangle_count(&self) -> u64 {
+        let mut t = 0u64;
+        for e in &self.edges {
+            let (u, v) = (e.src, e.dst);
+            // Count common neighbors w with w > v > u to count each once.
+            for &(w, _) in self.neighbors(v) {
+                if w > v && self.is_neighbor(u, w) {
+                    t += 1;
+                }
+            }
+        }
+        t
+    }
+
+    /// Exact wedge count: sum over vertices of C(deg, 2).
+    pub fn wedge_count(&self) -> u64 {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| {
+                let d = self.degree(v) as u64;
+                d * d.saturating_sub(1) / 2
+            })
+            .sum()
+    }
+}
+
+impl fmt::Debug for LabeledGraph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "LabeledGraph(|V|={}, |E|={}, labels={}, avg_deg={:.1})",
+            self.num_vertices(),
+            self.num_edges(),
+            self.n_vlabels,
+            self.avg_degree()
+        )
+    }
+}
+
+#[cfg(test)]
+#[allow(dead_code)]
+pub(crate) fn tiny_paper_graph() -> LabeledGraph {
+    // The running example of paper Fig. 2: a path 1-2-3-4 where
+    // {1,3} are "blue" (label 0) and {2,4} are "yellow" (label 1),
+    // plus the edge (1,3) making {1,2,3} NOT vertex-induced-complete.
+    // Vertex ids here are 0-based: 0,1,2,3.
+    LabeledGraph::from_edges(
+        vec![0, 1, 0, 1],
+        &[(0, 1, 0), (1, 2, 0), (2, 3, 0), (0, 2, 0)],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_tail() -> LabeledGraph {
+        // 0-1, 1-2, 0-2 (triangle), 2-3 (tail)
+        LabeledGraph::from_edges(vec![0, 0, 1, 1], &[(0, 1, 5), (1, 2, 5), (0, 2, 5), (2, 3, 5)])
+    }
+
+    #[test]
+    fn csr_shape() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.avg_degree(), 2.0);
+        assert_eq!(g.max_degree(), 3);
+    }
+
+    #[test]
+    fn neighbors_sorted_and_adjacency() {
+        let g = triangle_plus_tail();
+        let n: Vec<VertexId> = g.neighbors(2).iter().map(|&(v, _)| v).collect();
+        assert_eq!(n, vec![0, 1, 3]);
+        assert!(g.is_neighbor(0, 1));
+        assert!(g.is_neighbor(1, 0));
+        assert!(!g.is_neighbor(0, 3));
+    }
+
+    #[test]
+    fn edge_ids_consistent() {
+        let g = triangle_plus_tail();
+        let e = g.edge_between(0, 2).unwrap();
+        assert_eq!(g.edge(e).src, 0);
+        assert_eq!(g.edge(e).dst, 2);
+        assert_eq!(g.edge(e).label, 5);
+        assert_eq!(g.edge_between(0, 3), None);
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = LabeledGraph::from_edges(vec![0, 0], &[(0, 1, 1), (1, 0, 2), (0, 0, 3)]);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn triangle_and_wedge_counts() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.triangle_count(), 1);
+        // deg = [2,2,3,1] -> wedges = 1+1+3+0 = 5
+        assert_eq!(g.wedge_count(), 5);
+    }
+
+    #[test]
+    fn dense_adjacency_padded() {
+        let g = triangle_plus_tail();
+        let a = g.dense_adjacency(8);
+        assert_eq!(a.len(), 64);
+        assert_eq!(a[0 * 8 + 1], 1.0);
+        assert_eq!(a[1 * 8 + 0], 1.0);
+        assert_eq!(a[0 * 8 + 3], 0.0);
+        assert!(a[4 * 8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn unlabeled_strips_labels_keeps_structure() {
+        let g = triangle_plus_tail();
+        let u = g.unlabeled();
+        assert_eq!(u.num_vertices(), g.num_vertices());
+        assert_eq!(u.num_edges(), g.num_edges());
+        assert_eq!(u.num_vertex_labels(), 1);
+        assert!(u.edges().iter().all(|e| e.label == 0));
+        assert_eq!(u.triangle_count(), g.triangle_count());
+    }
+
+    #[test]
+    fn edge_helpers() {
+        let e = Edge { src: 1, dst: 4, label: 0 };
+        assert_eq!(e.other(1), 4);
+        assert_eq!(e.other(4), 1);
+        assert!(e.touches(1) && e.touches(4) && !e.touches(2));
+        let f = Edge { src: 4, dst: 9, label: 0 };
+        let h = Edge { src: 7, dst: 9, label: 0 };
+        assert!(e.incident(&f));
+        assert!(!e.incident(&h));
+    }
+}

@@ -1,0 +1,51 @@
+//! # Arabesque — distributed graph mining, reproduced
+//!
+//! A reproduction of *"Arabesque: A System for Distributed Graph Mining"*
+//! (Teixeira et al., SOSP'15 / QCRI-TR-2015-005) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Arabesque coordinator: the filter–process
+//!   computational model ([`api`]), the BSP exploration engine over a
+//!   simulated multi-server cluster ([`engine`]), coordination-free
+//!   embedding canonicality ([`embedding`]), ODAG compressed frontier
+//!   storage ([`odag`]), two-level pattern aggregation ([`agg`]), the
+//!   three paper applications ([`apps`]) and the TLV / TLP / centralized
+//!   baselines ([`baselines`]).
+//! * **L2/L1 (python/, build-time only)** — the structural census
+//!   (motif-3 counts + degree moments) as a JAX model around a Pallas
+//!   masked-matmul-reduce kernel, AOT-lowered to HLO text in
+//!   `artifacts/` and executed from Rust through PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment
+//! index mapping every table and figure of the paper to a bench target.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use arabesque::graph::gen;
+//! use arabesque::apps::cliques::Cliques;
+//! use arabesque::engine::{Cluster, Config};
+//!
+//! let g = gen::dataset("citeseer", 1.0).unwrap();
+//! let cluster = Cluster::new(Config::new(2, 4));
+//! let result = cluster.run(&g, &Cliques::new(4));
+//! println!("cliques: {}", result.num_outputs);
+//! ```
+
+pub mod agg;
+pub mod api;
+pub mod apps;
+pub mod baselines;
+pub mod embedding;
+pub mod engine;
+pub mod graph;
+pub mod odag;
+pub mod output;
+pub mod pattern;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+pub use api::{ExplorationMode, GraphMiningApp};
+pub use engine::{Cluster, Config, RunResult};
+pub use graph::LabeledGraph;

@@ -1,0 +1,264 @@
+//! Arabesque CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! arabesque run    --app cliques --graph mico-s --servers 4 --threads 8
+//! arabesque run    --app fsm --graph citeseer --support 300
+//! arabesque census --graph citeseer            # PJRT vs enumeration
+//! arabesque gen    --graph youtube-s --out /tmp/yt.graph
+//! arabesque info   --graph patents-s
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use arabesque::apps::{Cliques, Fsm, MaximalCliques, Motifs};
+use arabesque::baselines::{tlp::TlpCluster, tlv::TlvCluster};
+use arabesque::engine::{Cluster, Config, RunResult};
+use arabesque::graph::{gen, loader, LabeledGraph};
+use arabesque::output::{CountingSink, FileSink, OutputSink};
+use arabesque::runtime::{CensusExecutor, Motif3Counts};
+use arabesque::util::cli::Args;
+use arabesque::util::{human_bytes, human_count, human_secs};
+use arabesque::GraphMiningApp;
+
+const USAGE: &str = "\
+arabesque <command> [options]
+
+commands:
+  run      run a mining application on the simulated cluster
+  census   run the AOT PJRT census and cross-check against enumeration
+  gen      generate a synthetic dataset and write it to disk
+  info     print dataset statistics
+
+run options:
+  --app <fsm|motifs|cliques|maximal-cliques>   (required)
+  --graph <dataset name or file path>          (default citeseer)
+  --scale <f>            dataset scale factor  (default 1.0)
+  --support <n>          FSM support threshold (default 300)
+  --max-size <n>         max embedding size    (default: motifs 3, cliques 4, fsm unbounded)
+  --servers <n>          simulated servers     (default 1)
+  --threads <n>          threads per server    (default 4)
+  --block <n>            load-balance block    (default 64)
+  --engine <tle|tlv|tlp> paradigm              (default tle)
+  --output <path>        write outputs to a file
+  --no-odag              store frontiers as plain embedding lists
+  --one-level            disable two-level pattern aggregation
+  --keep-labels          keep vertex labels for motifs/cliques
+  --stats                print per-step statistics
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &["no-odag", "one-level", "stats", "help", "keep-labels"])?;
+    if args.flag("help") || args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "run" => cmd_run(&args),
+        "census" => cmd_census(&args),
+        "gen" => cmd_gen(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+/// Load `--graph`: a known dataset name, or a path to a graph file.
+fn load_graph(args: &Args) -> Result<LabeledGraph> {
+    let name = args.get_or("graph", "citeseer");
+    let scale = args.get_f64("scale", 1.0)?;
+    if Path::new(name).exists() {
+        return loader::load_arabesque(Path::new(name))
+            .or_else(|_| loader::load_edge_list(Path::new(name)))
+            .with_context(|| format!("load graph file {name}"));
+    }
+    gen::dataset(name, scale)
+}
+
+fn make_sink(args: &Args) -> Result<Arc<dyn OutputSink>> {
+    Ok(match args.get("output") {
+        Some(p) => Arc::new(FileSink::create(Path::new(p))?),
+        None => Arc::new(CountingSink::default()),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut g = load_graph(args)?;
+    // Motif mining assumes an unlabeled input graph (paper §2), and
+    // Cliques are purely structural; strip labels unless asked not to.
+    let app_name_peek = args.get("app").unwrap_or("");
+    if matches!(app_name_peek, "motifs" | "cliques" | "maximal-cliques")
+        && !args.flag("keep-labels")
+    {
+        g = g.unlabeled();
+    }
+    let servers = args.get_usize("servers", 1)?;
+    let threads = args.get_usize("threads", 4)?;
+    let cfg = Config::new(servers, threads)
+        .with_odag(!args.flag("no-odag"))
+        .with_two_level(!args.flag("one-level"))
+        .with_block(args.get_u64("block", 64)?);
+    let support = args.get_usize("support", 300)?;
+    let app_name = args.get("app").context("--app is required")?;
+
+    let app: Box<dyn GraphMiningApp> = match app_name {
+        "fsm" => {
+            let mut fsm = Fsm::new(support);
+            if let Some(ms) = args.get("max-size") {
+                fsm = fsm.with_max_edges(ms.parse()?);
+            }
+            Box::new(fsm)
+        }
+        "motifs" => Box::new(Motifs::new(args.get_usize("max-size", 3)?)),
+        "cliques" => Box::new(Cliques::new(args.get_usize("max-size", 4)?)),
+        "maximal-cliques" => Box::new(MaximalCliques::new(args.get_usize("max-size", 5)?)),
+        other => bail!("unknown app {other:?}"),
+    };
+
+    println!("graph: {g:?}");
+    match args.get_or("engine", "tle") {
+        "tle" => {
+            let sink = make_sink(args)?;
+            let cluster = Cluster::new(cfg);
+            let r = cluster.run_with_sink(&g, app.as_ref(), sink);
+            print_run(&r, args.flag("stats"));
+        }
+        "tlv" => {
+            let r = TlvCluster::new(servers * threads).run(&g, app.as_ref());
+            println!(
+                "TLV: wall={} processed={} messages={} outputs={}",
+                human_secs(r.wall.as_secs_f64()),
+                human_count(r.processed),
+                human_count(r.messages),
+                human_count(r.num_outputs),
+            );
+        }
+        "tlp" => {
+            if app_name != "fsm" {
+                bail!("the TLP baseline implements FSM only");
+            }
+            let max_edges = args.get_usize("max-size", 3)?;
+            let r = TlpCluster::new(servers * threads).run_fsm(&g, support, max_edges);
+            println!(
+                "TLP: wall={} frequent={} messages={} patterns/level={:?}",
+                human_secs(r.wall.as_secs_f64()),
+                r.frequent.len(),
+                human_count(r.messages),
+                r.patterns_per_level,
+            );
+        }
+        other => bail!("unknown engine {other:?}"),
+    }
+    Ok(())
+}
+
+fn print_run(r: &RunResult, per_step: bool) {
+    println!(
+        "done: wall={} steps={} embeddings={} outputs={} msgs={} net={}",
+        human_secs(r.wall.as_secs_f64()),
+        r.steps.len(),
+        human_count(r.processed),
+        human_count(r.num_outputs),
+        human_count(r.comm.messages),
+        human_bytes(r.comm.bytes),
+    );
+    println!(
+        "aggregation: mapped={} quick-patterns={} canonize-calls={} canonical={}",
+        human_count(r.agg_stats.mapped),
+        human_count(r.agg_stats.quick_patterns),
+        human_count(r.agg_stats.canonize_calls),
+        r.canonical_patterns,
+    );
+    let fr: Vec<String> = r
+        .phases
+        .fractions()
+        .iter()
+        .map(|(p, f)| format!("{}={:.0}%", p.letter(), f * 100.0))
+        .collect();
+    println!("cpu breakdown: {}", fr.join(" "));
+    if let Some(rss) = arabesque::stats::peak_rss_bytes() {
+        println!("peak rss: {}", human_bytes(rss));
+    }
+    if per_step {
+        println!(
+            "{:>4} {:>14} {:>14} {:>14} {:>12} {:>12} {:>10}",
+            "step", "candidates", "processed", "frontier", "store-bytes", "list-bytes", "wall"
+        );
+        for s in &r.steps {
+            println!(
+                "{:>4} {:>14} {:>14} {:>14} {:>12} {:>12} {:>10}",
+                s.step,
+                human_count(s.candidates),
+                human_count(s.processed),
+                human_count(s.frontier),
+                human_bytes(s.frontier_bytes),
+                human_bytes(s.list_bytes),
+                human_secs(s.wall.as_secs_f64()),
+            );
+        }
+    }
+}
+
+fn cmd_census(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    println!("graph: {g:?}");
+    let exec = CensusExecutor::load_default()?;
+    println!(
+        "PJRT platform: {} (max tile {})",
+        exec.platform(),
+        exec.max_vertices()
+    );
+    let t0 = std::time::Instant::now();
+    let stats = exec.census(&g)?;
+    let pjrt = Motif3Counts::from_stats(&stats);
+    let t_pjrt = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let enumerated = Motif3Counts::by_enumeration(&g);
+    let t_enum = t1.elapsed();
+    println!(
+        "PJRT census:  edges={} chains={} triangles={} ({})",
+        pjrt.edges,
+        pjrt.chains,
+        pjrt.triangles,
+        human_secs(t_pjrt.as_secs_f64())
+    );
+    println!(
+        "enumeration:  edges={} chains={} triangles={} ({})",
+        enumerated.edges,
+        enumerated.chains,
+        enumerated.triangles,
+        human_secs(t_enum.as_secs_f64())
+    );
+    if pjrt == enumerated {
+        println!("MATCH: the AOT census agrees with L3 enumeration");
+        Ok(())
+    } else {
+        bail!("census mismatch: {pjrt:?} vs {enumerated:?}")
+    }
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let out = PathBuf::from(args.get("out").context("--out is required")?);
+    loader::save_arabesque(&g, &out)?;
+    println!("wrote {g:?} to {}", out.display());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    println!("graph: {g:?}");
+    println!("max degree: {}", g.max_degree());
+    println!("triangles: {}", human_count(g.triangle_count()));
+    println!("wedges: {}", human_count(g.wedge_count()));
+    Ok(())
+}

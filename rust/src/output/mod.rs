@@ -1,0 +1,137 @@
+//! Output sinks (paper §4.1 `output()`): the paper writes to HDFS; here
+//! the sink is pluggable — count-only for benchmarks, in-memory for
+//! tests, buffered files for the CLI.
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A thread-safe sink for application output values.
+pub trait OutputSink: Send + Sync {
+    fn write(&self, value: &str);
+    /// Number of values written so far.
+    fn count(&self) -> u64;
+    /// Flush buffered data (end of run).
+    fn finish(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Counts outputs, discards content — the benchmark default, so output
+/// I/O never pollutes timing comparisons.
+#[derive(Default)]
+pub struct CountingSink {
+    n: std::sync::atomic::AtomicU64,
+}
+
+impl OutputSink for CountingSink {
+    fn write(&self, _value: &str) {
+        self.n.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn count(&self) -> u64 {
+        self.n.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+/// Collects outputs in memory (tests; deterministic when sorted).
+#[derive(Default)]
+pub struct MemorySink {
+    values: Mutex<Vec<String>>,
+}
+
+impl MemorySink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sorted copy of everything written (worker interleaving makes raw
+    /// order nondeterministic).
+    pub fn sorted(&self) -> Vec<String> {
+        let mut v = self.values.lock().unwrap().clone();
+        v.sort();
+        v
+    }
+}
+
+impl OutputSink for MemorySink {
+    fn write(&self, value: &str) {
+        self.values.lock().unwrap().push(value.to_string());
+    }
+
+    fn count(&self) -> u64 {
+        self.values.lock().unwrap().len() as u64
+    }
+}
+
+/// Buffered file sink (the CLI's `--output`).
+pub struct FileSink {
+    w: Mutex<BufWriter<File>>,
+    n: std::sync::atomic::AtomicU64,
+}
+
+impl FileSink {
+    pub fn create(path: &Path) -> Result<Self> {
+        let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        Ok(FileSink {
+            w: Mutex::new(BufWriter::new(f)),
+            n: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+}
+
+impl OutputSink for FileSink {
+    fn write(&self, value: &str) {
+        let mut w = self.w.lock().unwrap();
+        let _ = writeln!(w, "{value}");
+        self.n.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn count(&self) -> u64 {
+        self.n.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn finish(&self) -> Result<()> {
+        self.w.lock().unwrap().flush().context("flush output file")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_sink_counts() {
+        let s = CountingSink::default();
+        s.write("a");
+        s.write("b");
+        assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn memory_sink_sorted() {
+        let s = MemorySink::new();
+        s.write("z");
+        s.write("a");
+        assert_eq!(s.sorted(), vec!["a", "z"]);
+        assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn file_sink_writes_lines() {
+        let dir = std::env::temp_dir().join(format!("arab_sink_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("out.txt");
+        let s = FileSink::create(&p).unwrap();
+        s.write("hello");
+        s.write("world");
+        s.finish().unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(body, "hello\nworld\n");
+        assert_eq!(s.count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,324 @@
+//! Exact graph canonization for small patterns (the bliss [20]
+//! substitute — see DESIGN.md "Substitutions").
+//!
+//! A pattern's canonical form is the permutation of its vertices that
+//! minimizes the *code* `(vlabels, upper-triangular labeled adjacency)`
+//! compared lexicographically. Branch-and-bound: vertices are placed one
+//! position at a time; a partial placement whose code already exceeds the
+//! best known is pruned. An initial refinement orders candidates by
+//! (label, degree) so good codes are found early.
+//!
+//! Exact for any pattern, practical for the sizes graph mining produces
+//! (every experiment in the paper has patterns of ≤ 7 vertices; two-level
+//! aggregation means this runs once per *quick pattern*, not per
+//! embedding).
+
+use crate::graph::Label;
+
+use super::Pattern;
+
+
+/// Canonical form of `p`: returns `(canonical pattern, perm)` where
+/// `perm[old_position] = canonical_position`.
+///
+/// Properties (checked by property tests):
+/// * `canonicalize(p).0 == canonicalize(p.permuted(σ)).0` for any σ;
+/// * `p.permuted(&perm) == canonical`.
+pub fn canonicalize(p: &Pattern) -> (Pattern, Vec<u8>) {
+    let n = p.num_vertices();
+    if n <= 1 {
+        return (p.clone(), vec![0; n]);
+    }
+    // Labeled adjacency matrix: 0 = no edge, label+1 otherwise.
+    let mut adj = vec![0u32; n * n];
+    for &(a, b, l) in &p.edges {
+        adj[a as usize * n + b as usize] = l + 1;
+        adj[b as usize * n + a as usize] = l + 1;
+    }
+    let degs: Vec<usize> = (0..n).map(|v| p.degree(v as u8)).collect();
+
+    let mut search = Search {
+        n,
+        vlabels: &p.vlabels,
+        adj: &adj,
+        degs: &degs,
+        best_code: None,
+        best_order: Vec::new(),
+        order: Vec::with_capacity(n),
+        code: Vec::with_capacity(n + n * (n - 1) / 2),
+        used: vec![false; n],
+    };
+    search.place();
+
+    let order = search.best_order; // order[canon_pos] = old vertex
+    let mut perm = vec![0u8; n]; // perm[old] = canon_pos
+    for (pos, &old) in order.iter().enumerate() {
+        perm[old as usize] = pos as u8;
+    }
+    (p.permuted(&perm), perm)
+}
+
+struct Search<'a> {
+    n: usize,
+    vlabels: &'a [Label],
+    adj: &'a [u32],
+    degs: &'a [usize],
+    /// Best complete code found so far (lexicographically minimal).
+    best_code: Option<Vec<u32>>,
+    best_order: Vec<u8>,
+    /// Current placement: order[pos] = original vertex.
+    order: Vec<u8>,
+    /// Code of the current partial placement.
+    code: Vec<u32>,
+    used: Vec<bool>,
+}
+
+impl Search<'_> {
+    /// Extend the placement by one position (branch and bound).
+    fn place(&mut self) {
+        let pos = self.order.len();
+        if pos == self.n {
+            let better = match &self.best_code {
+                None => true,
+                Some(best) => self.code < *best,
+            };
+            if better {
+                self.best_code = Some(self.code.clone());
+                self.best_order = self.order.clone();
+            }
+            return;
+        }
+        // Candidate order: sort free vertices by (label, -degree) so the
+        // minimal code tends to be found first, making pruning effective.
+        let mut cands: Vec<u8> = (0..self.n as u8).filter(|&v| !self.used[v as usize]).collect();
+        cands.sort_unstable_by_key(|&v| (self.vlabels[v as usize], usize::MAX - self.degs[v as usize]));
+
+        for v in cands {
+            // Appended code fragment for placing v at `pos`: its label,
+            // then its adjacency to the already-placed prefix.
+            let start = self.code.len();
+            self.code.push(self.vlabels[v as usize]);
+            for &u in &self.order {
+                self.code.push(self.adj[v as usize * self.n + u as usize]);
+            }
+            // Prune: compare against the best code's same slice.
+            let keep = match &self.best_code {
+                None => true,
+                Some(best) => self.code[..] <= best[..self.code.len()],
+            };
+            if keep {
+                self.used[v as usize] = true;
+                self.order.push(v);
+                self.place();
+                self.order.pop();
+                self.used[v as usize] = false;
+            }
+            self.code.truncate(start);
+        }
+    }
+}
+
+/// Are two patterns isomorphic (same canonical form)?
+pub fn isomorphic(a: &Pattern, b: &Pattern) -> bool {
+    if a.num_vertices() != b.num_vertices() || a.num_edges() != b.num_edges() {
+        return false;
+    }
+    canonicalize(a).0 == canonicalize(b).0
+}
+
+/// All automorphisms of `p` (permutations σ with `p.permuted(σ) == p`).
+///
+/// FSM's minimum-image support (paper §2, [7]) needs these: an embedding
+/// contributes its vertices to the domain of *every* pattern position it
+/// can map to under some automorphism. Backtracking with label/degree
+/// pruning; patterns are small, and callers cache per canonical pattern.
+pub fn automorphisms(p: &Pattern) -> Vec<Vec<u8>> {
+    let n = p.num_vertices();
+    if n == 0 {
+        return vec![vec![]];
+    }
+    let mut adj = vec![0u32; n * n];
+    for &(a, b, l) in &p.edges {
+        adj[a as usize * n + b as usize] = l + 1;
+        adj[b as usize * n + a as usize] = l + 1;
+    }
+    let degs: Vec<usize> = (0..n).map(|v| p.degree(v as u8)).collect();
+    let mut out = Vec::new();
+    let mut perm = vec![u8::MAX; n]; // perm[old] = new
+    let mut used = vec![false; n];
+
+    fn rec(
+        v: usize,
+        n: usize,
+        vlabels: &[Label],
+        degs: &[usize],
+        adj: &[u32],
+        perm: &mut Vec<u8>,
+        used: &mut Vec<bool>,
+        out: &mut Vec<Vec<u8>>,
+    ) {
+        if v == n {
+            out.push(perm.clone());
+            return;
+        }
+        for img in 0..n {
+            if used[img]
+                || vlabels[v] != vlabels[img]
+                || degs[v] != degs[img]
+            {
+                continue;
+            }
+            // Edge consistency with already-mapped vertices.
+            let ok = (0..v).all(|u| {
+                adj[v * n + u] == adj[img * n + perm[u] as usize]
+            });
+            if ok {
+                perm[v] = img as u8;
+                used[img] = true;
+                rec(v + 1, n, vlabels, degs, adj, perm, used, out);
+                used[img] = false;
+                perm[v] = u8::MAX;
+            }
+        }
+    }
+    rec(0, n, &p.vlabels, &degs, &adj, &mut perm, &mut used, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_label_orders_agree() {
+        // blue-yellow vs yellow-blue single edge (paper §5.4 example).
+        let a = Pattern::new(vec![0, 1], vec![(0, 1, 0)]);
+        let b = Pattern::new(vec![1, 0], vec![(0, 1, 0)]);
+        assert_eq!(canonicalize(&a).0, canonicalize(&b).0);
+        assert!(isomorphic(&a, &b));
+    }
+
+    #[test]
+    fn perm_maps_old_to_canonical() {
+        let p = Pattern::new(vec![9, 3], vec![(0, 1, 0)]);
+        let (c, perm) = canonicalize(&p);
+        assert_eq!(p.permuted(&perm), c);
+        // Label 3 must come first in the canonical code.
+        assert_eq!(c.vlabels, vec![3, 9]);
+        assert_eq!(perm, vec![1, 0]);
+    }
+
+    #[test]
+    fn invariant_under_permutation() {
+        // 4-cycle with labels.
+        let p = Pattern::new(
+            vec![0, 1, 0, 1],
+            vec![(0, 1, 0), (1, 2, 0), (2, 3, 0), (0, 3, 0)],
+        );
+        let (c0, _) = canonicalize(&p);
+        // All 24 permutations canonicalize to the same pattern.
+        let perms4 = all_perms(4);
+        for perm in perms4 {
+            let q = p.permuted(&perm);
+            assert_eq!(canonicalize(&q).0, c0, "perm {perm:?}");
+        }
+    }
+
+    #[test]
+    fn distinguishes_nonisomorphic() {
+        // Triangle vs path-3 (same vertex count, different edges).
+        let tri = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        let path = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        assert!(!isomorphic(&tri, &path));
+    }
+
+    #[test]
+    fn distinguishes_by_edge_label() {
+        let a = Pattern::new(vec![0, 0], vec![(0, 1, 1)]);
+        let b = Pattern::new(vec![0, 0], vec![(0, 1, 2)]);
+        assert!(!isomorphic(&a, &b));
+    }
+
+    #[test]
+    fn distinguishes_label_placement() {
+        // Star with center labeled 1 vs leaf labeled 1.
+        let a = Pattern::new(vec![1, 0, 0], vec![(0, 1, 0), (0, 2, 0)]);
+        let b = Pattern::new(vec![0, 1, 0], vec![(0, 1, 0), (0, 2, 0)]);
+        assert!(!isomorphic(&a, &b));
+    }
+
+    #[test]
+    fn k6_canonical_fast() {
+        // Complete graph: worst case for naive canonization (all
+        // automorphisms); must still terminate instantly via pruning.
+        let mut edges = Vec::new();
+        for u in 0..6u8 {
+            for v in (u + 1)..6 {
+                edges.push((u, v, 0));
+            }
+        }
+        let p = Pattern::new(vec![0; 6], edges);
+        let (c, _) = canonicalize(&p);
+        assert!(c.is_clique());
+    }
+
+    #[test]
+    fn singleton_and_empty() {
+        let p = Pattern::new(vec![7], vec![]);
+        let (c, perm) = canonicalize(&p);
+        assert_eq!(c, p);
+        assert_eq!(perm, vec![0]);
+        let e = Pattern::new(vec![], vec![]);
+        assert_eq!(canonicalize(&e).0, e);
+    }
+
+    #[test]
+    fn automorphisms_of_triangle() {
+        let tri = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        assert_eq!(automorphisms(&tri).len(), 6); // S3
+    }
+
+    #[test]
+    fn automorphisms_of_labeled_path() {
+        // Path a-b-a: only identity and the flip.
+        let p = Pattern::new(vec![0, 1, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        let autos = automorphisms(&p);
+        assert_eq!(autos.len(), 2);
+        assert!(autos.contains(&vec![0, 1, 2]));
+        assert!(autos.contains(&vec![2, 1, 0]));
+        // Distinct labels: only identity.
+        let q = Pattern::new(vec![0, 1, 2], vec![(0, 1, 0), (1, 2, 0)]);
+        assert_eq!(automorphisms(&q), vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn automorphisms_preserve_pattern() {
+        let p = Pattern::new(vec![0, 0, 1, 1], vec![(0, 1, 0), (1, 2, 0), (2, 3, 0), (0, 3, 0)]);
+        for a in automorphisms(&p) {
+            assert_eq!(p.permuted(&a), p, "{a:?}");
+        }
+    }
+
+    /// All permutations of 0..n (test helper).
+    fn all_perms(n: u8) -> Vec<Vec<u8>> {
+        fn rec(cur: &mut Vec<u8>, used: &mut Vec<bool>, out: &mut Vec<Vec<u8>>) {
+            let n = used.len();
+            if cur.len() == n {
+                out.push(cur.clone());
+                return;
+            }
+            for v in 0..n as u8 {
+                if !used[v as usize] {
+                    used[v as usize] = true;
+                    cur.push(v);
+                    rec(cur, used, out);
+                    cur.pop();
+                    used[v as usize] = false;
+                }
+            }
+        }
+        let mut out = Vec::new();
+        rec(&mut Vec::new(), &mut vec![false; n as usize], &mut out);
+        out
+    }
+}

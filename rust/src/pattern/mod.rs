@@ -1,0 +1,290 @@
+//! Patterns: the template graphs of which embeddings are instances
+//! (paper §2), quick-pattern extraction and canonical patterns (§5.4).
+//!
+//! * A **quick pattern** is obtained in linear time by relabeling the
+//!   embedding's vertices with their visit positions and collecting
+//!   labels — no isomorphism involved. Automorphic embeddings may yield
+//!   *different* quick patterns.
+//! * A **canonical pattern** is the unique representative of a pattern's
+//!   isomorphism class. Computing it is graph canonization (the paper
+//!   uses the bliss library); patterns here are small (≤ ~10 vertices),
+//!   so `canon.rs` implements an exact branch-and-bound minimal-code
+//!   canonizer with label/degree pruning.
+//!
+//! Two-level aggregation (paper §5.4) reduces canonization calls from
+//! one per embedding to one per distinct quick pattern.
+
+pub mod canon;
+
+use std::fmt;
+
+use crate::embedding::{Embedding, Mode};
+use crate::graph::{Label, LabeledGraph};
+
+pub use canon::canonicalize;
+
+/// A small labeled graph template. Vertices are positions `0..n`; edges
+/// are stored with `a < b`, sorted, deduplicated.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Pattern {
+    pub vlabels: Vec<Label>,
+    pub edges: Vec<(u8, u8, Label)>,
+}
+
+impl Pattern {
+    pub fn new(vlabels: Vec<Label>, mut edges: Vec<(u8, u8, Label)>) -> Self {
+        for e in &mut edges {
+            if e.0 > e.1 {
+                std::mem::swap(&mut e.0, &mut e.1);
+            }
+            debug_assert!((e.1 as usize) < vlabels.len());
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        Pattern { vlabels, edges }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.vlabels.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn degree(&self, v: u8) -> usize {
+        self.edges.iter().filter(|&&(a, b, _)| a == v || b == v).count()
+    }
+
+    /// Is this pattern a complete graph (clique)?
+    pub fn is_clique(&self) -> bool {
+        let n = self.num_vertices();
+        self.num_edges() == n * (n - 1) / 2
+    }
+
+    /// Relabel vertices: `perm[old] = new`. Panics if perm is not a
+    /// permutation of `0..n`.
+    pub fn permuted(&self, perm: &[u8]) -> Pattern {
+        assert_eq!(perm.len(), self.num_vertices());
+        let mut vlabels = vec![0; self.vlabels.len()];
+        for (old, &new) in perm.iter().enumerate() {
+            vlabels[new as usize] = self.vlabels[old];
+        }
+        let edges = self
+            .edges
+            .iter()
+            .map(|&(a, b, l)| (perm[a as usize], perm[b as usize], l))
+            .collect();
+        Pattern::new(vlabels, edges)
+    }
+
+    /// Serialized byte size (for message accounting).
+    pub fn byte_size(&self) -> usize {
+        2 + 4 * self.vlabels.len() + 6 * self.edges.len()
+    }
+}
+
+impl fmt::Display for Pattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "P[v=")?;
+        for (i, l) in self.vlabels.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{l}")?;
+        }
+        write!(f, "; e=")?;
+        for (i, (a, b, l)) in self.edges.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            if *l == 0 {
+                write!(f, "{a}-{b}")?;
+            } else {
+                write!(f, "{a}-{b}:{l}")?;
+            }
+        }
+        write!(f, "]")
+    }
+}
+
+/// Extract the **quick pattern** of an embedding (paper §5.4): linear
+/// scan, no isomorphism. Position `i` of the pattern corresponds to the
+/// `i`-th visited vertex of the embedding.
+pub fn quick_pattern(g: &LabeledGraph, e: &Embedding, mode: Mode) -> Pattern {
+    let vs = e.vertices(g, mode);
+    let vlabels: Vec<Label> = vs.iter().map(|&v| g.vertex_label(v)).collect();
+    let pos_of = |v: u32| vs.iter().position(|&u| u == v).unwrap() as u8;
+    let edges: Vec<(u8, u8, Label)> = e
+        .edges(g, mode)
+        .iter()
+        .map(|&eid| {
+            let ed = g.edge(eid);
+            (pos_of(ed.src), pos_of(ed.dst), ed.label)
+        })
+        .collect();
+    Pattern::new(vlabels, edges)
+}
+
+/// Incremental quick pattern: extend a parent's quick pattern by one
+/// word without rescanning the whole embedding — the engine computes
+/// the parent's quick pattern (and vertex list) once per parent and
+/// derives each child's in O(k).
+///
+/// `parent_vertices` must be the parent's vertices in visit order
+/// (`Embedding::vertices`); `word` is the new vertex id (vertex mode) or
+/// edge id (edge mode). Also returns the child's vertex list.
+pub fn quick_pattern_extend(
+    g: &LabeledGraph,
+    parent_quick: &Pattern,
+    parent_vertices: &[u32],
+    word: u32,
+    mode: Mode,
+) -> (Pattern, Vec<u32>) {
+    let mut vlabels = parent_quick.vlabels.clone();
+    let mut edges = parent_quick.edges.clone();
+    let mut vertices = Vec::with_capacity(parent_vertices.len() + 1);
+    vertices.extend_from_slice(parent_vertices);
+    match mode {
+        Mode::VertexInduced => {
+            let new_pos = vertices.len() as u8;
+            for (i, &p) in vertices.iter().enumerate() {
+                if let Some(eid) = g.edge_between(p, word) {
+                    edges.push((i as u8, new_pos, g.edge(eid).label));
+                }
+            }
+            vlabels.push(g.vertex_label(word));
+            vertices.push(word);
+        }
+        Mode::EdgeInduced => {
+            let ed = g.edge(word);
+            let pos_of = |v: u32, vertices: &mut Vec<u32>, vlabels: &mut Vec<Label>| {
+                match vertices.iter().position(|&u| u == v) {
+                    Some(i) => i as u8,
+                    None => {
+                        vertices.push(v);
+                        vlabels.push(g.vertex_label(v));
+                        (vertices.len() - 1) as u8
+                    }
+                }
+            };
+            let a = pos_of(ed.src, &mut vertices, &mut vlabels);
+            let b = pos_of(ed.dst, &mut vertices, &mut vlabels);
+            edges.push((a.min(b), a.max(b), ed.label));
+        }
+    }
+    (Pattern::new(vlabels, edges), vertices)
+}
+
+/// Quick pattern + canonization in one call: returns the canonical
+/// pattern and the permutation mapping *embedding visit positions* to
+/// canonical pattern positions (needed by FSM domains).
+pub fn canonical_pattern(g: &LabeledGraph, e: &Embedding, mode: Mode) -> (Pattern, Vec<u8>) {
+    let qp = quick_pattern(g, e, mode);
+    canon::canonicalize(&qp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::Embedding;
+    use crate::graph::LabeledGraph;
+
+    fn fig2_graph() -> LabeledGraph {
+        // Paper Fig 2: blue(0)/yellow(1) path 0-1-2-3 (0-based ids;
+        // labels: 0=blue for {0,2}, 1=yellow for {1,3}).
+        LabeledGraph::from_edges(vec![0, 1, 0, 1], &[(0, 1, 0), (1, 2, 0), (2, 3, 0)])
+    }
+
+    #[test]
+    fn pattern_normalizes_edges() {
+        let p = Pattern::new(vec![0, 1, 2], vec![(2, 0, 5), (1, 2, 0), (1, 2, 0)]);
+        assert_eq!(p.edges, vec![(0, 2, 5), (1, 2, 0)]);
+        assert_eq!(p.degree(2), 2);
+        assert_eq!(p.degree(1), 1);
+    }
+
+    #[test]
+    fn quick_pattern_of_path() {
+        let g = fig2_graph();
+        // Embedding ⟨0,1,2⟩ (blue-yellow-blue path).
+        let e = Embedding::new(vec![0, 1, 2]);
+        let qp = quick_pattern(&g, &e, Mode::VertexInduced);
+        assert_eq!(qp.vlabels, vec![0, 1, 0]);
+        assert_eq!(qp.edges, vec![(0, 1, 0), (1, 2, 0)]);
+    }
+
+    #[test]
+    fn fig2_quick_patterns_differ_but_canonical_equal() {
+        let g = fig2_graph();
+        // Single-edge embeddings (1,2) and (2,3) in paper ids = edges
+        // (0,1)/(1,2) here: quick patterns (blue,yellow) vs (yellow,blue).
+        let e01 = Embedding::new(vec![g.edge_between(0, 1).unwrap()]);
+        let e12 = Embedding::new(vec![g.edge_between(1, 2).unwrap()]);
+        let q1 = quick_pattern(&g, &e01, Mode::EdgeInduced);
+        let q2 = quick_pattern(&g, &e12, Mode::EdgeInduced);
+        assert_ne!(q1, q2, "quick patterns are visit-order sensitive");
+        let (c1, _) = canonicalize(&q1);
+        let (c2, _) = canonicalize(&q2);
+        assert_eq!(c1, c2, "canonical patterns must coincide");
+    }
+
+    #[test]
+    fn vertex_induced_includes_chord() {
+        let g = LabeledGraph::from_edges(
+            vec![0, 0, 0],
+            &[(0, 1, 0), (1, 2, 0), (0, 2, 0)],
+        );
+        let e = Embedding::new(vec![0, 1, 2]);
+        let qp = quick_pattern(&g, &e, Mode::VertexInduced);
+        assert!(qp.is_clique());
+    }
+
+    #[test]
+    fn quick_pattern_extend_matches_rescan() {
+        // Vertex mode: every canonical extension's incremental quick
+        // pattern equals the from-scratch one.
+        let g = crate::graph::gen::erdos_renyi(25, 80, 3, 2, 9);
+        for mode in [Mode::VertexInduced, Mode::EdgeInduced] {
+            let mut frontier: Vec<Vec<u32>> =
+                crate::embedding::initial_candidates(&g, mode).iter().map(|&w| vec![w]).collect();
+            for _ in 0..2 {
+                let mut next = Vec::new();
+                for parent in frontier.iter().take(50) {
+                    let pe = Embedding::new(parent.clone());
+                    let pq = quick_pattern(&g, &pe, mode);
+                    let pv = pe.vertices(&g, mode);
+                    for x in crate::embedding::extensions(&g, &pe, mode) {
+                        if !crate::embedding::is_canonical_extension(&g, mode, parent, x) {
+                            continue;
+                        }
+                        let mut child = parent.clone();
+                        child.push(x);
+                        let (inc, verts) = quick_pattern_extend(&g, &pq, &pv, x, mode);
+                        let ce = Embedding::new(child.clone());
+                        assert_eq!(inc, quick_pattern(&g, &ce, mode), "{mode:?} {child:?}");
+                        assert_eq!(verts, ce.vertices(&g, mode), "{mode:?} {child:?}");
+                        next.push(child);
+                    }
+                }
+                frontier = next;
+            }
+        }
+    }
+
+    #[test]
+    fn permuted_roundtrip() {
+        let p = Pattern::new(vec![3, 4, 5], vec![(0, 1, 0), (1, 2, 9)]);
+        let q = p.permuted(&[2, 1, 0]);
+        assert_eq!(q.vlabels, vec![5, 4, 3]);
+        assert_eq!(q.edges, vec![(0, 1, 9), (1, 2, 0)]);
+        // Applying the inverse permutation recovers the original.
+        assert_eq!(q.permuted(&[2, 1, 0]), p);
+    }
+
+    #[test]
+    fn display_readable() {
+        let p = Pattern::new(vec![1, 2], vec![(0, 1, 0)]);
+        assert_eq!(p.to_string(), "P[v=1,2; e=0-1]");
+    }
+}

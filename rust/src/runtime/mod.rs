@@ -1,0 +1,192 @@
+//! PJRT runtime: load and execute the AOT census artifacts from the
+//! Rust hot path (Python never runs here).
+//!
+//! `make artifacts` lowers the L2 JAX census model (around the L1 Pallas
+//! kernel) to HLO *text* in `artifacts/`; this module compiles those
+//! with the `xla` crate's PJRT CPU client and executes them on dense
+//! adjacency tiles. Used by the Motifs application as an independent
+//! algebraic cross-check of the motif-3 census, and by benches as the
+//! L1/L2 integration probe.
+//!
+//! STATS field layout must match python/compile/model.py.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::LabeledGraph;
+
+/// Census result (python/compile/model.py STATS_FIELDS).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CensusStats {
+    pub n_active: f32,
+    pub edges: f32,
+    pub wedges: f32,
+    pub triangles: f32,
+    pub max_deg: f32,
+    pub sum_deg: f32,
+    pub sum_deg2: f32,
+    pub sum_deg3: f32,
+}
+
+impl CensusStats {
+    fn from_vec(v: &[f32]) -> Result<Self> {
+        if v.len() != 8 {
+            bail!("census stats must have 8 fields, got {}", v.len());
+        }
+        Ok(CensusStats {
+            n_active: v[0],
+            edges: v[1],
+            wedges: v[2],
+            triangles: v[3],
+            max_deg: v[4],
+            sum_deg: v[5],
+            sum_deg2: v[6],
+            sum_deg3: v[7],
+        })
+    }
+}
+
+/// One compiled census executable for a fixed tile size `n`.
+struct CensusExe {
+    n: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Loads every census artifact in a directory and dispatches each graph
+/// to the smallest tile that fits.
+pub struct CensusExecutor {
+    client: xla::PjRtClient,
+    exes: Vec<CensusExe>,
+}
+
+impl CensusExecutor {
+    /// Load from `artifacts/` (expects `manifest.txt` + `census_<n>.hlo.txt`,
+    /// written by `python -m compile.aot`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let body = std::fs::read_to_string(&manifest).with_context(|| {
+            format!(
+                "read {} — run `make artifacts` first",
+                manifest.display()
+            )
+        })?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut exes = Vec::new();
+        for line in body.lines() {
+            let mut tok = line.split_whitespace();
+            let (Some(name), Some(n)) = (tok.next(), tok.next()) else {
+                continue;
+            };
+            let n: usize = n.parse().with_context(|| format!("bad manifest line {line:?}"))?;
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            exes.push(CensusExe { n, exe });
+        }
+        if exes.is_empty() {
+            bail!("no census artifacts in {}", dir.display());
+        }
+        exes.sort_by_key(|e| e.n);
+        Ok(CensusExecutor { client, exes })
+    }
+
+    /// Default artifact location: `$ARABESQUE_ARTIFACTS` or `artifacts/`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("ARABESQUE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(&PathBuf::from(dir))
+    }
+
+    /// Largest graph (vertex count) the loaded artifacts can census.
+    pub fn max_vertices(&self) -> usize {
+        self.exes.last().map(|e| e.n).unwrap_or(0)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run the census on `g` (padded into the smallest fitting tile).
+    pub fn census(&self, g: &LabeledGraph) -> Result<CensusStats> {
+        let nv = g.num_vertices();
+        let Some(exe) = self.exes.iter().find(|e| e.n >= nv) else {
+            bail!(
+                "graph has {nv} vertices but the largest census tile is {} — \
+                 re-run `make artifacts` with --sizes",
+                self.max_vertices()
+            );
+        };
+        let flat = g.dense_adjacency(exe.n);
+        let lit = xla::Literal::vec1(&flat)
+            .reshape(&[exe.n as i64, exe.n as i64])
+            .context("reshape adjacency literal")?;
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("execute census")?[0][0]
+            .to_literal_sync()
+            .context("fetch census result")?;
+        // aot.py lowers with return_tuple=True: (stats[8], deg[n]).
+        let elems = result.to_tuple().context("unpack census tuple")?;
+        let stats_vec = elems
+            .first()
+            .context("census tuple is empty")?
+            .to_vec::<f32>()
+            .context("stats literal to_vec")?;
+        CensusStats::from_vec(&stats_vec)
+    }
+
+    /// Per-vertex degrees from the census (cost-model input).
+    pub fn degrees(&self, g: &LabeledGraph) -> Result<Vec<f32>> {
+        let nv = g.num_vertices();
+        let Some(exe) = self.exes.iter().find(|e| e.n >= nv) else {
+            bail!("graph too large for loaded census tiles");
+        };
+        let flat = g.dense_adjacency(exe.n);
+        let lit = xla::Literal::vec1(&flat)
+            .reshape(&[exe.n as i64, exe.n as i64])?;
+        let result = exe.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let elems = result.to_tuple()?;
+        let deg = elems
+            .get(1)
+            .context("census tuple lacks degrees")?
+            .to_vec::<f32>()?;
+        Ok(deg[..nv].to_vec())
+    }
+}
+
+/// Motif-3 counts derived from a census, comparable with enumeration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Motif3Counts {
+    pub edges: u64,
+    /// Open wedges = chains (paths of 2 edges).
+    pub chains: u64,
+    pub triangles: u64,
+}
+
+impl Motif3Counts {
+    pub fn from_stats(s: &CensusStats) -> Self {
+        let triangles = s.triangles.round() as u64;
+        Motif3Counts {
+            edges: s.edges.round() as u64,
+            chains: s.wedges.round() as u64 - 3 * triangles,
+            triangles,
+        }
+    }
+
+    /// Exact counts by enumeration (the L3 oracle).
+    pub fn by_enumeration(g: &LabeledGraph) -> Self {
+        let triangles = g.triangle_count();
+        Motif3Counts {
+            edges: g.num_edges() as u64,
+            chains: g.wedge_count() - 3 * triangles,
+            triangles,
+        }
+    }
+}
+
+// PJRT tests live in rust/tests/runtime_pjrt.rs (they need artifacts).

@@ -1,0 +1,261 @@
+//! Instrumentation: phase timers (paper Fig 12's CPU breakdown),
+//! message/byte counters, frontier memory accounting, and peak RSS.
+
+use std::time::{Duration, Instant};
+
+/// The CPU-breakdown phases of paper Fig 12, plus user code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// W — writing embeddings: ODAG creation, serialization, transfer.
+    Write,
+    /// R — reading embeddings: ODAG extraction / frontier iteration.
+    Read,
+    /// G — generating new candidates (extension enumeration).
+    Generate,
+    /// C — embedding canonicality checking.
+    Canonicality,
+    /// P — pattern aggregation (quick patterns + canonization + merge).
+    PatternAgg,
+    /// U — user-defined functions (filter/process/...), shown by the
+    /// paper to be an insignificant fraction.
+    User,
+}
+
+pub const ALL_PHASES: [Phase; 6] = [
+    Phase::Write,
+    Phase::Read,
+    Phase::Generate,
+    Phase::Canonicality,
+    Phase::PatternAgg,
+    Phase::User,
+];
+
+impl Phase {
+    pub fn letter(&self) -> char {
+        match self {
+            Phase::Write => 'W',
+            Phase::Read => 'R',
+            Phase::Generate => 'G',
+            Phase::Canonicality => 'C',
+            Phase::PatternAgg => 'P',
+            Phase::User => 'U',
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            Phase::Write => 0,
+            Phase::Read => 1,
+            Phase::Generate => 2,
+            Phase::Canonicality => 3,
+            Phase::PatternAgg => 4,
+            Phase::User => 5,
+        }
+    }
+}
+
+/// Per-worker accumulated phase times.
+///
+/// Canonicality and candidate generation run millions of times per
+/// superstep; timing each call individually would distort the profile,
+/// so hot phases are measured in *batched* sections (time a run of
+/// same-phase work, attribute once).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimes {
+    nanos: [u64; 6],
+}
+
+impl PhaseTimes {
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        self.nanos[phase.index()] += d.as_nanos() as u64;
+    }
+
+    /// Time `f`, attributing the elapsed time to `phase`.
+    pub fn timed<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn get(&self, phase: Phase) -> Duration {
+        Duration::from_nanos(self.nanos[phase.index()])
+    }
+
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.nanos.iter().sum())
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for i in 0..6 {
+            self.nanos[i] += other.nanos[i];
+        }
+    }
+
+    /// Fractions per phase (sums to 1 unless empty).
+    pub fn fractions(&self) -> Vec<(Phase, f64)> {
+        let total: u64 = self.nanos.iter().sum();
+        ALL_PHASES
+            .iter()
+            .map(|&p| {
+                let f = if total == 0 {
+                    0.0
+                } else {
+                    self.nanos[p.index()] as f64 / total as f64
+                };
+                (p, f)
+            })
+            .collect()
+    }
+}
+
+/// Communication accounting across simulated server boundaries.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CommStats {
+    /// Logical messages (one per aggregation entry / ODAG merge entry /
+    /// broadcast recipient).
+    pub messages: u64,
+    /// Serialized bytes crossing server boundaries.
+    pub bytes: u64,
+}
+
+impl CommStats {
+    pub fn add(&mut self, messages: u64, bytes: u64) {
+        self.messages += messages;
+        self.bytes += bytes;
+    }
+
+    pub fn merge(&mut self, other: &CommStats) {
+        self.messages += other.messages;
+        self.bytes += other.bytes;
+    }
+}
+
+/// Per-superstep record, collected by the engine.
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub step: usize,
+    /// Embeddings handed to the application (passed canonicality).
+    pub candidates: u64,
+    /// Candidates processed by π (passed the filter φ).
+    pub processed: u64,
+    /// Candidates that entered the frontier (π ran and the termination
+    /// filter allowed expansion).
+    pub frontier: u64,
+    /// Serialized frontier size in bytes, as stored (ODAG or list).
+    pub frontier_bytes: u64,
+    /// What the frontier WOULD occupy as a plain embedding list
+    /// (paper Fig 9's comparison series, measured in the same run).
+    pub list_bytes: u64,
+    pub comm: CommStats,
+    pub phases: PhaseTimes,
+    pub wall: Duration,
+    /// Busiest worker's compute time this step.
+    pub busy_max: Duration,
+    /// Sum of all workers' compute time this step.
+    pub busy_sum: Duration,
+    /// Coordinator time at the barrier (merges + broadcast bookkeeping).
+    pub merge_wall: Duration,
+    /// Simulated BSP step time: `busy_max + merge_wall`. On a real
+    /// cluster each worker runs on its own cores, so the barrier
+    /// completes when the busiest worker does; this testbed has a single
+    /// core, so measured `wall` serializes the workers and `sim_wall` is
+    /// the faithful scalability metric (see DESIGN.md "Substitutions").
+    pub sim_wall: Duration,
+}
+
+/// CPU time consumed by the calling thread (CLOCK_THREAD_CPUTIME_ID).
+///
+/// Worker `busy` times must be CPU time, not wall time: on a machine
+/// with fewer cores than workers the OS time-slices the threads, and a
+/// wall clock would charge every worker for its neighbours' work.
+pub fn thread_cpu_time() -> Duration {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer; the clock id is a constant.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+}
+
+/// Peak resident set size of this process in bytes (Linux VmHWM).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_attributes_to_phase() {
+        let mut t = PhaseTimes::default();
+        let v = t.timed(Phase::Canonicality, || {
+            std::thread::sleep(Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.get(Phase::Canonicality) >= Duration::from_millis(1));
+        assert_eq!(t.get(Phase::Write), Duration::ZERO);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut t = PhaseTimes::default();
+        t.add(Phase::Read, Duration::from_millis(30));
+        t.add(Phase::Write, Duration::from_millis(70));
+        let f: f64 = t.fractions().iter().map(|&(_, x)| x).sum();
+        assert!((f - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = PhaseTimes::default();
+        a.add(Phase::User, Duration::from_millis(1));
+        let mut b = PhaseTimes::default();
+        b.add(Phase::User, Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.get(Phase::User), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn comm_stats_accumulate() {
+        let mut c = CommStats::default();
+        c.add(10, 1000);
+        c.add(5, 200);
+        assert_eq!(c.messages, 15);
+        assert_eq!(c.bytes, 1200);
+    }
+
+    #[test]
+    fn thread_cpu_time_advances_with_work() {
+        let t0 = thread_cpu_time();
+        let mut x = 0u64;
+        for i in 0..5_000_000u64 {
+            x = x.wrapping_add(i * i);
+        }
+        std::hint::black_box(x);
+        let t1 = thread_cpu_time();
+        assert!(t1 > t0);
+    }
+
+    #[test]
+    fn peak_rss_readable_on_linux() {
+        let rss = peak_rss_bytes();
+        assert!(rss.is_some());
+        assert!(rss.unwrap() > 1024 * 1024); // > 1 MiB for any process
+    }
+
+    #[test]
+    fn phase_letters_match_paper() {
+        let letters: String = ALL_PHASES.iter().map(Phase::letter).collect();
+        assert_eq!(letters, "WRGCPU");
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny CLI argument parser (the vendor set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters that produce readable errors.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("option --{rest} expects a value"))?;
+                    args.options.insert(rest.to_string(), v);
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("short options are not supported: {a}");
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["run", "--app", "fsm", "--support=300"], &[]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("app"), Some("fsm"));
+        assert_eq!(a.get_usize("support", 0).unwrap(), 300);
+    }
+
+    #[test]
+    fn flags_take_no_value() {
+        let a = parse(&["--no-odag", "--servers", "4"], &["no-odag"]);
+        assert!(a.flag("no-odag"));
+        assert_eq!(a.get_usize("servers", 1).unwrap(), 4);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["--app".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = parse(&["--servers", "lots"], &[]);
+        assert!(a.get_usize("servers", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_or("graph", "citeseer"), "citeseer");
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal binary codec (little-endian, varint-free) used wherever the
+//! paper's system would serialize data across worker/server boundaries:
+//! ODAG broadcast, aggregation messages, frontier embedding lists.
+//!
+//! Byte counts produced by this codec are what the engine reports as
+//! "network" traffic between simulated servers (paper Fig 9 measures
+//! exactly these serialized sizes).
+
+/// Append-only byte buffer writer.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32_slice(&mut self, vs: &[u32]) {
+        self.put_u32(vs.len() as u32);
+        for &v in vs {
+            self.put_u32(v);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor-style reader over a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum CodecError {
+    #[error("codec underrun: needed {needed} bytes at offset {at}, have {have}")]
+    Underrun { at: usize, needed: usize, have: usize },
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.pos + n > self.buf.len() {
+            return Err(CodecError::Underrun {
+                at: self.pos,
+                needed: n,
+                have: self.buf.len() - self.pos,
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32_vec(&mut self) -> Result<Vec<u32>, CodecError> {
+        let n = self.get_u32()? as usize;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.get_u32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_exhausted(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert!(r.is_exhausted());
+    }
+
+    #[test]
+    fn roundtrip_slice() {
+        let mut w = Writer::new();
+        w.put_u32_slice(&[1, 2, 3, 0xFFFF_FFFF]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_u32_vec().unwrap(), vec![1, 2, 3, 0xFFFF_FFFF]);
+    }
+
+    #[test]
+    fn underrun_is_error_not_panic() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(matches!(r.get_u32(), Err(CodecError::Underrun { .. })));
+    }
+
+    #[test]
+    fn empty_slice_roundtrip() {
+        let mut w = Writer::new();
+        w.put_u32_slice(&[]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_u32_vec().unwrap(), Vec::<u32>::new());
+    }
+}

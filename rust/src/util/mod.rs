@@ -1,0 +1,76 @@
+//! In-tree utilities replacing crates unavailable in the offline vendor
+//! set: a deterministic PRNG (`rng`, no `rand`), a binary codec (`codec`,
+//! no `serde`), a tiny CLI argument parser (`cli`, no `clap`), and human
+//! formatting helpers.
+
+pub mod cli;
+pub mod codec;
+pub mod rng;
+
+/// Format a byte count as a human-readable string (`12.3 MiB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in seconds with adaptive precision (`1.24s`, `87ms`).
+pub fn human_secs(secs: f64) -> String {
+    if secs >= 100.0 {
+        format!("{secs:.0}s")
+    } else if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.0}ms", secs * 1e3)
+    } else {
+        format!("{:.0}us", secs * 1e6)
+    }
+}
+
+/// Format a large count with thousands separators (`1,680,983,703`).
+pub fn human_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn human_count_separators() {
+        assert_eq!(human_count(7), "7");
+        assert_eq!(human_count(1234), "1,234");
+        assert_eq!(human_count(1680983703), "1,680,983,703");
+    }
+
+    #[test]
+    fn human_secs_scales() {
+        assert_eq!(human_secs(120.0), "120s");
+        assert_eq!(human_secs(1.237), "1.24s");
+        assert_eq!(human_secs(0.087), "87ms");
+    }
+}

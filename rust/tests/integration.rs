@@ -1,0 +1,291 @@
+//! Engine-level integration tests: every application x configuration
+//! matrix against known-good counts and the centralized baselines.
+
+use std::sync::Arc;
+
+use arabesque::apps::{Cliques, Fsm, MaximalCliques, Motifs};
+use arabesque::baselines::centralized::{self, CentralizedFsm};
+use arabesque::baselines::tlp::TlpCluster;
+use arabesque::baselines::tlv::TlvCluster;
+use arabesque::engine::{Cluster, Config};
+use arabesque::graph::{gen, loader, LabeledGraph};
+use arabesque::output::MemorySink;
+use arabesque::pattern::Pattern;
+
+/// The configuration matrix from DESIGN.md: worker counts x frontier
+/// storage x aggregation level.
+fn configs() -> Vec<Config> {
+    let mut out = Vec::new();
+    for (s, t) in [(1, 1), (1, 4), (2, 2), (4, 2)] {
+        for odag in [true, false] {
+            for two_level in [true, false] {
+                out.push(
+                    Config::new(s, t)
+                        .with_odag(odag)
+                        .with_two_level(two_level)
+                        .with_block(16),
+                );
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------
+// Cliques
+// ------------------------------------------------------------------
+
+#[test]
+fn cliques_match_centralized_across_configs() {
+    let g = gen::erdos_renyi(60, 240, 2, 1, 42).unlabeled();
+    let want = centralized::count_cliques(&g, 4);
+    for cfg in configs() {
+        let label = format!("{cfg:?}");
+        let r = Cluster::new(cfg).run(&g, &Cliques::new(4));
+        assert_eq!(r.num_outputs, want, "{label}");
+    }
+}
+
+#[test]
+fn maximal_cliques_match_bron_kerbosch() {
+    let g = gen::barabasi_albert(80, 4, 1, 5);
+    let sink = Arc::new(MemorySink::new());
+    Cluster::new(Config::new(2, 2)).run_with_sink(&g, &MaximalCliques::new(12), sink.clone());
+    let mut want: Vec<String> = centralized::bron_kerbosch(&g)
+        .into_iter()
+        .map(|mut c| {
+            c.sort_unstable();
+            format!("maximal clique {c:?}")
+        })
+        .collect();
+    want.sort();
+    assert_eq!(sink.sorted(), want);
+}
+
+// ------------------------------------------------------------------
+// Motifs
+// ------------------------------------------------------------------
+
+#[test]
+fn motif_counts_match_esu_census() {
+    let g = gen::erdos_renyi(40, 140, 1, 1, 7).unlabeled();
+    for k in 3..=4usize {
+        let census = centralized::motif_census(&g, k);
+        let r = Cluster::new(Config::new(2, 2)).run(&g, &Motifs::new(k));
+        // Same per-pattern counts.
+        let mut got: Vec<(Pattern, i64)> = r
+            .aggregates
+            .pattern_output
+            .iter()
+            .map(|(p, v)| (p.clone(), v.as_long()))
+            .collect();
+        got.sort();
+        let mut want: Vec<(Pattern, i64)> =
+            census.into_iter().map(|(p, c)| (p, c as i64)).collect();
+        want.sort();
+        assert_eq!(got, want, "k={k}");
+    }
+}
+
+#[test]
+fn motifs_deterministic_across_all_configs() {
+    let g = gen::dataset("citeseer", 0.2).unwrap().unlabeled();
+    let mut reference: Option<Vec<(Pattern, i64)>> = None;
+    for cfg in configs() {
+        let label = format!("{cfg:?}");
+        let r = Cluster::new(cfg).run(&g, &Motifs::new(3));
+        let mut got: Vec<(Pattern, i64)> = r
+            .aggregates
+            .pattern_output
+            .iter()
+            .map(|(p, v)| (p.clone(), v.as_long()))
+            .collect();
+        got.sort();
+        match &reference {
+            None => reference = Some(got),
+            Some(want) => assert_eq!(&got, want, "{label}"),
+        }
+    }
+}
+
+#[test]
+fn labeled_motifs_refine_unlabeled() {
+    // Summing labeled motif counts per structure equals unlabeled counts.
+    let g = gen::erdos_renyi(30, 90, 3, 1, 13);
+    let labeled = Cluster::new(Config::new(1, 2)).run(&g, &Motifs::new(3));
+    let unlabeled = Cluster::new(Config::new(1, 2)).run(&g.unlabeled(), &Motifs::new(3));
+    let l: i64 = labeled.aggregates.pattern_output.values().map(|v| v.as_long()).sum();
+    let u: i64 = unlabeled.aggregates.pattern_output.values().map(|v| v.as_long()).sum();
+    assert_eq!(l, u);
+    assert!(labeled.aggregates.pattern_output.len() >= unlabeled.aggregates.pattern_output.len());
+}
+
+// ------------------------------------------------------------------
+// FSM
+// ------------------------------------------------------------------
+
+fn fsm_patterns(g: &LabeledGraph, cfg: Config, support: usize, me: usize) -> Vec<String> {
+    let sink = Arc::new(MemorySink::new());
+    let app = Fsm::new(support).with_max_edges(me);
+    Cluster::new(cfg).run_with_sink(g, &app, sink.clone());
+    sink.sorted()
+        .into_iter()
+        .filter(|l| l.starts_with("frequent pattern"))
+        .collect()
+}
+
+#[test]
+fn fsm_matches_centralized_and_tlp_across_configs() {
+    let g = gen::dataset("citeseer", 0.5).unwrap();
+    let (support, me) = (30, 2);
+    let mut want: Vec<String> = CentralizedFsm::new(support, me)
+        .run(&g)
+        .into_iter()
+        .map(|f| format!("frequent pattern {} support={}", f.pattern, f.support))
+        .collect();
+    want.sort();
+    assert!(!want.is_empty(), "workload must find frequent patterns");
+
+    for cfg in configs() {
+        let label = format!("{cfg:?}");
+        assert_eq!(fsm_patterns(&g, cfg, support, me), want, "{label}");
+    }
+
+    let tlp = TlpCluster::new(4).run_fsm(&g, support, me);
+    let mut tlp_lines: Vec<String> = tlp
+        .frequent
+        .iter()
+        .map(|(p, s)| format!("frequent pattern {p} support={s}"))
+        .collect();
+    tlp_lines.sort();
+    assert_eq!(tlp_lines, want);
+}
+
+#[test]
+fn fsm_zero_results_above_max_support() {
+    let g = gen::small("c6").unwrap();
+    // Max possible support on C6 is 6.
+    let rows = fsm_patterns(&g, Config::new(1, 2), 7, 2);
+    assert!(rows.is_empty());
+}
+
+// ------------------------------------------------------------------
+// TLV engine equivalence
+// ------------------------------------------------------------------
+
+#[test]
+fn tlv_equivalent_on_all_apps() {
+    let g = gen::erdos_renyi(35, 100, 2, 1, 3);
+    // Cliques.
+    let tlv = TlvCluster::new(3).run(&g, &Cliques::new(4));
+    let eng = Cluster::new(Config::new(1, 3)).run(&g, &Cliques::new(4));
+    assert_eq!(tlv.num_outputs, eng.num_outputs);
+    // FSM (edge mode).
+    let app = Fsm::new(5).with_max_edges(2);
+    let tlv = TlvCluster::new(3).run(&g, &app);
+    let eng = Cluster::new(Config::new(1, 3)).run(&g, &app);
+    assert_eq!(tlv.processed, eng.processed);
+}
+
+// ------------------------------------------------------------------
+// Failure handling / edge cases
+// ------------------------------------------------------------------
+
+#[test]
+fn empty_graph_terminates_cleanly() {
+    let g = LabeledGraph::from_edges(vec![], &[]);
+    let r = Cluster::new(Config::new(2, 2)).run(&g, &Cliques::new(4));
+    assert_eq!(r.num_outputs, 0);
+    assert_eq!(r.processed, 0);
+}
+
+#[test]
+fn edgeless_graph_yields_single_vertices_only() {
+    let g = LabeledGraph::from_edges(vec![0, 1, 2], &[]);
+    let r = Cluster::new(Config::new(1, 2)).run(&g, &Motifs::new(3));
+    // Step 1 explores the vertices; step 2 generates no candidates and
+    // the run terminates with an empty frontier.
+    assert_eq!(r.steps.len(), 2);
+    assert_eq!(r.steps[0].processed, 3);
+    assert_eq!(r.steps[1].processed, 0);
+}
+
+#[test]
+fn max_steps_caps_runaway_exploration() {
+    // An app that never terminates by itself (no termination filter).
+    let g = gen::small("k5").unwrap();
+    struct Endless;
+    impl arabesque::GraphMiningApp for Endless {
+        fn mode(&self) -> arabesque::ExplorationMode {
+            arabesque::ExplorationMode::VertexInduced
+        }
+        fn filter(
+            &self,
+            _g: &LabeledGraph,
+            _e: &arabesque::embedding::Embedding,
+            _ctx: &mut arabesque::api::Ctx,
+        ) -> bool {
+            true
+        }
+        fn process(
+            &self,
+            _g: &LabeledGraph,
+            _e: &arabesque::embedding::Embedding,
+            _ctx: &mut arabesque::api::Ctx,
+        ) {
+        }
+    }
+    let r = Cluster::new(Config::new(1, 2).with_max_steps(3)).run(&g, &Endless);
+    assert_eq!(r.steps.len(), 3);
+}
+
+#[test]
+fn block_size_one_and_huge_both_work() {
+    let g = gen::small("k5").unwrap();
+    for block in [1u64, 1_000_000] {
+        let r = Cluster::new(Config::new(2, 2).with_block(block)).run(&g, &Cliques::new(4));
+        assert_eq!(r.num_outputs, 25, "block={block}");
+    }
+}
+
+#[test]
+fn graph_file_roundtrip_preserves_results() {
+    let g = gen::dataset("citeseer", 0.1).unwrap();
+    let dir = std::env::temp_dir().join(format!("arab_int_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("cite.graph");
+    loader::save_arabesque(&g, &p).unwrap();
+    let h = loader::load_arabesque(&p).unwrap();
+    let a = Cluster::new(Config::new(1, 2)).run(&g, &Cliques::new(3));
+    let b = Cluster::new(Config::new(1, 2)).run(&h, &Cliques::new(3));
+    assert_eq!(a.num_outputs, b.num_outputs);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn comm_accounting_monotone_in_servers() {
+    // More servers => more broadcast traffic, same results.
+    let g = gen::dataset("citeseer", 0.3).unwrap().unlabeled();
+    let r2 = Cluster::new(Config::new(2, 1)).run(&g, &Motifs::new(3));
+    let r8 = Cluster::new(Config::new(8, 1)).run(&g, &Motifs::new(3));
+    assert_eq!(r2.processed, r8.processed);
+    assert!(r8.comm.bytes > r2.comm.bytes);
+}
+
+#[test]
+fn fig9_metrics_recorded_in_both_modes() {
+    let g = gen::dataset("citeseer", 0.4).unwrap();
+    let app = Fsm::new(20).with_max_edges(3);
+    let odag = Cluster::new(Config::new(1, 2)).run(&g, &app);
+    let list = Cluster::new(Config::new(1, 2).with_odag(false)).run(&g, &app);
+    for s in &odag.steps {
+        if s.frontier > 0 {
+            assert!(s.frontier_bytes > 0);
+            assert!(s.list_bytes > 0);
+        }
+    }
+    // In list mode the stored bytes ARE the list bytes.
+    for s in &list.steps {
+        assert_eq!(s.frontier_bytes, s.list_bytes);
+    }
+}

@@ -1,0 +1,410 @@
+//! Property-based tests over randomized inputs (in-tree harness on the
+//! deterministic xoshiro PRNG — no proptest in the offline vendor set).
+//!
+//! Each property runs against many random graphs/patterns with fixed
+//! seeds, so failures are reproducible: the failing case prints its
+//! seed.
+
+use std::collections::HashSet;
+
+use arabesque::embedding::{self, Mode};
+use arabesque::graph::{gen, LabeledGraph};
+use arabesque::odag::Odag;
+use arabesque::pattern::{canon, Pattern};
+use arabesque::util::codec::{Reader, Writer};
+use arabesque::util::rng::Rng;
+
+/// Random connected labeled graph.
+fn random_graph(rng: &mut Rng, n: usize, extra_edges: usize, labels: u32) -> LabeledGraph {
+    let vlabels: Vec<u32> = (0..n).map(|_| rng.gen_range(labels as u64) as u32).collect();
+    let mut edges: Vec<(u32, u32, u32)> = Vec::new();
+    // Random spanning tree for connectivity.
+    for v in 1..n as u32 {
+        let u = rng.gen_range(v as u64) as u32;
+        edges.push((u, v, 0));
+    }
+    for _ in 0..extra_edges {
+        let u = rng.gen_range(n as u64) as u32;
+        let v = rng.gen_range(n as u64) as u32;
+        if u != v {
+            edges.push((u, v, 0));
+        }
+    }
+    LabeledGraph::from_edges(vlabels, &edges)
+}
+
+/// All connected k-subsets of vertices (brute force oracle).
+fn connected_subsets(g: &LabeledGraph, k: usize) -> Vec<Vec<u32>> {
+    fn connected(g: &LabeledGraph, vs: &[u32]) -> bool {
+        let mut seen = vec![false; vs.len()];
+        seen[0] = true;
+        let mut stack = vec![0usize];
+        let mut cnt = 1;
+        while let Some(i) = stack.pop() {
+            for (j, &v) in vs.iter().enumerate() {
+                if !seen[j] && g.is_neighbor(vs[i], v) {
+                    seen[j] = true;
+                    cnt += 1;
+                    stack.push(j);
+                }
+            }
+        }
+        cnt == vs.len()
+    }
+    fn rec(g: &LabeledGraph, k: usize, start: u32, cur: &mut Vec<u32>, out: &mut Vec<Vec<u32>>) {
+        if cur.len() == k {
+            if connected(g, cur) {
+                out.push(cur.clone());
+            }
+            return;
+        }
+        for v in start..g.num_vertices() as u32 {
+            cur.push(v);
+            rec(g, k, v + 1, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(g, k, 0, &mut Vec::new(), &mut out);
+    out
+}
+
+fn all_orderings(set: &[u32]) -> Vec<Vec<u32>> {
+    fn rec(rest: &mut Vec<u32>, cur: &mut Vec<u32>, out: &mut Vec<Vec<u32>>) {
+        if rest.is_empty() {
+            out.push(cur.clone());
+            return;
+        }
+        for i in 0..rest.len() {
+            let v = rest.remove(i);
+            cur.push(v);
+            rec(rest, cur, out);
+            cur.pop();
+            rest.insert(i, v);
+        }
+    }
+    let mut out = Vec::new();
+    rec(&mut set.to_vec(), &mut Vec::new(), &mut out);
+    out
+}
+
+// ------------------------------------------------------------------
+// Canonicality (paper Appendix Theorems 1-3)
+// ------------------------------------------------------------------
+
+/// UNIQUENESS: among all orderings of a connected vertex set, exactly
+/// one passes the incremental canonicality check, and it equals the
+/// constructive canonical form.
+#[test]
+fn prop_canonicality_uniqueness() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_graph(&mut rng, 12, 8, 2);
+        for k in 2..=4usize {
+            for set in connected_subsets(&g, k) {
+                let canonical: Vec<Vec<u32>> = all_orderings(&set)
+                    .into_iter()
+                    .filter(|w| embedding::is_canonical(&g, Mode::VertexInduced, w))
+                    .collect();
+                assert_eq!(canonical.len(), 1, "seed={seed} set={set:?}: {canonical:?}");
+                let cf = embedding::canonical_form(&g, Mode::VertexInduced, &set)
+                    .expect("connected set");
+                assert_eq!(canonical[0], cf.words, "seed={seed}");
+            }
+        }
+    }
+}
+
+/// COMPLETENESS + no duplicates: BFS over canonical extensions reaches
+/// every connected k-subset exactly once (the engine's exploration
+/// invariant, paper Theorem 4).
+#[test]
+fn prop_canonical_exploration_complete_and_duplicate_free() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_graph(&mut rng, 14, 10, 1);
+        let mut frontier: Vec<Vec<u32>> =
+            (0..g.num_vertices() as u32).map(|v| vec![v]).collect();
+        for k in 2..=4usize {
+            let mut next: Vec<Vec<u32>> = Vec::new();
+            for parent in &frontier {
+                let e = embedding::Embedding::new(parent.clone());
+                for x in embedding::extensions(&g, &e, Mode::VertexInduced) {
+                    if embedding::is_canonical_extension(&g, Mode::VertexInduced, parent, x) {
+                        let mut child = parent.clone();
+                        child.push(x);
+                        next.push(child);
+                    }
+                }
+            }
+            // No duplicates (as *sets*): each subset reached once.
+            let mut sets: Vec<Vec<u32>> = next
+                .iter()
+                .map(|w| {
+                    let mut s = w.clone();
+                    s.sort_unstable();
+                    s
+                })
+                .collect();
+            sets.sort();
+            let before = sets.len();
+            sets.dedup();
+            assert_eq!(sets.len(), before, "seed={seed} k={k}: duplicate embeddings");
+            // Complete: equals the brute-force subset count.
+            let want = connected_subsets(&g, k);
+            assert_eq!(sets.len(), want.len(), "seed={seed} k={k}: incomplete");
+            frontier = next;
+        }
+    }
+}
+
+/// Edge-mode canonicality: uniqueness over orderings of edge sets.
+#[test]
+fn prop_edge_mode_uniqueness() {
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_graph(&mut rng, 10, 6, 1);
+        // Random connected edge triples, via extension from each edge.
+        for e0 in 0..g.num_edges() as u32 {
+            let emb = embedding::Embedding::new(vec![e0]);
+            for x in embedding::extensions(&g, &emb, Mode::EdgeInduced) {
+                let set = vec![e0, x];
+                let canonical: Vec<Vec<u32>> = all_orderings(&set)
+                    .into_iter()
+                    .filter(|w| embedding::is_canonical(&g, Mode::EdgeInduced, w))
+                    .collect();
+                assert_eq!(canonical.len(), 1, "seed={seed} edges={set:?}");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Pattern canonization
+// ------------------------------------------------------------------
+
+fn random_pattern(rng: &mut Rng, n: usize, labels: u32) -> Pattern {
+    let vlabels: Vec<u32> = (0..n).map(|_| rng.gen_range(labels as u64) as u32).collect();
+    let mut edges = Vec::new();
+    // Spanning tree + random extras (patterns are connected in practice).
+    for v in 1..n as u8 {
+        let u = rng.gen_range(v as u64) as u8;
+        edges.push((u, v, rng.gen_range(2) as u32));
+    }
+    for _ in 0..n {
+        let a = rng.gen_range(n as u64) as u8;
+        let b = rng.gen_range(n as u64) as u8;
+        if a != b {
+            edges.push((a.min(b), a.max(b), rng.gen_range(2) as u32));
+        }
+    }
+    Pattern::new(vlabels, edges)
+}
+
+fn random_perm(rng: &mut Rng, n: usize) -> Vec<u8> {
+    let mut p: Vec<u8> = (0..n as u8).collect();
+    for i in (1..n).rev() {
+        let j = rng.gen_range((i + 1) as u64) as usize;
+        p.swap(i, j);
+    }
+    p
+}
+
+/// Canonical form is invariant under vertex relabeling, and the
+/// returned permutation actually maps the input onto the canonical form.
+#[test]
+fn prop_canonical_pattern_invariant() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.gen_range(5) as usize;
+        let p = random_pattern(&mut rng, n, 3);
+        let (c0, perm0) = canon::canonicalize(&p);
+        assert_eq!(p.permuted(&perm0), c0, "seed={seed}");
+        let sigma = random_perm(&mut rng, n);
+        let q = p.permuted(&sigma);
+        let (c1, perm1) = canon::canonicalize(&q);
+        assert_eq!(c0, c1, "seed={seed}: canonization not invariant");
+        assert_eq!(q.permuted(&perm1), c1, "seed={seed}");
+    }
+}
+
+/// The automorphism set is a group: contains identity, closed under
+/// composition, and every member preserves the pattern.
+#[test]
+fn prop_automorphisms_form_group() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.gen_range(4) as usize;
+        let p = random_pattern(&mut rng, n, 2);
+        let autos = canon::automorphisms(&p);
+        let id: Vec<u8> = (0..n as u8).collect();
+        assert!(autos.contains(&id), "seed={seed}: missing identity");
+        let set: HashSet<&Vec<u8>> = autos.iter().collect();
+        for a in &autos {
+            assert_eq!(p.permuted(a), p, "seed={seed}: not an automorphism");
+            for b in &autos {
+                // compose: (a then b)[v] = b[a[v]]
+                let ab: Vec<u8> = (0..n).map(|v| b[a[v] as usize]).collect();
+                assert!(set.contains(&ab), "seed={seed}: not closed");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// ODAG
+// ------------------------------------------------------------------
+
+/// Round trip: everything stored is extracted; everything extracted is
+/// canonical; partitions are disjoint and complete for any worker
+/// count / block size.
+#[test]
+fn prop_odag_roundtrip_and_partitions() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_graph(&mut rng, 16, 14, 1);
+        let k = 3 + rng.gen_range(2) as usize;
+        // Store a random subset of the canonical embeddings.
+        let mut all: Vec<Vec<u32>> = Vec::new();
+        for set in connected_subsets(&g, k) {
+            let cf = embedding::canonical_form(&g, Mode::VertexInduced, &set).unwrap();
+            all.push(cf.words);
+        }
+        if all.is_empty() {
+            continue;
+        }
+        let stored: Vec<Vec<u32>> =
+            all.iter().filter(|_| rng.chance(0.6)).cloned().collect();
+        if stored.is_empty() {
+            continue;
+        }
+        let mut odag = Odag::new(k);
+        for e in &stored {
+            odag.add(e);
+        }
+
+        let mut whole: Vec<Vec<u32>> = Vec::new();
+        odag.enumerate(&g, Mode::VertexInduced, 0, 1, 8, |w| whole.push(w.to_vec()));
+        for e in &stored {
+            assert!(whole.contains(e), "seed={seed}: lost {e:?}");
+        }
+        for w in &whole {
+            assert!(
+                embedding::is_canonical(&g, Mode::VertexInduced, w),
+                "seed={seed}: non-canonical extraction {w:?}"
+            );
+        }
+
+        let workers = 1 + rng.gen_range(6) as usize;
+        let block = 1 + rng.gen_range(16);
+        let mut parts: Vec<Vec<u32>> = Vec::new();
+        for me in 0..workers {
+            odag.enumerate(&g, Mode::VertexInduced, me, workers, block, |w| {
+                parts.push(w.to_vec())
+            });
+        }
+        parts.sort();
+        let mut whole_sorted = whole.clone();
+        whole_sorted.sort();
+        assert_eq!(parts, whole_sorted, "seed={seed} w={workers} b={block}");
+    }
+}
+
+/// Merge is a set union: merging shards equals building whole.
+#[test]
+fn prop_odag_merge_is_union() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_graph(&mut rng, 12, 10, 1);
+        let subsets = connected_subsets(&g, 3);
+        if subsets.is_empty() {
+            continue;
+        }
+        let canon_embs: Vec<Vec<u32>> = subsets
+            .iter()
+            .map(|s| embedding::canonical_form(&g, Mode::VertexInduced, s).unwrap().words)
+            .collect();
+        let shards = 1 + rng.gen_range(4) as usize;
+        let mut parts: Vec<Odag> = (0..shards).map(|_| Odag::new(3)).collect();
+        let mut whole = Odag::new(3);
+        for e in &canon_embs {
+            whole.add(e);
+            parts[rng.gen_range(shards as u64) as usize].add(e);
+        }
+        let mut merged = Odag::new(3);
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged, whole, "seed={seed}");
+        // Serialization roundtrip of the merged ODAG.
+        let mut w = Writer::new();
+        merged.serialize(&mut w);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), merged.byte_size());
+        let back = Odag::deserialize(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(back, merged, "seed={seed}: serde roundtrip");
+    }
+}
+
+// ------------------------------------------------------------------
+// Codec fuzz
+// ------------------------------------------------------------------
+
+/// Random write sequences read back exactly; truncated buffers error
+/// instead of panicking.
+#[test]
+fn prop_codec_roundtrip_and_truncation() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let mut w = Writer::new();
+        let mut script: Vec<(u8, u64)> = Vec::new();
+        for _ in 0..rng.gen_range(20) + 1 {
+            match rng.gen_range(3) {
+                0 => {
+                    let v = rng.next_u64() as u8;
+                    w.put_u8(v);
+                    script.push((0, v as u64));
+                }
+                1 => {
+                    let v = rng.next_u64() as u32;
+                    w.put_u32(v);
+                    script.push((1, v as u64));
+                }
+                _ => {
+                    let v = rng.next_u64();
+                    w.put_u64(v);
+                    script.push((2, v));
+                }
+            }
+        }
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        for (kind, v) in &script {
+            let got = match kind {
+                0 => r.get_u8().unwrap() as u64,
+                1 => r.get_u32().unwrap() as u64,
+                _ => r.get_u64().unwrap(),
+            };
+            assert_eq!(got, *v, "seed={seed}");
+        }
+        assert!(r.is_exhausted());
+        // Truncation: reading from a cut buffer must error gracefully.
+        if bytes.len() > 1 {
+            let cut = &bytes[..bytes.len() / 2];
+            let mut r = Reader::new(cut);
+            let mut errored = false;
+            for (kind, _) in &script {
+                let res = match kind {
+                    0 => r.get_u8().map(|_| ()),
+                    1 => r.get_u32().map(|_| ()),
+                    _ => r.get_u64().map(|_| ()),
+                };
+                if res.is_err() {
+                    errored = true;
+                    break;
+                }
+            }
+            assert!(errored || cut.len() == bytes.len(), "seed={seed}");
+        }
+    }
+}

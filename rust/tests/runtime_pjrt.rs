@@ -1,0 +1,84 @@
+//! PJRT runtime integration: load the AOT census artifacts (built by
+//! `make artifacts` from the L2 JAX model + L1 Pallas kernel) and verify
+//! their numbers against L3 enumeration on real graphs.
+//!
+//! These tests require `artifacts/` to exist; they fail with a clear
+//! message if it doesn't (run `make artifacts`).
+
+use std::path::PathBuf;
+
+use arabesque::graph::{gen, LabeledGraph};
+use arabesque::runtime::{CensusExecutor, Motif3Counts};
+
+fn artifacts_dir() -> PathBuf {
+    // Tests run from the crate root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn executor() -> CensusExecutor {
+    CensusExecutor::load(&artifacts_dir())
+        .expect("artifacts missing — run `make artifacts` before `cargo test`")
+}
+
+fn check_graph(exec: &CensusExecutor, g: &LabeledGraph) {
+    let stats = exec.census(g).expect("census execution");
+    let pjrt = Motif3Counts::from_stats(&stats);
+    let oracle = Motif3Counts::by_enumeration(g);
+    assert_eq!(pjrt, oracle, "census disagrees with enumeration on {g:?}");
+    // Extra fields.
+    assert_eq!(stats.sum_deg.round() as u64, 2 * g.num_edges() as u64);
+    assert_eq!(stats.max_deg.round() as usize, g.max_degree());
+}
+
+#[test]
+fn census_loads_and_reports_platform() {
+    let exec = executor();
+    assert!(exec.max_vertices() >= 256);
+    assert!(!exec.platform().is_empty());
+}
+
+#[test]
+fn census_matches_enumeration_small_graphs() {
+    let exec = executor();
+    for name in ["k5", "diamond", "c6", "star6"] {
+        check_graph(&exec, &gen::small(name).unwrap());
+    }
+}
+
+#[test]
+fn census_matches_enumeration_random_graphs() {
+    let exec = executor();
+    for seed in [1u64, 2, 3] {
+        check_graph(&exec, &gen::erdos_renyi(200, 800, 3, 1, seed));
+    }
+    check_graph(&exec, &gen::barabasi_albert(250, 4, 1, 9));
+}
+
+#[test]
+fn census_uses_larger_tile_when_needed() {
+    let exec = executor();
+    if exec.max_vertices() < 1024 {
+        eprintln!("skipping: only small tiles built");
+        return;
+    }
+    // > 256 vertices forces the 1024 tile.
+    check_graph(&exec, &gen::erdos_renyi(700, 2100, 2, 1, 4));
+}
+
+#[test]
+fn census_rejects_oversized_graph() {
+    let exec = executor();
+    let g = gen::erdos_renyi(exec.max_vertices() + 1, 10, 1, 1, 1);
+    assert!(exec.census(&g).is_err());
+}
+
+#[test]
+fn degrees_output_matches_graph() {
+    let exec = executor();
+    let g = gen::erdos_renyi(100, 300, 2, 1, 8);
+    let deg = exec.degrees(&g).expect("degrees");
+    assert_eq!(deg.len(), g.num_vertices());
+    for (v, &d) in deg.iter().enumerate() {
+        assert_eq!(d.round() as usize, g.degree(v as u32), "vertex {v}");
+    }
+}
