@@ -32,7 +32,30 @@ fn run(g: &arabesque::LabeledGraph, app: &dyn GraphMiningApp, servers: usize, th
     Cluster::new(Config::new(servers, threads)).run(g, app)
 }
 
-fn main() -> anyhow::Result<()> {
+use arabesque::util::err::Result;
+
+/// L1/L2 cross-validation: the AOT PJRT census against the engine and
+/// the enumeration oracle. Only a failed *load* (no `pjrt` feature, no
+/// artifacts) is treated as a skip by the caller; once an executor
+/// exists, any census failure propagates and fails the example.
+fn pjrt_crosscheck(exec: &CensusExecutor) -> Result<()> {
+    println!("PJRT platform: {}", exec.platform());
+    let probe = gen::dataset("citeseer", 0.07)?.unlabeled(); // fits the 256 tile
+    let stats = exec.census(&probe)?;
+    let pjrt = Motif3Counts::from_stats(&stats);
+    let r = run(&probe, &Motifs::new(3), 1, 4);
+    let engine_total: i64 = r.aggregates.pattern_output.values().map(|v| v.as_long()).sum();
+    println!(
+        "census: chains={} triangles={} | engine motif-3 total={}",
+        pjrt.chains, pjrt.triangles, engine_total
+    );
+    assert_eq!(engine_total as u64, pjrt.chains + pjrt.triangles);
+    assert_eq!(pjrt, Motif3Counts::by_enumeration(&probe));
+    println!("MATCH");
+    Ok(())
+}
+
+fn main() -> Result<()> {
     println!("=== Arabesque end-to-end driver ===\n");
 
     // ---- 1. datasets ------------------------------------------------
@@ -81,20 +104,13 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 3. Motifs vs the AOT PJRT census ---------------------------
     println!("\n--- L1/L2 cross-validation: PJRT census vs engine ---");
-    let exec = CensusExecutor::load_default()?;
-    println!("PJRT platform: {}", exec.platform());
-    let probe = gen::dataset("citeseer", 0.07)?.unlabeled(); // fits the 256 tile
-    let stats = exec.census(&probe)?;
-    let pjrt = Motif3Counts::from_stats(&stats);
-    let r = run(&probe, &Motifs::new(3), 1, 4);
-    let engine_total: i64 = r.aggregates.pattern_output.values().map(|v| v.as_long()).sum();
-    println!(
-        "census: chains={} triangles={} | engine motif-3 total={}",
-        pjrt.chains, pjrt.triangles, engine_total
-    );
-    assert_eq!(engine_total as u64, pjrt.chains + pjrt.triangles);
-    assert_eq!(pjrt, Motif3Counts::by_enumeration(&probe));
-    println!("MATCH");
+    match CensusExecutor::load_default() {
+        Ok(exec) => pjrt_crosscheck(&exec)?,
+        Err(e) => {
+            println!("skipped: {e}");
+            println!("(needs the `pjrt` feature + an `xla` dependency + `make artifacts`)");
+        }
+    }
 
     // ---- 4. FSM vs centralized baseline ------------------------------
     println!("\n--- FSM cross-validation: engine vs centralized ---");

@@ -15,7 +15,7 @@ use arabesque::graph::gen;
 use arabesque::output::MemorySink;
 use arabesque::util::human_secs;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> arabesque::util::err::Result<()> {
     let g = gen::dataset("citeseer", 1.0)?;
     println!("input: {g:?}\n");
     let max_edges = 3;

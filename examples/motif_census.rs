@@ -13,8 +13,15 @@ use arabesque::engine::{Cluster, Config};
 use arabesque::graph::gen;
 use arabesque::runtime::{CensusExecutor, Motif3Counts};
 
-fn main() -> anyhow::Result<()> {
-    let exec = CensusExecutor::load_default()?;
+fn main() -> arabesque::util::err::Result<()> {
+    let exec = match CensusExecutor::load_default() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("skipping motif census: {e}");
+            println!("(needs the `pjrt` feature + an `xla` dependency + `make artifacts`)");
+            return Ok(());
+        }
+    };
     println!(
         "PJRT platform: {} | census tiles up to {} vertices",
         exec.platform(),

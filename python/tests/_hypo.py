@@ -1,0 +1,78 @@
+"""`hypothesis` pass-through with a deterministic offline fallback.
+
+CI installs real hypothesis and gets full shrinking/edge-case search;
+the offline dev container must not pip-install anything, so when the
+import fails this shim provides the small subset these tests use —
+``@given``/``@settings`` plus the ``integers``/``floats``/``sampled_from``
+strategies — driven by a PRNG seeded from the test name, so every run
+and every machine sees the same cases and failures reproduce.
+"""
+
+try:  # pragma: no cover - prefer the real library when present
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ModuleNotFoundError:  # pragma: no cover - offline fallback
+    import random
+
+    _DEFAULT_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, sample, boundary=None):
+            self._sample = sample
+            # Boundary values tried before random sampling (cheap
+            # stand-in for hypothesis' edge-case bias).
+            self._boundary = list(boundary or [])
+
+        def draw(self, rnd, index):
+            if index < len(self._boundary):
+                return self._boundary[index]
+            return self._sample(rnd)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda r: r.randint(min_value, max_value),
+                boundary=[min_value, max_value],
+            )
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda r: r.uniform(min_value, max_value),
+                boundary=[min_value, max_value],
+            )
+
+        @staticmethod
+        def sampled_from(items):
+            seq = list(items)
+            return _Strategy(lambda r: r.choice(seq), boundary=seq[:1])
+
+    def given(**strats):
+        def deco(fn):
+            def wrapper():
+                examples = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for i in range(examples):
+                    rnd = random.Random(f"{fn.__module__}.{fn.__name__}:{i}")
+                    kwargs = {k: s.draw(rnd, i) for k, s in strats.items()}
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (offline shim, case {i}): {kwargs!r}"
+                        ) from e
+
+            # No functools.wraps: pytest would follow __wrapped__ to the
+            # parameterized original and demand fixtures for its args.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco

@@ -1,0 +1,10 @@
+"""Test wiring: make `compile` (python/compile) and the local
+`_hypo` shim importable regardless of the pytest invocation directory."""
+
+import sys
+from pathlib import Path
+
+_HERE = Path(__file__).resolve().parent
+for p in (str(_HERE), str(_HERE.parent)):
+    if p not in sys.path:
+        sys.path.insert(0, p)

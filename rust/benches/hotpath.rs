@@ -3,12 +3,15 @@
 //! optimization loop in EXPERIMENTS.md.
 //!
 //! ```text
-//! cargo bench --bench hotpath
+//! cargo bench --bench hotpath             # full iteration counts
+//! cargo bench --bench hotpath -- --test   # CI smoke (tiny counts)
 //! ```
 
 use std::time::Instant;
 
+use arabesque::apps::Motifs;
 use arabesque::embedding::{self, Embedding, Mode};
+use arabesque::engine::{Cluster, Config};
 use arabesque::graph::gen;
 use arabesque::odag::Odag;
 use arabesque::pattern::{self, canon};
@@ -33,8 +36,13 @@ fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
 }
 
 fn main() {
-    println!("=== hot-path microbenchmarks ===");
-    let g = gen::dataset("mico-s", 1.0).unwrap().unlabeled();
+    // `--test` / `--quick`: the CI smoke mode — same code paths, tiny
+    // iteration counts, smaller dataset, so regressions in *compiling or
+    // running* the hot paths fail loudly without minutes of timing.
+    let quick = std::env::args().any(|a| a == "--test" || a == "--quick");
+    let it = |n: u64| if quick { (n / 200).max(1) } else { n };
+    println!("=== hot-path microbenchmarks{} ===", if quick { " (smoke)" } else { "" });
+    let g = gen::dataset("mico-s", if quick { 0.3 } else { 1.0 }).unwrap().unlabeled();
 
     // --- canonicality check (the per-candidate hot path) -------------
     // A mid-size canonical embedding + its candidates.
@@ -53,7 +61,7 @@ fn main() {
     };
     let exts = embedding::extensions(&g, &Embedding::new(parent.clone()), Mode::VertexInduced);
     let probe = exts[exts.len() / 2];
-    bench("is_canonical_extension (k=4, vertex mode)", 2_000_000, || {
+    bench("is_canonical_extension (k=4, vertex mode)", it(2_000_000), || {
         std::hint::black_box(embedding::is_canonical_extension(
             &g,
             Mode::VertexInduced,
@@ -64,23 +72,27 @@ fn main() {
 
     // --- extension generation ----------------------------------------
     let pe = Embedding::new(parent.clone());
-    bench("extensions (k=4, vertex mode)", 200_000, || {
+    bench("extensions (k=4, vertex mode)", it(200_000), || {
         std::hint::black_box(embedding::extensions(&g, &pe, Mode::VertexInduced));
     });
 
     // --- adjacency test ------------------------------------------------
-    bench("is_neighbor (binary search)", 5_000_000, || {
-        std::hint::black_box(g.is_neighbor(std::hint::black_box(17), std::hint::black_box(900)));
+    // Probe vertices clamped to the graph: quick mode shrinks mico-s
+    // below the full-size ids.
+    let vb = (g.num_vertices() as u32 - 1).min(900);
+    let va = 17u32.min(vb);
+    bench("is_neighbor (binary search)", it(5_000_000), || {
+        std::hint::black_box(g.is_neighbor(std::hint::black_box(va), std::hint::black_box(vb)));
     });
 
     // --- quick pattern extraction --------------------------------------
-    bench("quick_pattern (k=4, vertex mode)", 500_000, || {
+    bench("quick_pattern (k=4, vertex mode)", it(500_000), || {
         std::hint::black_box(pattern::quick_pattern(&g, &pe, Mode::VertexInduced));
     });
 
     // --- pattern canonization ------------------------------------------
     let qp = pattern::quick_pattern(&g, &pe, Mode::VertexInduced);
-    bench("canonicalize (4-vertex pattern)", 100_000, || {
+    bench("canonicalize (4-vertex pattern)", it(100_000), || {
         std::hint::black_box(canon::canonicalize(std::hint::black_box(&qp)));
     });
     let k6 = {
@@ -92,18 +104,15 @@ fn main() {
         }
         pattern::Pattern::new(vec![0; 6], edges)
     };
-    bench("canonicalize (K6, worst case)", 20_000, || {
+    bench("canonicalize (K6, worst case)", it(20_000), || {
         std::hint::black_box(canon::canonicalize(std::hint::black_box(&k6)));
     });
 
     // --- ODAG add + enumerate -----------------------------------------
     let embs: Vec<Vec<u32>> = {
-        let mut out = Vec::new();
-        let r = arabesque::engine::Cluster::new(arabesque::engine::Config::new(1, 1))
-            .run(&g, &arabesque::apps::Cliques::new(3));
-        let _ = r;
         // Collect canonical triangles directly.
-        for a in 0..200u32 {
+        let mut out = Vec::new();
+        for a in 0..200u32.min(g.num_vertices() as u32) {
             for &(b, _) in g.neighbors(a) {
                 if b <= a {
                     continue;
@@ -118,7 +127,7 @@ fn main() {
         out
     };
     println!("(odag input: {} triangle embeddings)", embs.len());
-    bench("odag add (k=3)", 50_000, {
+    bench("odag add (k=3)", it(50_000), {
         let mut o = Odag::new(3);
         let mut i = 0usize;
         let embs = &embs;
@@ -131,17 +140,47 @@ fn main() {
     for e in &embs {
         odag.add(e);
     }
-    bench("odag enumerate (full)", 200, || {
+    bench("odag enumerate (full)", it(200).max(2), || {
         let mut n = 0u64;
         odag.enumerate(&g, Mode::VertexInduced, 0, 1, 64, |_| n += 1);
         std::hint::black_box(n);
     });
-    bench("odag enumerate (1 of 8 partitions)", 1_000, || {
+    bench("odag enumerate (1 of 8 partitions)", it(1_000), || {
         let mut n = 0u64;
         odag.enumerate(&g, Mode::VertexInduced, 3, 8, 64, |_| n += 1);
         std::hint::black_box(n);
     });
-    bench("odag costs()", 2_000, || {
+    bench("odag costs()", it(2_000), || {
         std::hint::black_box(odag.costs());
+    });
+
+    // --- frontier extraction: staged vs streaming ----------------------
+    // The seed engine staged every worker partition as a cloned
+    // Vec<Vec<u32>> before processing; the streaming pipeline visits
+    // sequences in place. This pair quantifies what the staging cost.
+    bench("odag extract (staged Vec<Vec<u32>>)", it(200).max(2), || {
+        let mut staged: Vec<Vec<u32>> = Vec::new();
+        odag.enumerate(&g, Mode::VertexInduced, 0, 1, 64, |w| staged.push(w.to_vec()));
+        let mut n = 0u64;
+        for e in &staged {
+            n += e[0] as u64 + e.len() as u64;
+        }
+        std::hint::black_box(n);
+    });
+    bench("odag extract (streaming visitor)", it(200).max(2), || {
+        let mut n = 0u64;
+        odag.enumerate(&g, Mode::VertexInduced, 0, 1, 64, |w| {
+            n += w[0] as u64 + w.len() as u64;
+        });
+        std::hint::black_box(n);
+    });
+
+    // --- whole superstep: streaming pipeline + parallel barrier --------
+    // End-to-end engine probe (motifs-3): covers extraction, the
+    // candidate pipeline, the tree-merge barrier and stats plumbing.
+    let probe_g = gen::dataset("citeseer", if quick { 0.1 } else { 0.3 }).unwrap().unlabeled();
+    bench("cluster run (motifs-3, 1x4 workers)", 2, || {
+        let r = Cluster::new(Config::new(1, 4)).run(&probe_g, &Motifs::new(3));
+        std::hint::black_box(r.processed);
     });
 }

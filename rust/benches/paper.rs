@@ -60,6 +60,9 @@ fn main() {
     if want("table5") {
         table5();
     }
+    if want("barrier") {
+        barrier();
+    }
     if want("census") {
         census();
     }
@@ -477,6 +480,38 @@ fn table5() {
         );
     }
     println!("shape: dense SN explores far more embeddings than sparse Instagram (paper Table 5).");
+}
+
+// ---------------------------------------------------------------------
+// Barrier: parallel tree-merge attribution (ours — enabled by the
+// streaming-superstep engine; not a paper figure). merge-crit is the
+// simulated parallel barrier (critical path of the merge tree +
+// sequential remainder); merge-cpu the total thread-CPU inside merge
+// workers; merge-wall the measured single-core coordinator wall.
+// ---------------------------------------------------------------------
+fn barrier() {
+    println!("\n=== Barrier: parallel merge critical path vs coordinator wall ===");
+    let mico_u = gen::dataset("mico-s", 1.0).unwrap().unlabeled();
+    println!(
+        "{:>8} {:>12} {:>14} {:>14} {:>14}",
+        "workers", "busy-max", "merge-crit", "merge-cpu", "merge-wall"
+    );
+    for workers in [1usize, 2, 4, 8, 16] {
+        let r = Cluster::new(Config::new(1, workers)).run(&mico_u, &Motifs::new(3));
+        let busy: f64 = r.steps.iter().map(|s| s.busy_max.as_secs_f64()).sum();
+        let crit: f64 = r.steps.iter().map(|s| s.merge_critical.as_secs_f64()).sum();
+        let cpu: f64 = r.steps.iter().map(|s| s.merge_cpu.as_secs_f64()).sum();
+        let wall: f64 = r.steps.iter().map(|s| s.merge_wall.as_secs_f64()).sum();
+        println!(
+            "{:>8} {:>12} {:>14} {:>14} {:>14}",
+            workers,
+            human_secs(busy),
+            human_secs(crit),
+            human_secs(cpu),
+            human_secs(wall),
+        );
+    }
+    println!("shape: merge-crit tracks the tree depth, not the worker count.");
 }
 
 // ---------------------------------------------------------------------

@@ -209,21 +209,31 @@ impl PatternAggregator {
     }
 }
 
-/// Merge per-worker canonical maps into the global aggregate (the
-/// reducer side; key ownership and message counting live in the engine).
-pub fn merge_global(
-    parts: Vec<HashMap<Pattern, AggVal>>,
-) -> HashMap<Pattern, AggVal> {
-    let mut out: HashMap<Pattern, AggVal> = HashMap::new();
-    for part in parts {
-        for (k, v) in part {
-            match out.get_mut(&k) {
-                Some(cur) => cur.merge(v),
-                None => {
-                    out.insert(k, v);
-                }
+/// Fold one aggregation map into another by key (the reducer's merge).
+/// Commutative and associative — the engine's parallel tree reduction
+/// relies on both (any merge order yields the same map).
+pub fn merge_into<K: Eq + std::hash::Hash>(
+    dst: &mut HashMap<K, AggVal>,
+    src: HashMap<K, AggVal>,
+) {
+    for (k, v) in src {
+        match dst.get_mut(&k) {
+            Some(cur) => cur.merge(v),
+            None => {
+                dst.insert(k, v);
             }
         }
+    }
+}
+
+/// Merge per-worker canonical maps into the global aggregate (the
+/// reducer side; key ownership and message counting live in the engine).
+pub fn merge_global<K: Eq + std::hash::Hash>(
+    parts: Vec<HashMap<K, AggVal>>,
+) -> HashMap<K, AggVal> {
+    let mut out: HashMap<K, AggVal> = HashMap::new();
+    for part in parts {
+        merge_into(&mut out, part);
     }
     out
 }

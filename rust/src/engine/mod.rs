@@ -1,4 +1,5 @@
-//! The BSP exploration engine (paper §3.1 Algorithm 1, §4.3, §5).
+//! The BSP exploration engine (paper §3.1 Algorithm 1, §4.3, §5), run
+//! as a **streaming superstep pipeline** with a **parallel barrier**.
 //!
 //! The paper runs workers as Giraph "vertices" over a 20-server Hadoop
 //! cluster; here the cluster is simulated in-process: a [`Cluster`] has
@@ -10,24 +11,39 @@
 //! canonization counts, phase breakdowns — is observable in-process
 //! (see DESIGN.md "Substitutions").
 //!
-//! One superstep executes paper Algorithm 1:
+//! One superstep executes paper Algorithm 1 as a *stream*: frontier
+//! extraction (ODAG descent / list-partition walk) feeds each parent
+//! embedding directly into the filter–process loop, so no worker ever
+//! materializes its partition of `I`:
 //!
 //! ```text
-//! for each embedding e in my partition of I:
+//! for each embedding e streamed from my partition of I:   (zero-copy)
 //!     (ODAG mode) re-apply φ to drop spurious extractions
 //!     if α(e):   β(e)
 //!                for each extension e' of e:
 //!                    if e' canonical and φ(e'):
 //!                        π(e'); if shouldExpand(e'): F ← F ∪ {e'}
-//! barrier: flush + merge aggregations (two-level), merge + broadcast F
+//! flush aggregations + per-worker shuffle accounting   (worker-side)
+//! barrier: parallel tree-reduction of worker ODAG stores and
+//!          aggregation maps (pairwise merges across threads), then
+//!          broadcast F + aggregates
 //! ```
+//!
+//! The barrier is no longer a sequential coordinator loop: worker
+//! outputs merge pairwise in `std::thread::scope` rounds
+//! ([`tree_reduce`]), each round's critical path is measured in
+//! thread-CPU time, and [`StepStats::sim_wall`] charges
+//! `busy_max + merge_critical` — what the barrier costs on a real
+//! cluster where the merge itself is spread over the workers. Shuffle
+//! accounting moved into the workers ([`worker::WorkerOut::shuffle_comm`]),
+//! so the coordinator only sums counters; the resulting message/byte
+//! totals are bit-identical to the old sequential loop.
 
 mod worker;
 
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::agg::{self, AggStats, AggVal};
 use crate::api::{GraphMiningApp, RunAggregates};
@@ -35,7 +51,7 @@ use crate::graph::LabeledGraph;
 use crate::odag::OdagStore;
 use crate::output::{CountingSink, OutputSink};
 use crate::pattern::Pattern;
-use crate::stats::{CommStats, PhaseTimes, StepStats};
+use crate::stats::{CommStats, Phase, PhaseTimes, StepStats};
 
 pub use worker::WorkerState;
 
@@ -123,9 +139,9 @@ impl Frontier {
 pub struct RunResult {
     pub steps: Vec<StepStats>,
     pub wall: std::time::Duration,
-    /// Simulated BSP wall time: Σ per-step (busiest worker + merge).
-    /// The scalability metric on this single-core testbed (see
-    /// `StepStats::sim_wall`).
+    /// Simulated BSP wall time: Σ per-step (busiest worker + parallel
+    /// merge critical path). The scalability metric on this single-core
+    /// testbed (see [`StepStats::sim_wall`]).
     pub sim_wall: std::time::Duration,
     /// Values written through `output()` + report().
     pub num_outputs: u64,
@@ -148,6 +164,91 @@ impl RunResult {
     pub fn total_frontier(&self) -> u64 {
         self.steps.iter().map(|s| s.frontier).sum()
     }
+}
+
+/// Parallel pairwise tree reduction — the barrier merge of §4.3 spread
+/// over threads instead of the coordinator. Items merge two at a time
+/// per round (`merge(&mut left, right)`), each round running its pairs
+/// in a `std::thread::scope`; a lone leftover item is carried into the
+/// next round. The merge must be commutative and associative (ODAG
+/// union and aggregation reduce both are), so the tree shape cannot
+/// change the result — `parallel_tree_merge_*` tests pin this.
+///
+/// Returns `(merged, critical, total)` where `critical` is the
+/// simulated parallel merge time (max thread-CPU per round, summed over
+/// rounds) and `total` the thread-CPU across all merge workers. With
+/// `parallel == false` the fold runs inline on the caller's thread
+/// (then `critical == total`), which is also the reference semantics
+/// the parallel path must match.
+pub fn tree_reduce<T: Send>(
+    items: Vec<T>,
+    merge: impl Fn(&mut T, T) + Sync,
+    parallel: bool,
+) -> (Option<T>, Duration, Duration) {
+    let mut items = items;
+    if !parallel {
+        let cpu0 = crate::stats::thread_cpu_time();
+        let mut it = items.into_iter();
+        let folded = it.next().map(|mut acc| {
+            for x in it {
+                merge(&mut acc, x);
+            }
+            acc
+        });
+        let spent = crate::stats::thread_cpu_time().saturating_sub(cpu0);
+        return (folded, spent, spent);
+    }
+
+    let mut critical = Duration::ZERO;
+    let mut total = Duration::ZERO;
+    let merge = &merge;
+    while items.len() > 1 {
+        let mut carried: Option<T> = None;
+        let mut pairs: Vec<(T, T)> = Vec::with_capacity(items.len() / 2);
+        let mut it = items.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => pairs.push((a, b)),
+                None => carried = Some(a),
+            }
+        }
+        let (mut next, times): (Vec<T>, Vec<Duration>) = if pairs.len() == 1 {
+            // A single pair: merging inline beats a thread spawn.
+            let (mut a, b) = pairs.pop().unwrap();
+            let cpu0 = crate::stats::thread_cpu_time();
+            merge(&mut a, b);
+            let spent = crate::stats::thread_cpu_time().saturating_sub(cpu0);
+            (vec![a], vec![spent])
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = pairs
+                    .into_iter()
+                    .map(|(mut a, b)| {
+                        scope.spawn(move || {
+                            let cpu0 = crate::stats::thread_cpu_time();
+                            merge(&mut a, b);
+                            (a, crate::stats::thread_cpu_time().saturating_sub(cpu0))
+                        })
+                    })
+                    .collect();
+                let mut merged = Vec::with_capacity(handles.len());
+                let mut spent = Vec::with_capacity(handles.len());
+                for h in handles {
+                    let (m, t) = h.join().expect("merge thread panicked");
+                    merged.push(m);
+                    spent.push(t);
+                }
+                (merged, spent)
+            })
+        };
+        critical += times.iter().copied().max().unwrap_or(Duration::ZERO);
+        total += times.iter().copied().sum::<Duration>();
+        if let Some(c) = carried {
+            next.push(c);
+        }
+        items = next;
+    }
+    (items.pop(), critical, total)
 }
 
 /// The simulated cluster: the paper's coordinator, scoped to a run.
@@ -177,9 +278,8 @@ impl Cluster {
         let w = cfg.workers();
         let t_run = Instant::now();
 
-        let mut states: Vec<WorkerState> = (0..w)
-            .map(|_| WorkerState::new(cfg.two_level_agg))
-            .collect();
+        let mut states: Vec<WorkerState> =
+            (0..w).map(|_| WorkerState::new(cfg.two_level_agg)).collect();
         let mut frontier = Frontier::Init;
         let mut prev_pattern_aggs: HashMap<Pattern, AggVal> = HashMap::new();
         let mut prev_int_aggs: HashMap<i64, AggVal> = HashMap::new();
@@ -218,15 +318,17 @@ impl Cluster {
                 handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
             });
 
-            // ---- barrier: merge results (coordinator side) ----------
+            // ---- barrier ------------------------------------------
+            // Scalar accumulation + part collection; shuffle accounting
+            // arrives precomputed per worker and only sums here.
             let t_merge = Instant::now();
             let mut st = StepStats { step, ..Default::default() };
-            let mut agg_parts = Vec::with_capacity(w);
+            let mut agg_parts: Vec<HashMap<Pattern, AggVal>> = Vec::with_capacity(w);
             let mut int_parts: Vec<HashMap<i64, AggVal>> = Vec::with_capacity(w);
-            let mut merged_list: Vec<Vec<u32>> = Vec::new();
-            let mut merged_odags = OdagStore::new();
-
-            for (wid, mut out) in outs.into_iter().enumerate() {
+            let mut odag_parts: Vec<OdagStore> = Vec::with_capacity(w);
+            let mut list_parts: Vec<Vec<Vec<u32>>> = Vec::with_capacity(w);
+            let mut list_total = 0usize;
+            for mut out in outs {
                 st.candidates += out.candidates;
                 st.processed += out.processed;
                 st.frontier += out.frontier_added;
@@ -234,57 +336,45 @@ impl Cluster {
                 st.phases.merge(&out.phases);
                 st.busy_max = st.busy_max.max(out.busy);
                 st.busy_sum += out.busy;
+                st.comm.merge(&out.shuffle_comm);
                 processed_total += out.processed;
-
-                // Aggregation shuffle accounting: each (key, value) goes
-                // to its owner worker; only cross-server entries cost
-                // network messages/bytes.
-                let src_server = wid / cfg.threads_per_server;
-                for (k, v) in &out.pattern_part {
-                    let owner = owner_of(k, w) / cfg.threads_per_server;
-                    if owner != src_server {
-                        st.comm.add(1, (k.byte_size() + v.byte_size()) as u64);
-                    }
-                }
-                for (k, v) in &out.int_part {
-                    let owner = (*k as u64 as usize % w) / cfg.threads_per_server;
-                    if owner != src_server {
-                        st.comm.add(1, (8 + v.byte_size()) as u64);
-                    }
-                }
                 agg_parts.push(std::mem::take(&mut out.pattern_part));
                 int_parts.push(std::mem::take(&mut out.int_part));
-
-                // Frontier shuffle accounting: worker-local frontiers are
-                // serialized and merged at their owners.
                 if cfg.use_odag {
-                    st.comm.add(
-                        out.frontier_odag.by_pattern.len() as u64,
-                        out.frontier_odag.byte_size() as u64,
-                    );
-                    merged_odags.merge(&out.frontier_odag);
+                    odag_parts.push(out.frontier_odag);
                 } else {
-                    st.comm.add(out.frontier_added, out.local_list_bytes());
-                    merged_list.extend(out.frontier_list);
+                    list_total += out.frontier_list.len();
+                    list_parts.push(out.frontier_list);
                 }
             }
 
+            // Parallel tree reductions: ODAG union + both aggregation
+            // reduces, pairwise across threads. `critical` accumulates
+            // the simulated parallel time of each tree.
+            let t_par = Instant::now();
+            let parallel = w > 1;
+            let (odags_merged, c_odag, u_odag) =
+                tree_reduce(odag_parts, OdagStore::merge_owned, parallel);
+            let (pat_merged, c_pat, u_pat) =
+                tree_reduce(agg_parts, agg::merge_into, parallel);
+            let (int_merged, c_int, u_int) =
+                tree_reduce(int_parts, agg::merge_into, parallel);
+            let par_wall = t_par.elapsed();
+            st.merge_cpu = u_odag + u_pat + u_int;
+            st.phases.add(Phase::Merge, st.merge_cpu);
+            let merge_critical_par = c_odag + c_pat + c_int;
+
+            // List concatenation is a move-only append; it stays on the
+            // coordinator and lands in the sequential remainder.
+            let mut merged_list: Vec<Vec<u32>> = Vec::with_capacity(list_total);
+            for part in list_parts {
+                merged_list.extend(part);
+            }
+
             // Global aggregates for the NEXT step's α / readAggregate.
-            let step_pattern_aggs = agg::merge_global(agg_parts);
-            let step_int_aggs: HashMap<i64, AggVal> = {
-                let mut out: HashMap<i64, AggVal> = HashMap::new();
-                for part in int_parts {
-                    for (k, v) in part {
-                        match out.get_mut(&k) {
-                            Some(cur) => cur.merge(v),
-                            None => {
-                                out.insert(k, v);
-                            }
-                        }
-                    }
-                }
-                out
-            };
+            let step_pattern_aggs = pat_merged.unwrap_or_default();
+            let step_int_aggs = int_merged.unwrap_or_default();
+
             // Aggregate broadcast: replicated to every other server.
             let agg_bytes: u64 = step_pattern_aggs
                 .iter()
@@ -324,6 +414,7 @@ impl Cluster {
             // worker (paper §5.2: partitioning happens at extraction), so
             // both pay the broadcast — ODAGs just pay far fewer bytes.
             frontier = if cfg.use_odag {
+                let merged_odags = odags_merged.unwrap_or_default();
                 st.frontier_bytes = merged_odags.byte_size() as u64;
                 st.comm.add(
                     merged_odags.by_pattern.len() as u64 * (cfg.servers as u64 - 1),
@@ -331,6 +422,8 @@ impl Cluster {
                 );
                 Frontier::Odag(merged_odags)
             } else {
+                // Single source of truth: the workers' write-time
+                // counter (Fig 9's list series) IS the stored size.
                 st.frontier_bytes = st.list_bytes;
                 st.comm.add(
                     (!merged_list.is_empty()) as u64 * (cfg.servers as u64 - 1),
@@ -344,7 +437,9 @@ impl Cluster {
             comm_total.merge(&st.comm);
             phases_total.merge(&st.phases);
             st.merge_wall = t_merge.elapsed();
-            st.sim_wall = st.busy_max + st.merge_wall;
+            st.merge_critical =
+                merge_critical_par + st.merge_wall.saturating_sub(par_wall);
+            st.sim_wall = st.busy_max + st.merge_critical;
             st.wall = t_step.elapsed();
             steps.push(st);
             step += 1;
@@ -394,11 +489,34 @@ impl Cluster {
     }
 }
 
-/// Deterministic owner worker for an aggregation key.
-fn owner_of(p: &Pattern, workers: usize) -> usize {
-    let mut h = std::collections::hash_map::DefaultHasher::new();
-    p.hash(&mut h);
-    (h.finish() % workers as u64) as usize
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_u32(mut h: u64, v: u32) -> u64 {
+    for b in v.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Deterministic owner worker for a pattern-keyed aggregation entry.
+///
+/// Hashes the pattern's canonical byte content with an explicit FNV-1a:
+/// `DefaultHasher`'s algorithm is unspecified and may change between
+/// Rust releases, which would silently change cross-server shuffle
+/// accounting between toolchains. Pinned by `owner_of_is_toolchain_stable`.
+pub(crate) fn owner_of(p: &Pattern, workers: usize) -> usize {
+    let mut h = FNV_OFFSET;
+    h = fnv1a_u32(h, p.vlabels.len() as u32);
+    for &l in &p.vlabels {
+        h = fnv1a_u32(h, l);
+    }
+    for &(a, b, l) in &p.edges {
+        h = fnv1a_u32(h, a as u32);
+        h = fnv1a_u32(h, b as u32);
+        h = fnv1a_u32(h, l);
+    }
+    (h % workers as u64) as usize
 }
 
 #[cfg(test)]
@@ -407,6 +525,7 @@ mod tests {
     use crate::apps::cliques::Cliques;
     use crate::apps::motifs::Motifs;
     use crate::graph::gen;
+    use crate::util::rng::Rng;
 
     #[test]
     fn config_workers() {
@@ -460,6 +579,12 @@ mod tests {
         assert!(r.steps[0].frontier > 0);
         assert!(r.peak_frontier_bytes > 0);
         assert!(r.wall.as_nanos() > 0);
+        for s in &r.steps {
+            // The simulated barrier cannot be cheaper than its parallel
+            // critical path, and sim_wall charges busy + merge.
+            assert!(s.sim_wall >= s.merge_critical);
+            assert!(s.sim_wall >= s.busy_max);
+        }
     }
 
     #[test]
@@ -472,5 +597,87 @@ mod tests {
         // Broadcast terms multiply by (servers-1) == 0; merge terms remain.
         let r2 = Cluster::new(Config::new(2, 2)).run(&g, &Cliques::new(3));
         assert!(r2.comm.bytes > r.comm.bytes);
+    }
+
+    #[test]
+    fn owner_of_is_toolchain_stable() {
+        // FNV-1a pinned values: these exact owners must hold on every
+        // toolchain and platform (DefaultHasher gave no such guarantee),
+        // keeping shuffle accounting reproducible across Rust versions.
+        let p1 = Pattern::new(vec![0, 1], vec![(0, 1, 0)]);
+        let p2 = Pattern::new(vec![2, 2, 2], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        let p3 = Pattern::new(vec![5, 3], vec![(0, 1, 2)]);
+        assert_eq!(owner_of(&p1, 4), 3);
+        assert_eq!(owner_of(&p1, 7), 3);
+        assert_eq!(owner_of(&p2, 4), 0);
+        assert_eq!(owner_of(&p2, 7), 4);
+        assert_eq!(owner_of(&p3, 4), 2);
+        assert_eq!(owner_of(&p3, 7), 4);
+        // Determinism across calls (trivially true for a pure fn, but
+        // guards against someone reintroducing a seeded hasher).
+        assert_eq!(owner_of(&p1, 32), owner_of(&p1, 32));
+    }
+
+    #[test]
+    fn parallel_tree_merge_of_odag_stores_equals_sequential() {
+        let p = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        let q = Pattern::new(vec![1, 1, 1], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        for shards in [1usize, 2, 3, 5, 8] {
+            let mut rng = Rng::new(shards as u64);
+            let mut parts: Vec<OdagStore> = (0..shards).map(|_| OdagStore::new()).collect();
+            for _ in 0..200 {
+                let shard = rng.gen_range(shards as u64) as usize;
+                let a = rng.gen_range(40) as u32;
+                let b = 40 + rng.gen_range(40) as u32;
+                let c = 80 + rng.gen_range(40) as u32;
+                let pat = if rng.chance(0.5) { &p } else { &q };
+                parts[shard].add(pat, &[a, b, c]);
+            }
+            let (par, _, _) = tree_reduce(parts.clone(), OdagStore::merge_owned, true);
+            let (seq, _, _) = tree_reduce(parts, OdagStore::merge_owned, false);
+            let (par, seq) = (par.unwrap(), seq.unwrap());
+            assert_eq!(par.by_pattern.len(), seq.by_pattern.len(), "shards={shards}");
+            for (k, v) in &par.by_pattern {
+                assert_eq!(seq.by_pattern.get(k), Some(v), "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_tree_merge_of_aggs_equals_merge_global() {
+        for shards in [2usize, 3, 7] {
+            let mut rng = Rng::new(100 + shards as u64);
+            let mut parts: Vec<HashMap<Pattern, AggVal>> =
+                (0..shards).map(|_| HashMap::new()).collect();
+            for _ in 0..300 {
+                let shard = rng.gen_range(shards as u64) as usize;
+                let l0 = rng.gen_range(3) as u32;
+                let l1 = rng.gen_range(3) as u32;
+                let key = Pattern::new(vec![l0, l1], vec![(0, 1, 0)]);
+                let delta = AggVal::Long(1 + rng.gen_range(5) as i64);
+                match parts[shard].get_mut(&key) {
+                    Some(v) => v.merge(delta),
+                    None => {
+                        parts[shard].insert(key, delta);
+                    }
+                }
+            }
+            let (par, _, _) = tree_reduce(parts.clone(), agg::merge_into, true);
+            let want = agg::merge_global(parts);
+            assert_eq!(par.unwrap(), want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_empty_and_singleton() {
+        let (none, c, t) =
+            tree_reduce(Vec::<OdagStore>::new(), OdagStore::merge_owned, true);
+        assert!(none.is_none());
+        assert_eq!(c, Duration::ZERO);
+        assert_eq!(t, Duration::ZERO);
+        let mut s = OdagStore::new();
+        s.add(&Pattern::new(vec![0, 0], vec![(0, 1, 0)]), &[1, 2]);
+        let (one, _, _) = tree_reduce(vec![s], OdagStore::merge_owned, true);
+        assert_eq!(one.unwrap().num_patterns(), 1);
     }
 }

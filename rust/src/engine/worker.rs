@@ -1,21 +1,35 @@
-//! Per-worker superstep execution (the inner loop of paper Algorithm 1).
+//! Per-worker superstep execution (the inner loop of paper Algorithm 1),
+//! restructured as a **streaming pipeline**: frontier extraction (ODAG
+//! descent or list-partition walk) feeds each parent embedding straight
+//! into the filter–process loop. No worker materializes its partition of
+//! `I` — the old `parents: Vec<Vec<u32>>` staging buffer and its
+//! per-embedding clones are gone. Two reusable scratch embeddings
+//! (parent + child) keep the hot loop allocation-free; the only
+//! remaining per-embedding allocation is the frontier write itself in
+//! list mode (a survivor must outlive the step).
+//!
+//! The worker also computes its own cross-server shuffle accounting
+//! (paper §4.3) before returning, so the barrier merely sums
+//! [`WorkerOut::shuffle_comm`] — the coordinator no longer walks every
+//! aggregation entry of every worker.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use crate::agg::{AggVal, IntAggregator, PatternAggregator};
 use crate::api::{Ctx, GraphMiningApp};
-use crate::embedding::{self, Embedding};
+use crate::embedding::{self, Embedding, Mode};
 use crate::graph::LabeledGraph;
 use crate::odag::OdagStore;
 use crate::output::OutputSink;
 use crate::pattern::{self, Pattern};
-use crate::stats::{Phase, PhaseTimes};
+use crate::stats::{CommStats, Phase, PhaseTimes};
 
-use super::{Config, Frontier};
+use super::{owner_of, Config, Frontier};
 
 /// State a worker keeps across supersteps: its aggregators (with the
-/// quick→canonical cache that makes two-level aggregation amortize) and
-/// the read-side canonization cache.
+/// quick→canonical cache that makes two-level aggregation amortize), the
+/// read-side canonization cache, and the streaming-scratch embeddings.
 pub struct WorkerState {
     pub pattern_agg: PatternAggregator,
     pub output_agg: PatternAggregator,
@@ -24,6 +38,10 @@ pub struct WorkerState {
     pub autos_cache: HashMap<Pattern, Vec<Vec<u8>>>,
     /// Per-step scratch for applications (see `Ctx::step_memo`).
     pub step_memo: HashMap<Pattern, i64>,
+    /// Streaming-extraction scratch, reused across candidates and steps
+    /// (capacity persists, so steady-state steps never reallocate).
+    scratch_parent: Embedding,
+    scratch_child: Embedding,
 }
 
 impl WorkerState {
@@ -35,6 +53,8 @@ impl WorkerState {
             canon_cache: HashMap::new(),
             autos_cache: HashMap::new(),
             step_memo: HashMap::new(),
+            scratch_parent: Embedding::empty(),
+            scratch_child: Embedding::empty(),
         }
     }
 }
@@ -46,8 +66,11 @@ pub struct WorkerOut {
     pub frontier_list: Vec<Vec<u32>>,
     pub frontier_odag: OdagStore,
     pub frontier_added: u64,
-    /// Bytes the frontier additions occupy as a plain list
-    /// (4-byte length prefix + 4 bytes/word) — Fig 9's comparison series.
+    /// Bytes the frontier additions occupy as a plain list (4-byte
+    /// length prefix + 4 bytes/word) — Fig 9's comparison series and, in
+    /// list mode, the **single source of truth** for stored-frontier
+    /// bytes (the old engine recomputed this at the barrier, a second
+    /// bookkeeping path that could silently diverge).
     pub list_bytes: u64,
     /// Canonical-keyed aggregation flushes for the global merge.
     pub pattern_part: HashMap<Pattern, AggVal>,
@@ -56,14 +79,134 @@ pub struct WorkerOut {
     pub candidates: u64,
     /// Candidates processed by π (passed φ).
     pub processed: u64,
+    /// Cross-server shuffle traffic of this worker's parts, computed
+    /// worker-side. Summing per-worker contributions is bit-identical to
+    /// the old coordinator loop: the individual `add`s are the same and
+    /// counter addition commutes.
+    pub shuffle_comm: CommStats,
     pub phases: PhaseTimes,
     /// This worker's total compute time for the step.
     pub busy: std::time::Duration,
 }
 
-impl WorkerOut {
-    pub fn local_list_bytes(&self) -> u64 {
-        self.frontier_list.iter().map(|w| 4 + 4 * w.len() as u64).sum()
+/// The streaming candidate pipeline — one per worker per superstep.
+///
+/// Extraction callbacks borrow this single object mutably, which is what
+/// lets ODAG descent call back into filter/process without fighting the
+/// borrow checker (the seed engine staged a cloned `Vec<Vec<u32>>`
+/// partition instead). Phase attribution uses explicit `Instant` spans
+/// rather than `PhaseTimes::timed` closures so the callbacks never hold
+/// two mutable borrows.
+struct Pipeline<'a> {
+    cfg: &'a Config,
+    g: &'a LabeledGraph,
+    app: &'a dyn GraphMiningApp,
+    mode: Mode,
+    ctx: Ctx<'a>,
+    out: WorkerOut,
+    phases: PhaseTimes,
+    parent: Embedding,
+    child: Embedding,
+}
+
+impl Pipeline<'_> {
+    /// Process the parent currently in `self.parent`: α/β with the
+    /// aggregates of its generation step, extension generation,
+    /// canonicality, then each surviving candidate. `parent_quick` is
+    /// its quick pattern, already computed by the extraction site (in
+    /// ODAG mode it doubles as the spurious-sequence check — the seed
+    /// engine computed it twice). `reapply_filter` re-runs φ: ODAG
+    /// extraction can surface spurious sequences, and anti-monotonicity
+    /// makes the full-embedding check cover every prefix (see odag
+    /// module docs).
+    fn process_parent(&mut self, parent_quick: Pattern, reapply_filter: bool) {
+        // Parent visit-order vertices: reused by every child's
+        // incremental quick pattern.
+        let t = Instant::now();
+        let parent_verts = self.parent.vertices(self.g, self.mode);
+        self.phases.add(Phase::PatternAgg, t.elapsed());
+        self.ctx.current_quick = Some(parent_quick);
+        if reapply_filter {
+            let t = Instant::now();
+            let ok = self.app.filter(self.g, &self.parent, &mut self.ctx);
+            self.phases.add(Phase::User, t.elapsed());
+            if !ok {
+                self.ctx.current_quick = None;
+                return;
+            }
+        }
+        let t = Instant::now();
+        let alpha = self.app.aggregation_filter(self.g, &self.parent, &mut self.ctx);
+        self.phases.add(Phase::User, t.elapsed());
+        if !alpha {
+            self.ctx.current_quick = None;
+            return;
+        }
+        let t = Instant::now();
+        self.app.aggregation_process(self.g, &self.parent, &mut self.ctx);
+        self.phases.add(Phase::User, t.elapsed());
+        let parent_quick = self.ctx.current_quick.take().unwrap();
+
+        // G: extension candidates.
+        let t = Instant::now();
+        let mut exts = embedding::extensions(self.g, &self.parent, self.mode);
+        self.phases.add(Phase::Generate, t.elapsed());
+        // C: canonicality filter (the per-candidate hot path), in place.
+        let t = Instant::now();
+        let (g, mode) = (self.g, self.mode);
+        let parent_words = &self.parent.words;
+        exts.retain(|&x| embedding::is_canonical_extension(g, mode, parent_words, x));
+        self.phases.add(Phase::Canonicality, t.elapsed());
+        for x in exts {
+            self.handle_candidate(x, &parent_quick, &parent_verts);
+        }
+    }
+
+    /// One candidate child = parent + `word`, built in the reusable
+    /// child scratch: φ, then π + termination filter, then the frontier
+    /// write. `pquick`/`pverts` are the parent's quick pattern and
+    /// visit-order vertex list — each child's quick pattern derives from
+    /// them in O(k) instead of an O(k²) rescan.
+    fn handle_candidate(&mut self, word: u32, pquick: &Pattern, pverts: &[u32]) {
+        self.child.words.clear();
+        self.child.words.extend_from_slice(&self.parent.words);
+        self.child.words.push(word);
+        self.out.candidates += 1;
+        // U: φ first — most candidates die here in pruning apps, so the
+        // quick pattern is computed only for survivors.
+        self.ctx.current_quick = None;
+        let t = Instant::now();
+        let keep = self.app.filter(self.g, &self.child, &mut self.ctx);
+        self.phases.add(Phase::User, t.elapsed());
+        if !keep {
+            return;
+        }
+        self.out.processed += 1;
+        // P: child quick pattern by incremental extension.
+        let t = Instant::now();
+        let quick =
+            pattern::quick_pattern_extend(self.g, pquick, pverts, word, self.mode).0;
+        self.phases.add(Phase::PatternAgg, t.elapsed());
+        self.ctx.current_quick = Some(quick);
+        // U: π + termination filter.
+        let t = Instant::now();
+        self.app.process(self.g, &self.child, &mut self.ctx);
+        let expand = self.app.should_expand(self.g, &self.child);
+        self.phases.add(Phase::User, t.elapsed());
+        if expand {
+            // W: store into the frontier representation.
+            let t = Instant::now();
+            if self.cfg.use_odag {
+                let quick = self.ctx.current_quick.as_ref().unwrap();
+                self.out.frontier_odag.add(quick, &self.child.words);
+            } else {
+                self.out.frontier_list.push(self.child.words.clone());
+            }
+            self.phases.add(Phase::Write, t.elapsed());
+            self.out.frontier_added += 1;
+            self.out.list_bytes += 4 + 4 * self.child.words.len() as u64;
+        }
+        self.ctx.current_quick = None;
     }
 }
 
@@ -83,51 +226,11 @@ pub fn run_step(
 ) -> WorkerOut {
     let mode = app.mode();
     let w = cfg.workers();
-    let mut out = WorkerOut::default();
-    let mut phases = PhaseTimes::default();
     let cpu0 = crate::stats::thread_cpu_time();
     // New superstep: previous-step aggregates changed, app memos expire.
     state.step_memo.clear();
 
-    // ---- R: extract this worker's partition of I -------------------
-    let parents: Vec<Vec<u32>> = phases.timed(Phase::Read, || match frontier {
-        Frontier::Init => Vec::new(),
-        Frontier::List(all) => {
-            // Round-robin blocks of `block` embeddings (paper §5.3).
-            let b = cfg.block as usize;
-            all.iter()
-                .enumerate()
-                .filter(|(i, _)| (i / b) % w == wid)
-                .map(|(_, e)| e.clone())
-                .collect()
-        }
-        Frontier::Odag(store) => {
-            let mut mine = Vec::new();
-            // Deterministic pattern order + one global path-index space,
-            // so round-robin blocks interleave across patterns (a single
-            // pattern smaller than one block would otherwise put all its
-            // work on one worker).
-            let mut pats: Vec<&Pattern> = store.by_pattern.keys().collect();
-            pats.sort_unstable();
-            let mut offset = 0u64;
-            for pat in pats {
-                let odag = &store.by_pattern[pat];
-                offset = odag.enumerate_from(g, mode, wid, w, cfg.block, offset, |words| {
-                    // Drop spurious sequences whose quick pattern differs
-                    // from this ODAG's pattern: such an embedding lives in
-                    // (and is extracted from) its own pattern's ODAG —
-                    // without this check it would be processed twice.
-                    let e = Embedding::new(words.to_vec());
-                    if pattern::quick_pattern(g, &e, mode) == *pat {
-                        mine.push(e.words);
-                    }
-                });
-            }
-            mine
-        }
-    });
-
-    let mut ctx = Ctx {
+    let ctx = Ctx {
         step,
         prev_pattern_aggs,
         prev_int_aggs,
@@ -140,124 +243,131 @@ pub fn run_step(
         autos_cache: &mut state.autos_cache,
         step_memo: &mut state.step_memo,
     };
+    let mut pipe = Pipeline {
+        cfg,
+        g,
+        app,
+        mode,
+        ctx,
+        out: WorkerOut::default(),
+        phases: PhaseTimes::default(),
+        parent: std::mem::replace(&mut state.scratch_parent, Embedding::empty()),
+        child: std::mem::replace(&mut state.scratch_child, Embedding::empty()),
+    };
 
-    // A closure would fight the borrow checker here; keep the candidate
-    // handling inline in both branches instead.
-    // `$pquick`/`$pverts`: the parent's quick pattern and visit-order
-    // vertex list, computed once per parent — each child's quick pattern
-    // derives from them in O(k) instead of an O(k^2) rescan.
-    macro_rules! handle_candidate {
-        ($parent:expr, $word:expr, $pquick:expr, $pverts:expr) => {{
-            let child = Embedding::new({
-                let mut v = Vec::with_capacity($parent.len() + 1);
-                v.extend_from_slice($parent);
-                v.push($word);
-                v
-            });
-            out.candidates += 1;
-            // U: φ first — most candidates die here in pruning apps, so
-            // the quick pattern is computed only for survivors.
-            ctx.current_quick = None;
-            let keep = phases.timed(Phase::User, || app.filter(g, &child, &mut ctx));
-            if keep {
-                out.processed += 1;
-                // P: child quick pattern by incremental extension.
-                let quick = phases.timed(Phase::PatternAgg, || {
-                    pattern::quick_pattern_extend(g, $pquick, $pverts, $word, mode).0
-                });
-                ctx.current_quick = Some(quick);
-                // U: π + termination filter in one timed section (the
-                // per-call clock overhead is visible at millions of
-                // candidates per step).
-                let expand = phases.timed(Phase::User, || {
-                    app.process(g, &child, &mut ctx);
-                    app.should_expand(g, &child)
-                });
-                if expand {
-                    // W: store into the frontier representation.
-                    phases.timed(Phase::Write, || {
-                        if cfg.use_odag {
-                            let quick = ctx.current_quick.as_ref().unwrap();
-                            out.frontier_odag.add(quick, &child.words);
-                        } else {
-                            out.frontier_list.push(child.words.clone());
-                        }
-                    });
-                    out.frontier_added += 1;
-                    out.list_bytes += 4 + 4 * child.words.len() as u64;
-                }
-            }
-            ctx.current_quick = None;
-        }};
-    }
-
+    // ---- R ∘ (U G C P W): stream this worker's partition of I -------
+    // `read_clock` runs while extraction walks the frontier and pauses
+    // while the pipeline handles a parent, so R measures extraction
+    // alone (in the seed it also hid the staging clones it paid for).
     match frontier {
         Frontier::Init => {
             // Step 1: the "undefined" embedding expands to all words.
             let words = embedding::initial_candidates(g, mode);
             let b = cfg.block as usize;
-            let empty: [u32; 0] = [];
             let empty_quick = Pattern::new(vec![], vec![]);
             let empty_verts: [u32; 0] = [];
+            pipe.parent.words.clear();
             for (i, word) in words.into_iter().enumerate() {
                 if (i / b) % w != wid {
                     continue;
                 }
-                handle_candidate!(&empty, word, &empty_quick, &empty_verts);
+                pipe.handle_candidate(word, &empty_quick, &empty_verts);
             }
         }
-        _ => {
-            for parent_words in &parents {
-                let parent = Embedding::new(parent_words.clone());
-                // Parent quick pattern + visit-order vertices: reused by
-                // α and by every child's incremental quick pattern.
-                let (parent_quick, parent_verts) = phases.timed(Phase::PatternAgg, || {
-                    (pattern::quick_pattern(g, &parent, mode), parent.vertices(g, mode))
-                });
-                ctx.current_quick = Some(parent_quick);
-                // ODAG extraction can surface spurious sequences; re-apply
-                // φ (anti-monotonicity makes the full-embedding check
-                // cover every prefix — see odag module docs).
-                if matches!(frontier, Frontier::Odag(_)) {
-                    let ok = phases.timed(Phase::User, || app.filter(g, &parent, &mut ctx));
-                    if !ok {
-                        ctx.current_quick = None;
-                        continue;
-                    }
-                }
-                // α with the aggregates of the parent's generation step.
-                let alpha =
-                    phases.timed(Phase::User, || app.aggregation_filter(g, &parent, &mut ctx));
-                if !alpha {
-                    ctx.current_quick = None;
+        Frontier::List(all) => {
+            // Round-robin blocks of `block` embeddings (paper §5.3),
+            // processed in place — no clone, no staging buffer.
+            let b = cfg.block as usize;
+            let mut read_clock = Instant::now();
+            for (i, words) in all.iter().enumerate() {
+                if (i / b) % w != wid {
                     continue;
                 }
-                phases.timed(Phase::User, || app.aggregation_process(g, &parent, &mut ctx));
-                let parent_quick = ctx.current_quick.take().unwrap();
-
-                // G: extension candidates.
-                let exts =
-                    phases.timed(Phase::Generate, || embedding::extensions(g, &parent, mode));
-                // C: canonicality filter (the per-candidate hot path).
-                let canonical: Vec<u32> = phases.timed(Phase::Canonicality, || {
-                    exts.into_iter()
-                        .filter(|&x| {
-                            embedding::is_canonical_extension(g, mode, parent_words, x)
-                        })
-                        .collect()
-                });
-                for x in canonical {
-                    handle_candidate!(parent_words, x, &parent_quick, &parent_verts);
-                }
+                pipe.phases.add(Phase::Read, read_clock.elapsed());
+                pipe.parent.words.clear();
+                pipe.parent.words.extend_from_slice(words);
+                let t = Instant::now();
+                let quick = pattern::quick_pattern(g, &pipe.parent, mode);
+                pipe.phases.add(Phase::PatternAgg, t.elapsed());
+                pipe.process_parent(quick, false);
+                read_clock = Instant::now();
             }
+            pipe.phases.add(Phase::Read, read_clock.elapsed());
+        }
+        Frontier::Odag(store) => {
+            // Deterministic pattern order + one global path-index space,
+            // so round-robin blocks interleave across patterns (a single
+            // pattern smaller than one block would otherwise put all its
+            // work on one worker).
+            let mut pats: Vec<&Pattern> = store.by_pattern.keys().collect();
+            pats.sort_unstable();
+            let mut offset = 0u64;
+            let mut read_clock = Instant::now();
+            for pat in pats {
+                let odag = &store.by_pattern[pat];
+                offset = odag.enumerate_from(g, mode, wid, w, cfg.block, offset, |words| {
+                    pipe.phases.add(Phase::Read, read_clock.elapsed());
+                    pipe.parent.words.clear();
+                    pipe.parent.words.extend_from_slice(words);
+                    let t = Instant::now();
+                    let quick = pattern::quick_pattern(g, &pipe.parent, mode);
+                    pipe.phases.add(Phase::PatternAgg, t.elapsed());
+                    // Drop spurious sequences whose quick pattern differs
+                    // from this ODAG's pattern: such an embedding lives
+                    // in (and is extracted from) its own pattern's ODAG —
+                    // without this check it would be processed twice.
+                    if quick == *pat {
+                        pipe.process_parent(quick, true);
+                    }
+                    read_clock = Instant::now();
+                });
+            }
+            pipe.phases.add(Phase::Read, read_clock.elapsed());
         }
     }
 
+    let Pipeline { ctx, mut out, mut phases, parent, child, .. } = pipe;
     drop(ctx);
+    state.scratch_parent = parent;
+    state.scratch_child = child;
 
     // ---- P: flush current-step aggregation (canonize quick patterns) --
-    out.pattern_part = phases.timed(Phase::PatternAgg, || state.pattern_agg.flush());
+    let t = Instant::now();
+    out.pattern_part = state.pattern_agg.flush();
+    phases.add(Phase::PatternAgg, t.elapsed());
     out.int_part = state.int_agg.flush();
+
+    // ---- shuffle accounting (paper §4.3), worker-side ----------------
+    // Each (key, value) flows to its owner worker; only entries whose
+    // owner lives on another *server* cost network messages/bytes. The
+    // frontier part is serialized toward its merge in either mode.
+    let src_server = wid / cfg.threads_per_server;
+    for (k, v) in &out.pattern_part {
+        let owner = owner_of(k, w) / cfg.threads_per_server;
+        if owner != src_server {
+            out.shuffle_comm.add(1, (k.byte_size() + v.byte_size()) as u64);
+        }
+    }
+    for (k, v) in &out.int_part {
+        let owner = (*k as u64 as usize % w) / cfg.threads_per_server;
+        if owner != src_server {
+            out.shuffle_comm.add(1, (8 + v.byte_size()) as u64);
+        }
+    }
+    if cfg.use_odag {
+        out.shuffle_comm.add(
+            out.frontier_odag.by_pattern.len() as u64,
+            out.frontier_odag.byte_size() as u64,
+        );
+    } else {
+        debug_assert_eq!(
+            out.list_bytes,
+            out.frontier_list.iter().map(|e| 4 + 4 * e.len() as u64).sum::<u64>(),
+            "list_bytes counter must track the stored list exactly"
+        );
+        out.shuffle_comm.add(out.frontier_added, out.list_bytes);
+    }
+
     out.phases = phases;
     // Thread CPU time, not wall: workers may share cores (see stats).
     out.busy = crate::stats::thread_cpu_time().saturating_sub(cpu0);

@@ -10,7 +10,8 @@
 //! All generators are deterministic given the seed, so experiments are
 //! reproducible and workers can regenerate the identical graph.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::err::Result;
 
 use super::{Label, LabeledGraph, VertexId};
 use crate::util::rng::Rng;

@@ -15,7 +15,8 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::err::{Context, Result};
 
 use super::{Label, LabeledGraph, VertexId};
 

@@ -11,7 +11,8 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use arabesque::bail;
+use arabesque::util::err::{Context, Result};
 
 use arabesque::apps::{Cliques, Fsm, MaximalCliques, Motifs};
 use arabesque::baselines::{tlp::TlpCluster, tlv::TlvCluster};
@@ -211,6 +212,7 @@ fn print_run(r: &RunResult, per_step: bool) {
 fn cmd_census(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     println!("graph: {g:?}");
+    // Without the `pjrt` feature this reports the stub's explanation.
     let exec = CensusExecutor::load_default()?;
     println!(
         "PJRT platform: {} (max tile {})",

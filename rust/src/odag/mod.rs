@@ -336,6 +336,22 @@ impl OdagStore {
         }
     }
 
+    /// Like [`OdagStore::merge`] but consumes `other`, moving whole
+    /// per-pattern ODAGs when this store has no entry for the pattern —
+    /// the fast path of the engine's parallel tree reduction, where
+    /// first contact with a pattern is free. Commutative/associative as
+    /// a set union, so any merge tree yields the same store.
+    pub fn merge_owned(&mut self, other: OdagStore) {
+        for (p, o) in other.by_pattern {
+            match self.by_pattern.get_mut(&p) {
+                Some(mine) => mine.merge(&o),
+                None => {
+                    self.by_pattern.insert(p, o);
+                }
+            }
+        }
+    }
+
     pub fn is_empty(&self) -> bool {
         self.by_pattern.values().all(Odag::is_empty)
     }
@@ -517,6 +533,25 @@ mod tests {
         // All four originals survive extraction.
         for e in [[0u32, 1, 2], [0, 1, 3], [0, 2, 3], [1, 2, 3]] {
             assert!(got.contains(&e.to_vec()));
+        }
+    }
+
+    #[test]
+    fn merge_owned_equals_merge() {
+        let p1 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        let p2 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        let mut a = OdagStore::new();
+        a.add(&p1, &[0, 1, 3]);
+        a.add(&p2, &[0, 1, 2]);
+        let mut b = OdagStore::new();
+        b.add(&p1, &[1, 2, 4]);
+        let mut by_ref = a.clone();
+        by_ref.merge(&b);
+        let mut by_move = a.clone();
+        by_move.merge_owned(b);
+        assert_eq!(by_ref.by_pattern.len(), by_move.by_pattern.len());
+        for (p, o) in &by_ref.by_pattern {
+            assert_eq!(by_move.by_pattern.get(p), Some(o));
         }
     }
 

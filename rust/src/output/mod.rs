@@ -7,7 +7,7 @@ use std::io::{BufWriter, Write as _};
 use std::path::Path;
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use crate::util::err::{Context, Result};
 
 /// A thread-safe sink for application output values.
 pub trait OutputSink: Send + Sync {

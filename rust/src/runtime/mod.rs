@@ -2,17 +2,15 @@
 //! Rust hot path (Python never runs here).
 //!
 //! `make artifacts` lowers the L2 JAX census model (around the L1 Pallas
-//! kernel) to HLO *text* in `artifacts/`; this module compiles those
-//! with the `xla` crate's PJRT CPU client and executes them on dense
-//! adjacency tiles. Used by the Motifs application as an independent
-//! algebraic cross-check of the motif-3 census, and by benches as the
-//! L1/L2 integration probe.
+//! kernel) to HLO *text* in `artifacts/`; with the `pjrt` cargo feature
+//! (which additionally needs an `xla` crate in `[dependencies]` — see
+//! Cargo.toml) this module compiles those with the PJRT CPU client and
+//! executes them on dense adjacency tiles. The **default offline build
+//! compiles a stub** whose [`CensusExecutor::load`] returns an error, so
+//! every caller degrades gracefully to the enumeration oracle
+//! ([`Motif3Counts::by_enumeration`], always available).
 //!
 //! STATS field layout must match python/compile/model.py.
-
-use std::path::{Path, PathBuf};
-
-use anyhow::{bail, Context, Result};
 
 use crate::graph::LabeledGraph;
 
@@ -29,10 +27,11 @@ pub struct CensusStats {
     pub sum_deg3: f32,
 }
 
+#[cfg(feature = "pjrt")]
 impl CensusStats {
-    fn from_vec(v: &[f32]) -> Result<Self> {
+    fn from_vec(v: &[f32]) -> crate::util::err::Result<Self> {
         if v.len() != 8 {
-            bail!("census stats must have 8 fields, got {}", v.len());
+            crate::bail!("census stats must have 8 fields, got {}", v.len());
         }
         Ok(CensusStats {
             n_active: v[0],
@@ -47,117 +46,181 @@ impl CensusStats {
     }
 }
 
-/// One compiled census executable for a fixed tile size `n`.
-struct CensusExe {
-    n: usize,
-    exe: xla::PjRtLoadedExecutable,
+/// Resolve the artifact directory: `$ARABESQUE_ARTIFACTS` or `artifacts/`.
+fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("ARABESQUE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    )
 }
 
-/// Loads every census artifact in a directory and dispatches each graph
-/// to the smallest tile that fits.
-pub struct CensusExecutor {
-    client: xla::PjRtClient,
-    exes: Vec<CensusExe>,
-}
+#[cfg(feature = "pjrt")]
+mod exec {
+    //! The real PJRT-backed executor (requires the `xla` crate).
 
-impl CensusExecutor {
-    /// Load from `artifacts/` (expects `manifest.txt` + `census_<n>.hlo.txt`,
-    /// written by `python -m compile.aot`).
-    pub fn load(dir: &Path) -> Result<Self> {
-        let manifest = dir.join("manifest.txt");
-        let body = std::fs::read_to_string(&manifest).with_context(|| {
-            format!(
-                "read {} — run `make artifacts` first",
-                manifest.display()
-            )
-        })?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let mut exes = Vec::new();
-        for line in body.lines() {
-            let mut tok = line.split_whitespace();
-            let (Some(name), Some(n)) = (tok.next(), tok.next()) else {
-                continue;
+    use std::path::Path;
+
+    use super::CensusStats;
+    use crate::bail;
+    use crate::graph::LabeledGraph;
+    use crate::util::err::{Context, Result};
+
+    /// One compiled census executable for a fixed tile size `n`.
+    struct CensusExe {
+        n: usize,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// Loads every census artifact in a directory and dispatches each
+    /// graph to the smallest tile that fits.
+    pub struct CensusExecutor {
+        client: xla::PjRtClient,
+        exes: Vec<CensusExe>,
+    }
+
+    impl CensusExecutor {
+        /// Load from `artifacts/` (expects `manifest.txt` +
+        /// `census_<n>.hlo.txt`, written by `python -m compile.aot`).
+        pub fn load(dir: &Path) -> Result<Self> {
+            let manifest = dir.join("manifest.txt");
+            let body = std::fs::read_to_string(&manifest).with_context(|| {
+                format!("read {} — run `make artifacts` first", manifest.display())
+            })?;
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            let mut exes = Vec::new();
+            for line in body.lines() {
+                let mut tok = line.split_whitespace();
+                let (Some(name), Some(n)) = (tok.next(), tok.next()) else {
+                    continue;
+                };
+                let n: usize =
+                    n.parse().with_context(|| format!("bad manifest line {line:?}"))?;
+                let path = dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not UTF-8")?,
+                )
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+                exes.push(CensusExe { n, exe });
+            }
+            if exes.is_empty() {
+                bail!("no census artifacts in {}", dir.display());
+            }
+            exes.sort_by_key(|e| e.n);
+            Ok(CensusExecutor { client, exes })
+        }
+
+        pub fn load_default() -> Result<Self> {
+            Self::load(&super::default_artifacts_dir())
+        }
+
+        /// Largest graph (vertex count) the loaded artifacts can census.
+        pub fn max_vertices(&self) -> usize {
+            self.exes.last().map(|e| e.n).unwrap_or(0)
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Run the census on `g` (padded into the smallest fitting tile).
+        pub fn census(&self, g: &LabeledGraph) -> Result<CensusStats> {
+            let nv = g.num_vertices();
+            let Some(exe) = self.exes.iter().find(|e| e.n >= nv) else {
+                bail!(
+                    "graph has {nv} vertices but the largest census tile is {} — \
+                     re-run `make artifacts` with --sizes",
+                    self.max_vertices()
+                );
             };
-            let n: usize = n.parse().with_context(|| format!("bad manifest line {line:?}"))?;
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not UTF-8")?,
-            )
-            .with_context(|| format!("parse HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
-            exes.push(CensusExe { n, exe });
+            let flat = g.dense_adjacency(exe.n);
+            let lit = xla::Literal::vec1(&flat)
+                .reshape(&[exe.n as i64, exe.n as i64])
+                .context("reshape adjacency literal")?;
+            let result = exe
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .context("execute census")?[0][0]
+                .to_literal_sync()
+                .context("fetch census result")?;
+            // aot.py lowers with return_tuple=True: (stats[8], deg[n]).
+            let elems = result.to_tuple().context("unpack census tuple")?;
+            let stats_vec = elems
+                .first()
+                .context("census tuple is empty")?
+                .to_vec::<f32>()
+                .context("stats literal to_vec")?;
+            CensusStats::from_vec(&stats_vec)
         }
-        if exes.is_empty() {
-            bail!("no census artifacts in {}", dir.display());
+
+        /// Per-vertex degrees from the census (cost-model input).
+        pub fn degrees(&self, g: &LabeledGraph) -> Result<Vec<f32>> {
+            let nv = g.num_vertices();
+            let Some(exe) = self.exes.iter().find(|e| e.n >= nv) else {
+                bail!("graph too large for loaded census tiles");
+            };
+            let flat = g.dense_adjacency(exe.n);
+            let lit = xla::Literal::vec1(&flat).reshape(&[exe.n as i64, exe.n as i64])?;
+            let result = exe.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let elems = result.to_tuple()?;
+            let deg = elems
+                .get(1)
+                .context("census tuple lacks degrees")?
+                .to_vec::<f32>()?;
+            Ok(deg[..nv].to_vec())
         }
-        exes.sort_by_key(|e| e.n);
-        Ok(CensusExecutor { client, exes })
-    }
-
-    /// Default artifact location: `$ARABESQUE_ARTIFACTS` or `artifacts/`.
-    pub fn load_default() -> Result<Self> {
-        let dir = std::env::var("ARABESQUE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::load(&PathBuf::from(dir))
-    }
-
-    /// Largest graph (vertex count) the loaded artifacts can census.
-    pub fn max_vertices(&self) -> usize {
-        self.exes.last().map(|e| e.n).unwrap_or(0)
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Run the census on `g` (padded into the smallest fitting tile).
-    pub fn census(&self, g: &LabeledGraph) -> Result<CensusStats> {
-        let nv = g.num_vertices();
-        let Some(exe) = self.exes.iter().find(|e| e.n >= nv) else {
-            bail!(
-                "graph has {nv} vertices but the largest census tile is {} — \
-                 re-run `make artifacts` with --sizes",
-                self.max_vertices()
-            );
-        };
-        let flat = g.dense_adjacency(exe.n);
-        let lit = xla::Literal::vec1(&flat)
-            .reshape(&[exe.n as i64, exe.n as i64])
-            .context("reshape adjacency literal")?;
-        let result = exe
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .context("execute census")?[0][0]
-            .to_literal_sync()
-            .context("fetch census result")?;
-        // aot.py lowers with return_tuple=True: (stats[8], deg[n]).
-        let elems = result.to_tuple().context("unpack census tuple")?;
-        let stats_vec = elems
-            .first()
-            .context("census tuple is empty")?
-            .to_vec::<f32>()
-            .context("stats literal to_vec")?;
-        CensusStats::from_vec(&stats_vec)
-    }
-
-    /// Per-vertex degrees from the census (cost-model input).
-    pub fn degrees(&self, g: &LabeledGraph) -> Result<Vec<f32>> {
-        let nv = g.num_vertices();
-        let Some(exe) = self.exes.iter().find(|e| e.n >= nv) else {
-            bail!("graph too large for loaded census tiles");
-        };
-        let flat = g.dense_adjacency(exe.n);
-        let lit = xla::Literal::vec1(&flat)
-            .reshape(&[exe.n as i64, exe.n as i64])?;
-        let result = exe.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let elems = result.to_tuple()?;
-        let deg = elems
-            .get(1)
-            .context("census tuple lacks degrees")?
-            .to_vec::<f32>()?;
-        Ok(deg[..nv].to_vec())
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod exec {
+    //! Stub executor for the offline build: `load` always errors, so the
+    //! uninhabited `never` field makes every other method trivially
+    //! well-typed (they can never be called).
+
+    use std::path::Path;
+
+    use super::CensusStats;
+    use crate::bail;
+    use crate::graph::LabeledGraph;
+    use crate::util::err::Result;
+
+    pub struct CensusExecutor {
+        never: std::convert::Infallible,
+    }
+
+    impl CensusExecutor {
+        pub fn load(dir: &Path) -> Result<Self> {
+            bail!(
+                "PJRT support is not compiled in (artifacts dir {}); \
+                 build with `--features pjrt` and an `xla` dependency",
+                dir.display()
+            )
+        }
+
+        pub fn load_default() -> Result<Self> {
+            Self::load(&super::default_artifacts_dir())
+        }
+
+        pub fn max_vertices(&self) -> usize {
+            match self.never {}
+        }
+
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+
+        pub fn census(&self, _g: &LabeledGraph) -> Result<CensusStats> {
+            match self.never {}
+        }
+
+        pub fn degrees(&self, _g: &LabeledGraph) -> Result<Vec<f32>> {
+            match self.never {}
+        }
+    }
+}
+
+pub use exec::CensusExecutor;
 
 /// Motif-3 counts derived from a census, comparable with enumeration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -189,4 +252,27 @@ impl Motif3Counts {
     }
 }
 
-// PJRT tests live in rust/tests/runtime_pjrt.rs (they need artifacts).
+// PJRT tests live in rust/tests/runtime_pjrt.rs (they need artifacts and
+// the `pjrt` feature; without either they skip with a message).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_enumeration_counts_k5() {
+        let g = crate::graph::gen::small("k5").unwrap();
+        let m = Motif3Counts::by_enumeration(&g);
+        assert_eq!(m.edges, 10);
+        assert_eq!(m.triangles, 10);
+        // K5 wedges: 5 * C(4,2) = 30; chains = 30 - 3*10 = 0.
+        assert_eq!(m.chains, 0);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let err = CensusExecutor::load(std::path::Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

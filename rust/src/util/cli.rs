@@ -5,7 +5,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::err::{Context, Result};
 
 #[derive(Debug, Default)]
 pub struct Args {

@@ -1,0 +1,126 @@
+//! Minimal error handling replacing `anyhow` (unavailable in the
+//! offline vendor set): a message-chain [`Error`], a [`Result`] alias,
+//! the [`bail!`](crate::bail) macro, and a [`Context`] extension trait
+//! for `Result` and `Option`.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`: that keeps the blanket
+//! `impl<E: std::error::Error> From<E> for Error` coherent, so `?`
+//! converts io/parse errors everywhere without per-type boilerplate.
+
+use std::fmt;
+
+/// A human-readable error: the innermost cause plus every context frame
+/// added on the way up, joined as `outer: inner`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+
+    fn wrap(self, ctx: impl fmt::Display) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    /// `fn main() -> Result<()>` prints the `Debug` form on error; make
+    /// it the readable chain rather than a struct dump.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` stand-in: attach a context frame to the error path
+/// of a `Result`, or turn a `None` into an error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// `anyhow::bail!` stand-in: early-return a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::err::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_digit(s: &str) -> Result<u32> {
+        let d: u32 = s.parse().with_context(|| format!("bad digit {s:?}"))?;
+        if d > 9 {
+            bail!("{d} is not a single digit");
+        }
+        Ok(d)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_digit("7").unwrap(), 7);
+        let e = parse_digit("x").unwrap_err();
+        assert!(e.to_string().starts_with("bad digit \"x\": "), "{e}");
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = parse_digit("12").unwrap_err();
+        assert_eq!(e.to_string(), "12 is not a single digit");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<()> = Err(Error::msg("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+}

@@ -1,10 +1,11 @@
 //! In-tree utilities replacing crates unavailable in the offline vendor
 //! set: a deterministic PRNG (`rng`, no `rand`), a binary codec (`codec`,
-//! no `serde`), a tiny CLI argument parser (`cli`, no `clap`), and human
-//! formatting helpers.
+//! no `serde`), a tiny CLI argument parser (`cli`, no `clap`), an error
+//! type (`err`, no `anyhow`), and human formatting helpers.
 
 pub mod cli;
 pub mod codec;
+pub mod err;
 pub mod rng;
 
 /// Format a byte count as a human-readable string (`12.3 MiB`).

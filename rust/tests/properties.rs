@@ -7,9 +7,11 @@
 
 use std::collections::HashSet;
 
+use arabesque::apps::Motifs;
 use arabesque::embedding::{self, Mode};
+use arabesque::engine::{tree_reduce, Cluster, Config, RunResult};
 use arabesque::graph::{gen, LabeledGraph};
-use arabesque::odag::Odag;
+use arabesque::odag::{Odag, OdagStore};
 use arabesque::pattern::{canon, Pattern};
 use arabesque::util::codec::{Reader, Writer};
 use arabesque::util::rng::Rng;
@@ -343,6 +345,106 @@ fn prop_odag_merge_is_union() {
         assert_eq!(bytes.len(), merged.byte_size());
         let back = Odag::deserialize(&mut Reader::new(&bytes)).unwrap();
         assert_eq!(back, merged, "seed={seed}: serde roundtrip");
+    }
+}
+
+// ------------------------------------------------------------------
+// Engine: streaming superstep pipeline + parallel barrier
+// ------------------------------------------------------------------
+
+fn sorted_output(r: &RunResult) -> Vec<(Pattern, i64)> {
+    let mut v: Vec<(Pattern, i64)> = r
+        .aggregates
+        .pattern_output
+        .iter()
+        .map(|(p, c)| (p.clone(), c.as_long()))
+        .collect();
+    v.sort();
+    v
+}
+
+/// The streaming extraction + parallel tree-merge barrier must
+/// reproduce the reference semantics exactly: identical `processed`,
+/// `candidates`, `num_outputs`, `total_frontier()` and sorted
+/// `pattern_output` across ODAG on/off × two-level on/off × 1–9
+/// workers on Erdős–Rényi graphs, against a 1-worker list-mode run.
+#[test]
+fn prop_streaming_pipeline_matches_reference_semantics() {
+    for seed in 0..3u64 {
+        let n = 24 + (seed as usize % 3) * 8;
+        let g = gen::erdos_renyi(n, 3 * n, 2, 1, seed);
+        let app = Motifs::new(3);
+        let reference = Cluster::new(Config::new(1, 1).with_odag(false)).run(&g, &app);
+        let ref_out = sorted_output(&reference);
+        assert!(reference.processed > 0, "seed={seed}: workload must be nonempty");
+        for workers in 1..=9usize {
+            for odag in [true, false] {
+                for two_level in [true, false] {
+                    let cfg = Config::new(1, workers)
+                        .with_odag(odag)
+                        .with_two_level(two_level)
+                        .with_block(8);
+                    let r = Cluster::new(cfg).run(&g, &app);
+                    let label =
+                        format!("seed={seed} workers={workers} odag={odag} 2l={two_level}");
+                    assert_eq!(r.processed, reference.processed, "{label}");
+                    assert_eq!(r.candidates, reference.candidates, "{label}");
+                    assert_eq!(r.num_outputs, reference.num_outputs, "{label}");
+                    assert_eq!(r.total_frontier(), reference.total_frontier(), "{label}");
+                    assert_eq!(sorted_output(&r), ref_out, "{label}");
+                }
+            }
+        }
+        // Multi-server splits must agree too (shuffle accounting differs,
+        // results must not).
+        for (s, t) in [(2, 2), (3, 3), (4, 2)] {
+            let r = Cluster::new(Config::new(s, t).with_block(8)).run(&g, &app);
+            assert_eq!(r.processed, reference.processed, "seed={seed} {s}x{t}");
+            assert_eq!(sorted_output(&r), ref_out, "seed={seed} {s}x{t}");
+        }
+    }
+}
+
+/// Parallel tree-merge of ODAG stores is a set union: any shard split
+/// and any merge-tree shape yields the store built whole.
+#[test]
+fn prop_parallel_tree_merge_matches_whole_store() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_graph(&mut rng, 14, 12, 1);
+        let k = 3;
+        let embs: Vec<Vec<u32>> = connected_subsets(&g, k)
+            .iter()
+            .filter_map(|s| {
+                embedding::canonical_form(&g, Mode::VertexInduced, s).map(|cf| cf.words)
+            })
+            .collect();
+        if embs.is_empty() {
+            continue;
+        }
+        let quick = |words: &[u32]| {
+            arabesque::pattern::quick_pattern(
+                &g,
+                &embedding::Embedding::new(words.to_vec()),
+                Mode::VertexInduced,
+            )
+        };
+        let shards = 1 + rng.gen_range(6) as usize;
+        let mut parts: Vec<OdagStore> = (0..shards).map(|_| OdagStore::new()).collect();
+        let mut whole = OdagStore::new();
+        for e in &embs {
+            let p = quick(e);
+            whole.add(&p, e);
+            parts[rng.gen_range(shards as u64) as usize].add(&p, e);
+        }
+        let (par, _, _) = tree_reduce(parts.clone(), OdagStore::merge_owned, true);
+        let (seq, _, _) = tree_reduce(parts, OdagStore::merge_owned, false);
+        let (par, seq) = (par.unwrap(), seq.unwrap());
+        assert_eq!(par.num_patterns(), whole.num_patterns(), "seed={seed}");
+        for (p, o) in &whole.by_pattern {
+            assert_eq!(par.by_pattern.get(p), Some(o), "seed={seed}: parallel != whole");
+            assert_eq!(seq.by_pattern.get(p), Some(o), "seed={seed}: sequential != whole");
+        }
     }
 }
 
