@@ -74,7 +74,7 @@ fn main() -> Result<()> {
     // ---- 2. the three applications, scaling workers -----------------
     // This testbed has ONE core, so scalability uses simulated BSP time
     // (per step: busiest worker + coordinator merge), exactly what the
-    // barrier yields on a real cluster. See DESIGN.md "Substitutions".
+    // barrier yields on a real cluster. See ARCHITECTURE.md "Substitutions".
     println!("\n--- scaling (1 worker -> 8 workers, simulated BSP time) ---");
     println!(
         "{:<22} {:>14} {:>10} {:>10} {:>8}",

@@ -12,7 +12,7 @@ single scalar.  Emitting one scalar per tile (instead of the full ``A @ A``
 product) keeps the HBM write traffic at ``O((N/b)^2)`` instead of
 ``O(N^2)`` — the reduction happens while the tile is still in VMEM.
 
-Hardware adaptation (paper -> TPU, see DESIGN.md §Hardware-Adaptation):
+Hardware adaptation (paper -> TPU, see ARCHITECTURE.md "Substitutions"):
 the paper counts size-3 subgraphs by explicit enumeration on CPU workers;
 here the same census is recast as an MXU-shaped blocked contraction.  On a
 real TPU each ``jnp.dot`` maps onto the 128x128 systolic MXU and the

@@ -11,9 +11,9 @@ use std::time::Instant;
 
 use arabesque::apps::Motifs;
 use arabesque::embedding::{self, Embedding, Mode};
-use arabesque::engine::{Cluster, Config};
+use arabesque::engine::{ChunkQueues, Cluster, Config, Partition};
 use arabesque::graph::gen;
-use arabesque::odag::Odag;
+use arabesque::odag::{ExtractionPlan, Odag, OdagStore};
 use arabesque::pattern::{self, canon};
 use arabesque::util::human_count;
 
@@ -152,6 +152,68 @@ fn main() {
     });
     bench("odag costs()", it(2_000), || {
         std::hint::black_box(odag.costs());
+    });
+
+    // --- extraction plan: cached costs vs per-call recomputation ------
+    // The engine builds one ExtractionPlan per step at the barrier; the
+    // old path recomputed costs() per worker per pattern. This pair
+    // shows what the cache saves on a full-range extraction, and the
+    // chunked run shows the per-chunk descent overhead the
+    // work-stealing ledger pays for elasticity.
+    let store = {
+        let mut s = OdagStore::new();
+        for e in &embs {
+            let q = pattern::quick_pattern(&g, &Embedding::new(e.clone()), Mode::VertexInduced);
+            s.add(&q, e);
+        }
+        s
+    };
+    let plan = ExtractionPlan::build(&store);
+    bench("plan build (costs cached once)", it(2_000), || {
+        std::hint::black_box(ExtractionPlan::build(&store));
+    });
+    bench("plan extract (full range, cached costs)", it(200).max(2), || {
+        let mut n = 0u64;
+        plan.enumerate_range(&store, &g, Mode::VertexInduced, 0, plan.total(), |_, w| {
+            n += w[0] as u64;
+        });
+        std::hint::black_box(n);
+    });
+    bench("plan extract (64-index chunks)", it(200).max(2), || {
+        let mut n = 0u64;
+        let mut lo = 0u64;
+        while lo < plan.total() {
+            let hi = (lo + 64).min(plan.total());
+            plan.enumerate_range(&store, &g, Mode::VertexInduced, lo, hi, |_, w| {
+                n += w[0] as u64;
+            });
+            lo = hi;
+        }
+        std::hint::black_box(n);
+    });
+
+    // --- work-stealing chunk ledger ------------------------------------
+    // Claim-path costs of the steal ledger (single-threaded, so the CAS
+    // always succeeds — the uncontended fast path every chunk pays).
+    bench("chunk ledger drain (own pops, 1k chunks)", it(20_000), || {
+        let q = ChunkQueues::new(8 * 1024, 8, 4, Partition::RoundRobin, true);
+        let mut n = 0u64;
+        for w in 0..4 {
+            while let Some(c) = q.next(w) {
+                n += c.hi - c.lo;
+            }
+        }
+        std::hint::black_box(n);
+    });
+    bench("chunk ledger drain (all stolen, 1k chunks)", it(20_000), || {
+        // Worker 3 owns nothing under Skewed(100): every claim is a
+        // victim scan + tail CAS.
+        let q = ChunkQueues::new(8 * 1024, 8, 4, Partition::Skewed(100), true);
+        let mut n = 0u64;
+        while let Some(c) = q.next(3) {
+            n += c.hi - c.lo;
+        }
+        std::hint::black_box(n);
     });
 
     // --- frontier extraction: staged vs streaming ----------------------

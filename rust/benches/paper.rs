@@ -1,5 +1,5 @@
 //! Regenerates every table and figure of the paper's evaluation (§6) on
-//! the scaled synthetic datasets (DESIGN.md "Experiment index").
+//! the scaled synthetic datasets (ARCHITECTURE.md "Experiment index").
 //!
 //! ```text
 //! cargo bench --bench paper            # everything
@@ -8,7 +8,7 @@
 //!
 //! Times on this single-core testbed are *simulated BSP times*
 //! (per step: busiest worker by thread-CPU time + coordinator merge) —
-//! see DESIGN.md "Substitutions". Absolute numbers differ from the
+//! see ARCHITECTURE.md "Substitutions". Absolute numbers differ from the
 //! paper (different datasets, hardware and scale); the *shape* of each
 //! result is the reproduction target, stated per experiment.
 
@@ -18,7 +18,7 @@ use arabesque::apps::{Cliques, Fsm, Motifs};
 use arabesque::baselines::centralized::{self, CentralizedFsm};
 use arabesque::baselines::tlp::TlpCluster;
 use arabesque::baselines::tlv::TlvCluster;
-use arabesque::engine::{Cluster, Config, RunResult};
+use arabesque::engine::{Cluster, Config, Partition, RunResult};
 use arabesque::graph::{gen, LabeledGraph};
 use arabesque::runtime::{CensusExecutor, Motif3Counts};
 use arabesque::util::{human_bytes, human_count, human_secs};
@@ -63,6 +63,9 @@ fn main() {
     if want("barrier") {
         barrier();
     }
+    if want("steal") {
+        steal();
+    }
     if want("census") {
         census();
     }
@@ -77,7 +80,7 @@ fn sim(r: &RunResult) -> f64 {
 /// cluster moves messages by pointer; a real deployment pays per-message
 /// software overhead and wire time, which is exactly what makes TLV two
 /// orders of magnitude slower in the paper. Model (documented in
-/// DESIGN.md): 10us per message (Giraph-era RPC/serialization overhead)
+/// ARCHITECTURE.md): 10us per message (Giraph-era RPC/serialization overhead)
 /// + 10 GbE wire time, divided by `par` (the messages flow concurrently
 /// across that many workers/NICs; the BSP barrier waits for the busiest).
 fn net_adjusted(sim_secs: f64, messages: u64, bytes: u64, par: usize) -> f64 {
@@ -512,6 +515,60 @@ fn barrier() {
         );
     }
     println!("shape: merge-crit tracks the tree depth, not the worker count.");
+}
+
+// ---------------------------------------------------------------------
+// Steal: intra-step work stealing under a skewed partition (ours —
+// paper §5.3 names load skew as the scaling hazard; this experiment
+// injects it and shows the elastic superstep absorbing it). busy-max is
+// the straggler's thread-CPU — the term that stretches sim_wall.
+// Reading the output: with stealing OFF the skewed column pins ~all of
+// busy-sum on one worker (busy-max ≈ busy-sum); with stealing ON thieves
+// drain the loaded queue and busy-max falls toward busy-sum / workers,
+// while `steals`/`stolen-units` show how much of the frontier moved.
+// ---------------------------------------------------------------------
+fn steal() {
+    println!("\n=== Steal: busy-max under a 90%-on-worker-0 partition (1x8, motifs-3) ===");
+    let g = gen::dataset("mico-s", 1.0).unwrap().unlabeled();
+    println!(
+        "{:<22} {:>12} {:>12} {:>12} {:>10} {:>14}",
+        "config", "busy-max", "busy-sum", "sim-wall", "steals", "stolen-units"
+    );
+    let mut results: Vec<(bool, f64)> = Vec::new();
+    for (label, partition, stealing) in [
+        ("round-robin", Partition::RoundRobin, true),
+        ("skew90 no-steal", Partition::Skewed(90), false),
+        ("skew90 steal", Partition::Skewed(90), true),
+    ] {
+        let cfg = Config::new(1, 8).with_partition(partition).with_steal(stealing);
+        let r = Cluster::new(cfg).run(&g, &Motifs::new(3));
+        let busy_max: f64 = r.steps.iter().map(|s| s.busy_max.as_secs_f64()).sum();
+        let busy_sum: f64 = r.steps.iter().map(|s| s.busy_sum.as_secs_f64()).sum();
+        println!(
+            "{:<22} {:>12} {:>12} {:>12} {:>10} {:>14}",
+            label,
+            human_secs(busy_max),
+            human_secs(busy_sum),
+            human_secs(sim(&r)),
+            human_count(r.steals),
+            human_count(r.stolen_units),
+        );
+        if partition == Partition::Skewed(90) {
+            results.push((stealing, busy_max));
+        }
+    }
+    if let (Some(&(_, no_steal)), Some(&(_, with_steal))) = (
+        results.iter().find(|(s, _)| !s),
+        results.iter().find(|(s, _)| *s),
+    ) {
+        println!(
+            "skew90 busy-max: {} (no-steal) -> {} (steal), {:.1}x flatter",
+            human_secs(no_steal),
+            human_secs(with_steal),
+            no_steal / with_steal.max(1e-9),
+        );
+    }
+    println!("shape: stealing pulls busy-max toward busy-sum/8; results are identical.");
 }
 
 // ---------------------------------------------------------------------

@@ -13,6 +13,13 @@
 //! (linear-time key), then canonizes once per distinct quick pattern —
 //! paper Table 4 shows this cuts isomorphism computations by up to
 //! 10 orders of magnitude.
+//!
+//! Every reduction here ([`AggVal::merge`], [`merge_into`],
+//! [`merge_global`]) is **commutative and associative**. The engine
+//! leans on that twice: the barrier merges worker maps by parallel
+//! pairwise tree reduction (`engine::tree_reduce`), and intra-step work
+//! stealing may move any embedding's `map` call to any worker — both
+//! are result-invariant only because merge order cannot matter.
 
 pub mod domain;
 

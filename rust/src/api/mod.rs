@@ -10,6 +10,85 @@
 //!
 //! Framework services (`output`, `map`, `readAggregate`, `mapOutput`)
 //! are provided through [`Ctx`], handed to every application callback.
+//!
+//! # Examples
+//!
+//! The smallest possible application: accept every embedding (φ ≡
+//! true), emit one output per processed embedding, and stop exploring
+//! at three vertices. On a triangle this visits the 3 vertices, the 3
+//! edges and the single 3-vertex embedding — each exactly once, up to
+//! automorphism, which is the engine's completeness guarantee:
+//!
+//! ```
+//! use arabesque::api::{Ctx, ExplorationMode, GraphMiningApp};
+//! use arabesque::embedding::Embedding;
+//! use arabesque::engine::{Cluster, Config};
+//! use arabesque::graph::LabeledGraph;
+//!
+//! struct CountAll;
+//!
+//! impl GraphMiningApp for CountAll {
+//!     fn mode(&self) -> ExplorationMode {
+//!         ExplorationMode::VertexInduced
+//!     }
+//!     fn filter(&self, _g: &LabeledGraph, _e: &Embedding, _ctx: &mut Ctx) -> bool {
+//!         true // φ: every candidate is interesting
+//!     }
+//!     fn process(&self, _g: &LabeledGraph, _e: &Embedding, ctx: &mut Ctx) {
+//!         ctx.output("seen"); // π: one output per embedding
+//!     }
+//!     fn should_expand(&self, _g: &LabeledGraph, e: &Embedding) -> bool {
+//!         e.len() < 3 // stop growing at 3 vertices
+//!     }
+//! }
+//!
+//! let triangle =
+//!     LabeledGraph::from_edges(vec![0, 0, 0], &[(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+//! let r = Cluster::new(Config::new(1, 2)).run(&triangle, &CountAll);
+//! assert_eq!(r.num_outputs, 3 + 3 + 1);
+//! ```
+//!
+//! Aggregation: `map`-ing a value under the current embedding's pattern
+//! groups automorphic embeddings together (two-level aggregation makes
+//! this cheap — the key is the quick pattern, canonized once per
+//! distinct quick pattern). A toy labeled-edge census over the path
+//! `0–1–2` with labels `[7, 7, 9]` finds one `(7,7)` edge and one
+//! `(7,9)` edge:
+//!
+//! ```
+//! use arabesque::agg::AggVal;
+//! use arabesque::api::{Ctx, ExplorationMode, GraphMiningApp};
+//! use arabesque::embedding::Embedding;
+//! use arabesque::engine::{Cluster, Config};
+//! use arabesque::graph::LabeledGraph;
+//!
+//! struct EdgeCensus;
+//!
+//! impl GraphMiningApp for EdgeCensus {
+//!     fn mode(&self) -> ExplorationMode {
+//!         ExplorationMode::VertexInduced
+//!     }
+//!     fn filter(&self, _g: &LabeledGraph, e: &Embedding, _ctx: &mut Ctx) -> bool {
+//!         e.len() <= 2 // anti-monotone: prefixes of accepted embeddings accepted
+//!     }
+//!     fn process(&self, _g: &LabeledGraph, e: &Embedding, ctx: &mut Ctx) {
+//!         if e.len() == 2 {
+//!             // mapOutput(pattern(e), 1): reduced once, at end of run.
+//!             ctx.map_output_current(AggVal::Long(1));
+//!         }
+//!     }
+//!     fn should_expand(&self, _g: &LabeledGraph, e: &Embedding) -> bool {
+//!         e.len() < 2
+//!     }
+//! }
+//!
+//! let path = LabeledGraph::from_edges(vec![7, 7, 9], &[(0, 1, 0), (1, 2, 0)]);
+//! let r = Cluster::new(Config::new(1, 1)).run(&path, &EdgeCensus);
+//! let mut counts: Vec<i64> =
+//!     r.aggregates.pattern_output.values().map(|v| v.as_long()).collect();
+//! counts.sort();
+//! assert_eq!(counts, vec![1, 1], "one (7,7) edge and one (7,9) edge");
+//! ```
 
 use std::collections::HashMap;
 

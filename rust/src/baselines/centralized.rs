@@ -1,7 +1,7 @@
 //! Centralized (single-threaded) baselines for Table 2.
 //!
 //! Each implements the defining algorithm of the system the paper
-//! compares against (see DESIGN.md "Substitutions"):
+//! compares against (see ARCHITECTURE.md "Substitutions"):
 //! * `bron_kerbosch` — maximal cliques with pivoting [8] (Mace [36]);
 //! * `count_cliques` — plain recursive k-clique enumeration;
 //! * `motif_census` — ESU-style exact-size connected induced subgraph

@@ -28,7 +28,7 @@ pub struct TlvResult {
     pub wall: Duration,
     /// Simulated BSP time: per superstep, busiest worker (thread CPU
     /// time) + the dedup-owner phase — comparable with
-    /// `RunResult::sim_wall` (single-core testbed, see DESIGN.md).
+    /// `RunResult::sim_wall` (single-core testbed, see ARCHITECTURE.md).
     pub sim_wall: Duration,
     /// Total messages (embedding copies to border vertices + dedup
     /// routing + aggregation traffic).

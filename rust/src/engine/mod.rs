@@ -9,7 +9,7 @@
 //! broadcast, aggregation shuffle). All of the paper's techniques are
 //! algorithmic, so their behaviour — compression ratios, load balance,
 //! canonization counts, phase breakdowns — is observable in-process
-//! (see DESIGN.md "Substitutions").
+//! (see ARCHITECTURE.md "Substitutions").
 //!
 //! One superstep executes paper Algorithm 1 as a *stream*: frontier
 //! extraction (ODAG descent / list-partition walk) feeds each parent
@@ -29,30 +29,50 @@
 //!          broadcast F + aggregates
 //! ```
 //!
+//! Within a step the partition is **elastic** (paper §5.3 taken past
+//! static blocks): the frontier index space is cut into chunks behind a
+//! shared atomic ledger ([`steal::ChunkQueues`]), each worker drains its
+//! own queue first (bit-compatible with the static round-robin blocks),
+//! and a worker that runs dry steals chunks from the heaviest peer.
+//! Stealing moves placement, never results — every downstream reduction
+//! is commutative and associative — so a stealing run is equivalence-
+//! tested against the static reference while `busy_max` flattens toward
+//! `busy_sum / workers` (the `paper` bench's `steal` experiment).
+//!
 //! The barrier is no longer a sequential coordinator loop: worker
 //! outputs merge pairwise in `std::thread::scope` rounds
 //! ([`tree_reduce`]), each round's critical path is measured in
 //! thread-CPU time, and [`StepStats::sim_wall`] charges
 //! `busy_max + merge_critical` — what the barrier costs on a real
-//! cluster where the merge itself is spread over the workers. Shuffle
-//! accounting moved into the workers ([`worker::WorkerOut::shuffle_comm`]),
-//! so the coordinator only sums counters; the resulting message/byte
-//! totals are bit-identical to the old sequential loop.
+//! cluster where the merge itself is spread over the workers. The
+//! aggregate *broadcast* (history fold + byte accounting) rides the
+//! same parallel barrier as two measured tasks instead of a coordinator
+//! loop, and ODAG extraction state (sorted pattern order + §5.3 cost
+//! tables) is built once here as an [`ExtractionPlan`] rather than
+//! recomputed by every worker. Shuffle accounting lives in the workers
+//! ([`worker::WorkerOut::shuffle_comm`]), so the coordinator only sums
+//! counters; with stealing disabled the message/byte totals are
+//! bit-identical to the old sequential loop (with stealing they track
+//! where entries were actually computed).
 
-mod worker;
+pub mod steal;
+pub mod worker;
 
 use std::collections::HashMap;
+use std::hash::Hash;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::agg::{self, AggStats, AggVal};
 use crate::api::{GraphMiningApp, RunAggregates};
+use crate::embedding;
 use crate::graph::LabeledGraph;
-use crate::odag::OdagStore;
+use crate::odag::{ExtractionPlan, OdagStore};
 use crate::output::{CountingSink, OutputSink};
 use crate::pattern::Pattern;
 use crate::stats::{CommStats, Phase, PhaseTimes, StepStats};
 
+pub use steal::{ChunkQueues, Claim, Partition};
 pub use worker::WorkerState;
 
 /// Engine configuration. `servers` models the paper's physical machines
@@ -68,9 +88,19 @@ pub struct Config {
     /// Two-level pattern aggregation (paper §5.4). When false, every
     /// mapped embedding is canonized individually (Fig 11's ablation).
     pub two_level_agg: bool,
-    /// Load-balancing block size `b` (paper §5.3): workers claim blocks
-    /// of this many consecutive path indices round-robin.
+    /// Load-balancing block size `b` (paper §5.3): the frontier index
+    /// space is cut into chunks of this many consecutive indices — the
+    /// unit of both the initial partition and of work stealing.
     pub block: u64,
+    /// Intra-step work stealing: workers that drain their own chunk
+    /// queue take chunks from the heaviest peer (see [`steal`]). Never
+    /// changes results; disable to get the paper's static §5.3
+    /// partition as the accounting reference.
+    pub steal: bool,
+    /// Initial chunk placement. [`Partition::RoundRobin`] is the paper's
+    /// §5.3 scheme; [`Partition::Skewed`] concentrates chunks on worker
+    /// 0 to reproduce the load-skew hazard in tests and benches.
+    pub partition: Partition,
     /// Safety cap on exploration steps (applications normally terminate
     /// via `should_expand` / empty frontiers).
     pub max_steps: usize,
@@ -84,6 +114,8 @@ impl Config {
             use_odag: true,
             two_level_agg: true,
             block: 64,
+            steal: true,
+            partition: Partition::RoundRobin,
             max_steps: 64,
         }
     }
@@ -108,6 +140,16 @@ impl Config {
         self
     }
 
+    pub fn with_steal(mut self, on: bool) -> Self {
+        self.steal = on;
+        self
+    }
+
+    pub fn with_partition(mut self, p: Partition) -> Self {
+        self.partition = p;
+        self
+    }
+
     pub fn with_max_steps(mut self, n: usize) -> Self {
         self.max_steps = n;
         self
@@ -121,8 +163,10 @@ pub enum Frontier {
     Init,
     /// Plain embedding list (word sequences).
     List(Vec<Vec<u32>>),
-    /// One ODAG per pattern (paper §5.2).
-    Odag(OdagStore),
+    /// One ODAG per pattern (paper §5.2), with the extraction plan
+    /// (sorted pattern order + cached §5.3 cost tables) built once at
+    /// the barrier and read by every worker.
+    Odag(OdagStore, ExtractionPlan),
 }
 
 impl Frontier {
@@ -130,7 +174,7 @@ impl Frontier {
         match self {
             Frontier::Init => false,
             Frontier::List(v) => v.is_empty(),
-            Frontier::Odag(s) => s.is_empty(),
+            Frontier::Odag(s, _) => s.is_empty(),
         }
     }
 }
@@ -150,6 +194,11 @@ pub struct RunResult {
     pub processed: u64,
     /// Candidates that passed canonicality (pre-φ).
     pub candidates: u64,
+    /// Work-steal operations across the run (Σ per-step
+    /// [`StepStats::steals`]).
+    pub steals: u64,
+    /// Frontier index units that moved workers via stealing.
+    pub stolen_units: u64,
     pub comm: CommStats,
     pub phases: PhaseTimes,
     pub agg_stats: AggStats,
@@ -251,6 +300,30 @@ pub fn tree_reduce<T: Send>(
     (items.pop(), critical, total)
 }
 
+/// One side of the aggregate broadcast, folded into the parallel
+/// barrier: merge the step's reduced map into the run history and sum
+/// the entry bytes the broadcast will ship — one measured pass instead
+/// of the two sequential coordinator loops it replaces. Returns the
+/// updated history, the byte total, and the thread-CPU spent.
+fn fold_broadcast<K: Clone + Eq + Hash>(
+    mut history: HashMap<K, AggVal>,
+    step: &HashMap<K, AggVal>,
+    key_bytes: fn(&K) -> usize,
+) -> (HashMap<K, AggVal>, u64, Duration) {
+    let cpu0 = crate::stats::thread_cpu_time();
+    let mut bytes = 0u64;
+    for (k, v) in step {
+        bytes += (key_bytes(k) + v.byte_size()) as u64;
+        match history.get_mut(k) {
+            Some(cur) => cur.merge(v.clone()),
+            None => {
+                history.insert(k.clone(), v.clone());
+            }
+        }
+    }
+    (history, bytes, crate::stats::thread_cpu_time().saturating_sub(cpu0))
+}
+
 /// The simulated cluster: the paper's coordinator, scoped to a run.
 pub struct Cluster {
     pub cfg: Config,
@@ -291,15 +364,35 @@ impl Cluster {
         let mut phases_total = PhaseTimes::default();
         let mut candidates_total = 0u64;
         let mut processed_total = 0u64;
+        let mut steals_total = 0u64;
+        let mut stolen_units_total = 0u64;
         let mut peak_frontier_bytes = 0u64;
 
         let mut step = 1usize;
         while step <= cfg.max_steps && !frontier.is_empty() {
             let t_step = Instant::now();
 
+            // ---- chunk ledger: the step's elastic partition ---------
+            // Step 1's word list is computed once here (the seed had
+            // every worker recompute it); ODAG steps read their unit
+            // count from the plan built at the previous barrier.
+            let init_words: Option<Vec<u32>> = match &frontier {
+                Frontier::Init => Some(embedding::initial_candidates(g, app.mode())),
+                _ => None,
+            };
+            let total_units: u64 = match &frontier {
+                Frontier::Init => init_words.as_ref().map_or(0, |v| v.len() as u64),
+                Frontier::List(v) => v.len() as u64,
+                Frontier::Odag(_, plan) => plan.total(),
+            };
+            let queues =
+                ChunkQueues::new(total_units, cfg.block, w, cfg.partition, cfg.steal);
+
             // ---- compute phase: one scoped thread per worker --------
             let outs: Vec<worker::WorkerOut> = std::thread::scope(|scope| {
                 let frontier = &frontier;
+                let queues = &queues;
+                let init = init_words.as_deref();
                 let prev_p = &prev_pattern_aggs;
                 let prev_i = &prev_int_aggs;
                 let handles: Vec<_> = states
@@ -309,8 +402,8 @@ impl Cluster {
                         let sink = Arc::clone(&sink);
                         scope.spawn(move || {
                             worker::run_step(
-                                wid, cfg, g, app, frontier, prev_p, prev_i, state,
-                                sink.as_ref(), step,
+                                wid, cfg, g, app, frontier, init, queues, prev_p, prev_i,
+                                state, sink.as_ref(), step,
                             )
                         })
                     })
@@ -333,6 +426,8 @@ impl Cluster {
                 st.processed += out.processed;
                 st.frontier += out.frontier_added;
                 st.list_bytes += out.list_bytes;
+                st.steals += out.steals;
+                st.stolen_units += out.stolen_units;
                 st.phases.merge(&out.phases);
                 st.busy_max = st.busy_max.max(out.busy);
                 st.busy_sum += out.busy;
@@ -359,10 +454,9 @@ impl Cluster {
                 tree_reduce(agg_parts, agg::merge_into, parallel);
             let (int_merged, c_int, u_int) =
                 tree_reduce(int_parts, agg::merge_into, parallel);
-            let par_wall = t_par.elapsed();
+            let mut par_wall = t_par.elapsed();
             st.merge_cpu = u_odag + u_pat + u_int;
-            st.phases.add(Phase::Merge, st.merge_cpu);
-            let merge_critical_par = c_odag + c_pat + c_int;
+            let mut merge_critical_par = c_odag + c_pat + c_int;
 
             // List concatenation is a move-only append; it stays on the
             // coordinator and lands in the sequential remainder.
@@ -375,35 +469,53 @@ impl Cluster {
             let step_pattern_aggs = pat_merged.unwrap_or_default();
             let step_int_aggs = int_merged.unwrap_or_default();
 
-            // Aggregate broadcast: replicated to every other server.
-            let agg_bytes: u64 = step_pattern_aggs
-                .iter()
-                .map(|(k, v)| (k.byte_size() + v.byte_size()) as u64)
-                .sum::<u64>()
-                + step_int_aggs.values().map(|v| 8 + v.byte_size() as u64).sum::<u64>();
+            // Aggregate broadcast, folded into the parallel barrier:
+            // each side (pattern / int) merges the step map into its
+            // run history AND sums the bytes the broadcast would ship,
+            // in a single measured pass per side — the two coordinator
+            // loops this replaces ran sequentially after the merge.
+            let t_bcast = Instant::now();
+            let (pat_fold, int_fold) = if parallel {
+                std::thread::scope(|scope| {
+                    let ph = std::mem::take(&mut pattern_history);
+                    let ih = std::mem::take(&mut int_history);
+                    let sp = &step_pattern_aggs;
+                    let si = &step_int_aggs;
+                    let hp = scope
+                        .spawn(move || fold_broadcast(ph, sp, |k: &Pattern| k.byte_size()));
+                    let hi = scope.spawn(move || fold_broadcast(ih, si, |_: &i64| 8));
+                    (
+                        hp.join().expect("broadcast fold panicked"),
+                        hi.join().expect("broadcast fold panicked"),
+                    )
+                })
+            } else {
+                let ph = std::mem::take(&mut pattern_history);
+                let ih = std::mem::take(&mut int_history);
+                (
+                    fold_broadcast(ph, &step_pattern_aggs, |k: &Pattern| k.byte_size()),
+                    fold_broadcast(ih, &step_int_aggs, |_: &i64| 8),
+                )
+            };
+            par_wall += t_bcast.elapsed();
+            let (new_pat_history, pat_bytes, c_hp) = pat_fold;
+            let (new_int_history, int_bytes, c_hi) = int_fold;
+            pattern_history = new_pat_history;
+            int_history = new_int_history;
+            st.merge_cpu += c_hp + c_hi;
+            st.phases.add(Phase::Merge, st.merge_cpu);
+            // Critical-path contribution mirrors tree_reduce: with the
+            // folds spread over two threads the barrier waits for the
+            // slower one; run sequentially (w == 1) both are on the
+            // critical path.
+            merge_critical_par += if parallel { c_hp.max(c_hi) } else { c_hp + c_hi };
+
+            // Broadcast accounting: replicated to every other server.
             st.comm.add(
                 (step_pattern_aggs.len() + step_int_aggs.len()) as u64
                     * (cfg.servers as u64 - 1),
-                agg_bytes * (cfg.servers as u64 - 1),
+                (pat_bytes + int_bytes) * (cfg.servers as u64 - 1),
             );
-
-            // History for report().
-            for (k, v) in &step_pattern_aggs {
-                match pattern_history.get_mut(k) {
-                    Some(cur) => cur.merge(v.clone()),
-                    None => {
-                        pattern_history.insert(k.clone(), v.clone());
-                    }
-                }
-            }
-            for (k, v) in &step_int_aggs {
-                match int_history.get_mut(k) {
-                    Some(cur) => cur.merge(v.clone()),
-                    None => {
-                        int_history.insert(*k, v.clone());
-                    }
-                }
-            }
             prev_pattern_aggs = step_pattern_aggs;
             prev_int_aggs = step_int_aggs;
 
@@ -420,7 +532,12 @@ impl Cluster {
                     merged_odags.by_pattern.len() as u64 * (cfg.servers as u64 - 1),
                     st.frontier_bytes * (cfg.servers as u64 - 1),
                 );
-                Frontier::Odag(merged_odags)
+                // Extraction plan (sorted pattern order + §5.3 cost
+                // tables) built once here for every worker of the next
+                // step; its cost lands in the barrier's sequential
+                // remainder below.
+                let plan = ExtractionPlan::build(&merged_odags);
+                Frontier::Odag(merged_odags, plan)
             } else {
                 // Single source of truth: the workers' write-time
                 // counter (Fig 9's list series) IS the stored size.
@@ -434,6 +551,8 @@ impl Cluster {
 
             peak_frontier_bytes = peak_frontier_bytes.max(st.frontier_bytes);
             candidates_total += st.candidates;
+            steals_total += st.steals;
+            stolen_units_total += st.stolen_units;
             comm_total.merge(&st.comm);
             phases_total.merge(&st.phases);
             st.merge_wall = t_merge.elapsed();
@@ -479,6 +598,8 @@ impl Cluster {
             num_outputs: sink.count(),
             processed: processed_total,
             candidates: candidates_total,
+            steals: steals_total,
+            stolen_units: stolen_units_total,
             comm: comm_total,
             phases: phases_total,
             agg_stats,
@@ -540,6 +661,45 @@ mod tests {
             let r = Cluster::new(Config::new(servers, threads)).run(&g, &Cliques::new(4));
             assert_eq!(r.num_outputs, 25, "servers={servers} threads={threads}");
         }
+    }
+
+    #[test]
+    fn skewed_partition_and_stealing_do_not_change_results() {
+        // Placement is not semantics: piling every chunk on worker 0
+        // (with or without thieves rebalancing it) yields the same
+        // outputs as the round-robin default.
+        let g = gen::small("k5").unwrap();
+        for steal in [false, true] {
+            for pct in [50u8, 100] {
+                let cfg = Config::new(1, 3)
+                    .with_partition(Partition::Skewed(pct))
+                    .with_steal(steal);
+                let r = Cluster::new(cfg).run(&g, &Cliques::new(4));
+                assert_eq!(r.num_outputs, 25, "steal={steal} pct={pct}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_broadcast_matches_sequential_history_merge() {
+        let p1 = Pattern::new(vec![0, 1], vec![(0, 1, 0)]);
+        let p2 = Pattern::new(vec![2, 2], vec![(0, 1, 0)]);
+        let mut history = HashMap::new();
+        history.insert(p1.clone(), AggVal::Long(2));
+        let mut step = HashMap::new();
+        step.insert(p1.clone(), AggVal::Long(3));
+        step.insert(p2.clone(), AggVal::Long(5));
+        let want_bytes: u64 = step
+            .iter()
+            .map(|(k, v)| (k.byte_size() + v.byte_size()) as u64)
+            .sum();
+        let (folded, bytes, _cpu) =
+            fold_broadcast(history, &step, |k: &Pattern| k.byte_size());
+        assert_eq!(bytes, want_bytes);
+        assert_eq!(folded[&p1].as_long(), 5);
+        assert_eq!(folded[&p2].as_long(), 5);
+        // Step map is untouched (it becomes the next step's read side).
+        assert_eq!(step[&p1].as_long(), 3);
     }
 
     #[test]

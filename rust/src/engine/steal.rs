@@ -1,0 +1,418 @@
+//! Intra-step work stealing (paper §5.3, taken past static blocks).
+//!
+//! The paper balances load by handing workers round-robin *blocks* of
+//! frontier indices — a static partition fixed at the start of the
+//! superstep. When ODAG partitions grow uneven (paper §5.3; MIRAGE
+//! documents the same failure for static partitioning), one worker can
+//! end up holding most of the real work while the rest idle at the
+//! barrier: `sim_wall = busy_max + merge_critical` stretches with the
+//! single straggler.
+//!
+//! This module makes the partition *elastic within a step*. The frontier
+//! index space `[0, total)` is cut into fixed-size chunks (`Config::block`
+//! indices each), every chunk gets an initial owner (the same round-robin
+//! placement as before, so a no-steal run is bit-compatible with the
+//! static engine), and all ownership state lives in one shared ledger of
+//! atomics ([`ChunkQueues`], plain `std::sync` — the crate stays
+//! zero-dependency):
+//!
+//! * a worker claims its own chunks front-to-back (`head`),
+//! * a worker that runs dry picks the peer with the **most remaining
+//!   chunks** and steals one from that peer's back end (`tail`),
+//! * both moves are single CAS operations on one packed `AtomicU64` per
+//!   worker, so a chunk is claimed exactly once — never duplicated,
+//!   never dropped (pinned by the unit tests here and the engine-level
+//!   equivalence matrix in `rust/tests/properties.rs`).
+//!
+//! Stealing moves *where* a chunk is processed, never *what* is
+//! computed: every downstream reduction (ODAG union, aggregation merge,
+//! output counting) is commutative and associative, so results are
+//! bit-identical to the no-steal run. Only placement-derived telemetry
+//! (per-worker `busy`, shuffle attribution) shifts — which is the point:
+//! `busy_max` flattens toward `busy_sum / workers`.
+//!
+//! Steals are charged to [`Phase::Steal`](crate::stats::Phase::Steal)
+//! and counted in [`StepStats::steals`](crate::stats::StepStats::steals)
+//! / [`StepStats::stolen_units`](crate::stats::StepStats::stolen_units),
+//! so the `paper` bench's `steal` experiment can show the flattening.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Initial chunk→worker placement for a superstep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    /// Paper §5.3: chunk `c` starts on worker `c % workers`. With
+    /// stealing disabled this is exactly the seed engine's static
+    /// round-robin block partition.
+    RoundRobin,
+    /// Skew injection for tests and benches: the first `pct`% of chunks
+    /// all start on worker 0, the remainder round-robin over workers
+    /// `1..`. Results must not change (placement never affects results);
+    /// `busy_max` does — which is what the steal experiment measures.
+    Skewed(u8),
+}
+
+/// One claimed slice `[lo, hi)` of the frontier index space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Claim {
+    pub lo: u64,
+    pub hi: u64,
+    /// True when the chunk was taken from another worker's queue.
+    pub stolen: bool,
+}
+
+impl Claim {
+    /// Width of the claimed range in frontier index units.
+    pub fn units(&self) -> u64 {
+        self.hi - self.lo
+    }
+}
+
+/// One worker's initial chunk queue as an arithmetic sequence:
+/// chunk ids `start, start + stride, …` (`len` of them, ascending).
+/// Both placement policies produce affine id sequences, so the ledger
+/// never materializes per-chunk state — construction is O(workers)
+/// regardless of frontier size, and the coordinator pays no hidden
+/// per-step allocation.
+#[derive(Debug, Clone, Copy)]
+struct OwnedSeq {
+    start: u64,
+    stride: u64,
+    len: u64,
+}
+
+impl OwnedSeq {
+    fn get(&self, i: u64) -> u64 {
+        debug_assert!(i < self.len);
+        self.start + i * self.stride
+    }
+}
+
+/// The shared chunk ledger of one superstep: per-worker arithmetic
+/// chunk sequences behind packed `(head, tail)` atomics.
+///
+/// `owned[w]` describes worker `w`'s initial chunks in ascending order
+/// and is immutable after construction; the only mutable state is one
+/// `AtomicU64` per worker packing two `u32` cursors into that sequence:
+/// `head` (next chunk the owner claims) in the high half, `tail`
+/// (one past the last unclaimed chunk, where thieves take) in the low
+/// half. `head == tail` means drained. Claiming is a single
+/// compare-exchange, so no chunk can be handed out twice and no chunk
+/// can be lost — a failed CAS just means someone else won that chunk
+/// and the loser rescans.
+pub struct ChunkQueues {
+    /// Each worker's initial chunk-id sequence.
+    owned: Vec<OwnedSeq>,
+    /// Packed cursors per worker: `(head << 32) | tail`.
+    cursor: Vec<AtomicU64>,
+    /// Chunk width in frontier index units.
+    chunk: u64,
+    /// Total frontier index units (the last chunk may be partial).
+    total: u64,
+    /// When false, `next` never steals — the static-partition reference.
+    steal: bool,
+}
+
+fn pack(head: u64, tail: u64) -> u64 {
+    (head << 32) | tail
+}
+
+fn unpack(v: u64) -> (u64, u64) {
+    (v >> 32, v & 0xffff_ffff)
+}
+
+impl ChunkQueues {
+    /// Cut `[0, total)` into chunks of `chunk` units, place them per
+    /// `partition`, and arm the per-worker cursors.
+    pub fn new(total: u64, chunk: u64, workers: usize, partition: Partition, steal: bool) -> Self {
+        assert!(workers >= 1);
+        let mut chunk = chunk.max(1);
+        // Cursors are u32 halves, so the ledger holds at most 2^32 - 1
+        // chunks. Gigantic index spaces (ODAG path counts are
+        // spurious-inclusive and can dwarf the enumerable work) ran
+        // fine under the old static partition, so rather than refuse
+        // them, coarsen the chunk width until the count fits — this
+        // only engages past ~2^32 chunks.
+        if total > 0 {
+            let min_chunk = (total - 1) / u64::from(u32::MAX) + 1;
+            chunk = chunk.max(min_chunk);
+        }
+        let n_chunks = if total == 0 { 0 } else { (total - 1) / chunk + 1 };
+        debug_assert!(n_chunks <= u32::MAX as u64);
+        let wk = workers as u64;
+        let owned: Vec<OwnedSeq> = match partition {
+            Partition::RoundRobin => (0..wk)
+                .map(|w| OwnedSeq {
+                    start: w,
+                    stride: wk,
+                    len: n_chunks / wk + u64::from(w < n_chunks % wk),
+                })
+                .collect(),
+            Partition::Skewed(pct) => {
+                let cut = n_chunks * u64::from(pct.min(100)) / 100;
+                let rest = n_chunks - cut;
+                (0..wk)
+                    .map(|w| {
+                        if w == 0 {
+                            let len = if workers == 1 { n_chunks } else { cut };
+                            OwnedSeq { start: 0, stride: 1, len }
+                        } else {
+                            OwnedSeq {
+                                start: cut + (w - 1),
+                                stride: wk - 1,
+                                len: rest / (wk - 1) + u64::from(w - 1 < rest % (wk - 1)),
+                            }
+                        }
+                    })
+                    .collect()
+            }
+        };
+        let cursor = owned.iter().map(|q| AtomicU64::new(pack(0, q.len))).collect();
+        ChunkQueues { owned, cursor, chunk, total, steal }
+    }
+
+    /// Total number of chunks in the ledger.
+    pub fn num_chunks(&self) -> u64 {
+        self.owned.iter().map(|q| q.len).sum()
+    }
+
+    /// Chunks still unclaimed in worker `w`'s queue (racy snapshot).
+    pub fn remaining(&self, w: usize) -> u64 {
+        let (head, tail) = unpack(self.cursor[w].load(Ordering::SeqCst));
+        tail.saturating_sub(head)
+    }
+
+    /// Claim the next chunk for worker `wid`: its own queue first
+    /// (front-to-back, preserving the static processing order), then —
+    /// if stealing is enabled — the back of the heaviest peer's queue.
+    /// `None` means every queue is drained: the frontier is fully
+    /// claimed and the worker can head to the barrier.
+    pub fn next(&self, wid: usize) -> Option<Claim> {
+        if let Some(c) = self.pop_own(wid) {
+            return Some(self.claim(c, false));
+        }
+        if !self.steal {
+            return None;
+        }
+        self.steal_chunk(wid).map(|c| self.claim(c, true))
+    }
+
+    fn claim(&self, chunk_id: u64, stolen: bool) -> Claim {
+        let lo = chunk_id * self.chunk;
+        Claim { lo, hi: (lo + self.chunk).min(self.total), stolen }
+    }
+
+    fn pop_own(&self, w: usize) -> Option<u64> {
+        let cur = &self.cursor[w];
+        let mut v = cur.load(Ordering::SeqCst);
+        loop {
+            let (head, tail) = unpack(v);
+            if head >= tail {
+                return None;
+            }
+            match cur.compare_exchange(v, pack(head + 1, tail), Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => return Some(self.owned[w].get(head)),
+                Err(now) => v = now,
+            }
+        }
+    }
+
+    /// Steal one chunk from the back of the queue with the most
+    /// remaining chunks. Rescans on any race; returns `None` only after
+    /// a full scan finds every queue drained (work never grows
+    /// mid-step, so "empty everywhere once" is final).
+    fn steal_chunk(&self, thief: usize) -> Option<u64> {
+        loop {
+            let mut best: Option<(usize, u64)> = None;
+            for (v, cur) in self.cursor.iter().enumerate() {
+                if v == thief {
+                    continue;
+                }
+                let (head, tail) = unpack(cur.load(Ordering::SeqCst));
+                let rem = tail.saturating_sub(head);
+                let heavier = match best {
+                    None => rem > 0,
+                    Some((_, r)) => rem > r,
+                };
+                if heavier {
+                    best = Some((v, rem));
+                }
+            }
+            let (victim, _) = best?;
+            let cur = &self.cursor[victim];
+            let v = cur.load(Ordering::SeqCst);
+            let (head, tail) = unpack(v);
+            if head >= tail {
+                continue; // lost the race for this victim — rescan
+            }
+            if cur
+                .compare_exchange(v, pack(head, tail - 1), Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                return Some(self.owned[victim].get(tail - 1));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain worker `w` without ever stealing.
+    fn drain_own(q: &ChunkQueues, w: usize) -> Vec<Claim> {
+        let mut out = Vec::new();
+        while let Some(c) = q.pop_own(w).map(|id| q.claim(id, false)) {
+            out.push(c);
+        }
+        out
+    }
+
+    fn covers_exactly(mut claims: Vec<Claim>, total: u64) {
+        claims.sort_by_key(|c| c.lo);
+        let mut at = 0u64;
+        for c in &claims {
+            assert_eq!(c.lo, at, "gap or overlap at {at}: {claims:?}");
+            assert!(c.hi > c.lo);
+            at = c.hi;
+        }
+        assert_eq!(at, total, "claims do not cover [0, total)");
+    }
+
+    #[test]
+    fn round_robin_matches_static_blocks() {
+        let q = ChunkQueues::new(100, 8, 3, Partition::RoundRobin, false);
+        // Chunk c belongs to worker c % 3, ascending — i.e. index i is
+        // owned by worker (i / block) % workers, the seed partition.
+        let mut all = Vec::new();
+        for w in 0..3 {
+            for c in drain_own(&q, w) {
+                assert_eq!(((c.lo / 8) % 3) as usize, w);
+                all.push(c);
+            }
+        }
+        covers_exactly(all, 100);
+        // Drained: nothing left to pop or steal.
+        assert_eq!(q.next(0), None);
+        assert_eq!(q.next(2), None);
+    }
+
+    #[test]
+    fn last_chunk_is_clipped_to_total() {
+        let q = ChunkQueues::new(10, 4, 1, Partition::RoundRobin, true);
+        let claims = drain_own(&q, 0);
+        covers_exactly(claims.clone(), 10);
+        assert_eq!(claims.last().unwrap().hi, 10);
+        assert_eq!(claims.last().unwrap().units(), 2);
+    }
+
+    #[test]
+    fn empty_frontier_yields_no_chunks() {
+        let q = ChunkQueues::new(0, 64, 4, Partition::RoundRobin, true);
+        assert_eq!(q.num_chunks(), 0);
+        for w in 0..4 {
+            assert_eq!(q.next(w), None);
+        }
+    }
+
+    #[test]
+    fn gigantic_index_spaces_coarsen_instead_of_panicking() {
+        // 2^40 units at chunk width 1 would need 2^40 chunks — far past
+        // the u32 cursors. The ledger coarsens the chunk width instead
+        // of refusing (the old static partition handled such ODAG path
+        // counts fine; spurious-inclusive index spaces dwarf the
+        // enumerable work).
+        let total = 1u64 << 40;
+        let q = ChunkQueues::new(total, 1, 2, Partition::RoundRobin, true);
+        assert!(q.num_chunks() <= u32::MAX as u64);
+        assert!(q.num_chunks() >= 2);
+        let c0 = q.next(0).unwrap();
+        assert_eq!(c0.lo, 0);
+        assert!(c0.hi > 0 && c0.hi <= total);
+        let c1 = q.next(1).unwrap();
+        assert!(c1.lo < c1.hi && c1.hi <= total);
+        assert_eq!(c1.lo, c0.hi, "round-robin: worker 1 owns the second chunk");
+    }
+
+    #[test]
+    fn skewed_places_chunks_on_worker_zero() {
+        let q = ChunkQueues::new(1000, 10, 4, Partition::Skewed(90), false);
+        assert_eq!(q.remaining(0), 90);
+        assert_eq!(q.remaining(1) + q.remaining(2) + q.remaining(3), 10);
+        // Skew with one worker degenerates to "worker 0 owns all".
+        let q1 = ChunkQueues::new(1000, 10, 1, Partition::Skewed(90), false);
+        assert_eq!(q1.remaining(0), 100);
+    }
+
+    /// The ISSUE's deterministic convergence case: worker 0 owns N
+    /// chunks, worker 1 owns one. Single-threaded (so fully
+    /// deterministic), worker 1 first drains its own chunk, then steals
+    /// the rest from worker 0's tail one by one until the ledger is dry
+    /// — every chunk claimed exactly once.
+    #[test]
+    fn one_vs_many_skew_converges_by_stealing() {
+        // 33 chunks of 4 units: Skewed(97) puts 32 on worker 0, 1 on
+        // worker 1.
+        let q = ChunkQueues::new(132, 4, 2, Partition::Skewed(97), true);
+        assert_eq!(q.remaining(0), 32);
+        assert_eq!(q.remaining(1), 1);
+        let mut claims = Vec::new();
+        let mut steals = 0;
+        while let Some(c) = q.next(1) {
+            if c.stolen {
+                steals += 1;
+            }
+            claims.push(c);
+        }
+        assert_eq!(claims.len(), 33);
+        assert_eq!(steals, 32, "everything beyond its own chunk is stolen");
+        // Own chunk first (the last, clipped one), then steals from the
+        // victim's back end: worker 0's highest chunk id comes first.
+        assert_eq!((claims[0].lo, claims[0].hi, claims[0].stolen), (128, 132, false));
+        assert_eq!((claims[1].lo, claims[1].hi, claims[1].stolen), (124, 128, true));
+        covers_exactly(claims, 132);
+        assert_eq!(q.next(0), None, "owner finds nothing left");
+    }
+
+    #[test]
+    fn steal_prefers_the_heaviest_victim() {
+        // Worker 0: ~6 chunks, workers 1/2: ~2 each (Skewed(60) over 10).
+        let q = ChunkQueues::new(100, 10, 3, Partition::Skewed(60), true);
+        let heavy_before = q.remaining(0);
+        assert!(heavy_before > q.remaining(1).max(q.remaining(2)));
+        // Worker 2 drains itself, then steals: first steals must come
+        // from worker 0 while it remains the heaviest.
+        while q.pop_own(2).is_some() {}
+        let c = q.next(2).unwrap();
+        assert!(c.stolen);
+        assert_eq!(q.remaining(0), heavy_before - 1);
+    }
+
+    /// Hammer the ledger from `workers` threads; whatever the
+    /// interleaving, the union of claims covers [0, total) exactly.
+    #[test]
+    fn concurrent_claims_are_disjoint_and_complete() {
+        for workers in [2usize, 3, 5, 8] {
+            let q = ChunkQueues::new(4096, 16, workers, Partition::Skewed(75), true);
+            let per_worker: Vec<Vec<Claim>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|w| {
+                        let q = &q;
+                        scope.spawn(move || {
+                            let mut mine = Vec::new();
+                            while let Some(c) = q.next(w) {
+                                mine.push(c);
+                            }
+                            mine
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let all: Vec<Claim> = per_worker.into_iter().flatten().collect();
+            assert_eq!(all.len(), 4096 / 16, "workers={workers}");
+            covers_exactly(all, 4096);
+        }
+    }
+}

@@ -8,10 +8,21 @@
 //! remaining per-embedding allocation is the frontier write itself in
 //! list mode (a survivor must outlive the step).
 //!
+//! A worker's share of the frontier is no longer a fixed modulo
+//! partition: it claims fixed-size **chunks** of the frontier index
+//! space from the shared work-stealing ledger
+//! ([`ChunkQueues`](super::steal::ChunkQueues)) — its own queue first
+//! (which reproduces the paper's §5.3 round-robin blocks exactly), then
+//! chunks stolen from the heaviest peer once it runs dry. Steals are
+//! counted in [`WorkerOut::steals`]/[`WorkerOut::stolen_units`] and the
+//! ledger traffic is charged to `Phase::Steal`.
+//!
 //! The worker also computes its own cross-server shuffle accounting
 //! (paper §4.3) before returning, so the barrier merely sums
 //! [`WorkerOut::shuffle_comm`] — the coordinator no longer walks every
-//! aggregation entry of every worker.
+//! aggregation entry of every worker. Note that under stealing the
+//! shuffle attribution reflects where entries were *actually* computed;
+//! totals stay deterministic only with stealing disabled.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -25,6 +36,7 @@ use crate::output::OutputSink;
 use crate::pattern::{self, Pattern};
 use crate::stats::{CommStats, Phase, PhaseTimes};
 
+use super::steal::ChunkQueues;
 use super::{owner_of, Config, Frontier};
 
 /// State a worker keeps across supersteps: its aggregators (with the
@@ -79,6 +91,10 @@ pub struct WorkerOut {
     pub candidates: u64,
     /// Candidates processed by π (passed φ).
     pub processed: u64,
+    /// Chunks this worker stole from peers after draining its own queue.
+    pub steals: u64,
+    /// Frontier index units covered by those stolen chunks.
+    pub stolen_units: u64,
     /// Cross-server shuffle traffic of this worker's parts, computed
     /// worker-side. Summing per-worker contributions is bit-identical to
     /// the old coordinator loop: the individual `add`s are the same and
@@ -210,7 +226,10 @@ impl Pipeline<'_> {
     }
 }
 
-/// Execute worker `wid`'s share of one superstep.
+/// Execute worker `wid`'s share of one superstep: claim frontier chunks
+/// from the shared ledger until it (and every stealable peer queue) is
+/// drained. `init` is the step-1 word list, computed once by the
+/// coordinator (the seed had every worker recompute it).
 #[allow(clippy::too_many_arguments)]
 pub fn run_step(
     wid: usize,
@@ -218,6 +237,8 @@ pub fn run_step(
     g: &LabeledGraph,
     app: &dyn GraphMiningApp,
     frontier: &Frontier,
+    init: Option<&[u32]>,
+    queues: &ChunkQueues,
     prev_pattern_aggs: &HashMap<Pattern, AggVal>,
     prev_int_aggs: &HashMap<i64, AggVal>,
     state: &mut WorkerState,
@@ -254,58 +275,62 @@ pub fn run_step(
         parent: std::mem::replace(&mut state.scratch_parent, Embedding::empty()),
         child: std::mem::replace(&mut state.scratch_child, Embedding::empty()),
     };
+    let empty_quick = Pattern::new(vec![], vec![]);
 
-    // ---- R ∘ (U G C P W): stream this worker's partition of I -------
+    // ---- R ∘ (U G C P W): stream claimed chunks of I ----------------
+    // Own chunks arrive front-to-back (identical to the static §5.3
+    // round-robin partition); once the own queue is dry the ledger
+    // hands over chunks stolen from the heaviest peer. Ledger traffic
+    // (victim scans + CAS claims) is charged to S; within a chunk,
     // `read_clock` runs while extraction walks the frontier and pauses
     // while the pipeline handles a parent, so R measures extraction
     // alone (in the seed it also hid the staging clones it paid for).
-    match frontier {
-        Frontier::Init => {
-            // Step 1: the "undefined" embedding expands to all words.
-            let words = embedding::initial_candidates(g, mode);
-            let b = cfg.block as usize;
-            let empty_quick = Pattern::new(vec![], vec![]);
-            let empty_verts: [u32; 0] = [];
-            pipe.parent.words.clear();
-            for (i, word) in words.into_iter().enumerate() {
-                if (i / b) % w != wid {
-                    continue;
-                }
-                pipe.handle_candidate(word, &empty_quick, &empty_verts);
-            }
+    loop {
+        let t_claim = Instant::now();
+        let Some(claim) = queues.next(wid) else {
+            // The final (empty) scan is ledger traffic too.
+            pipe.phases.add(Phase::Steal, t_claim.elapsed());
+            break;
+        };
+        if claim.stolen {
+            pipe.out.steals += 1;
+            pipe.out.stolen_units += claim.units();
+            pipe.phases.add(Phase::Steal, t_claim.elapsed());
+        } else {
+            pipe.phases.add(Phase::Read, t_claim.elapsed());
         }
-        Frontier::List(all) => {
-            // Round-robin blocks of `block` embeddings (paper §5.3),
-            // processed in place — no clone, no staging buffer.
-            let b = cfg.block as usize;
-            let mut read_clock = Instant::now();
-            for (i, words) in all.iter().enumerate() {
-                if (i / b) % w != wid {
-                    continue;
+        match frontier {
+            Frontier::Init => {
+                // Step 1: the "undefined" embedding expands to all words.
+                let words = init.expect("step-1 word list not provided");
+                pipe.parent.words.clear();
+                for &word in &words[claim.lo as usize..claim.hi as usize] {
+                    pipe.handle_candidate(word, &empty_quick, &[]);
+                }
+            }
+            Frontier::List(all) => {
+                // A chunk is a contiguous slice of the embedding list,
+                // processed in place — no clone, no staging buffer.
+                let mut read_clock = Instant::now();
+                for words in &all[claim.lo as usize..claim.hi as usize] {
+                    pipe.phases.add(Phase::Read, read_clock.elapsed());
+                    pipe.parent.words.clear();
+                    pipe.parent.words.extend_from_slice(words);
+                    let t = Instant::now();
+                    let quick = pattern::quick_pattern(g, &pipe.parent, mode);
+                    pipe.phases.add(Phase::PatternAgg, t.elapsed());
+                    pipe.process_parent(quick, false);
+                    read_clock = Instant::now();
                 }
                 pipe.phases.add(Phase::Read, read_clock.elapsed());
-                pipe.parent.words.clear();
-                pipe.parent.words.extend_from_slice(words);
-                let t = Instant::now();
-                let quick = pattern::quick_pattern(g, &pipe.parent, mode);
-                pipe.phases.add(Phase::PatternAgg, t.elapsed());
-                pipe.process_parent(quick, false);
-                read_clock = Instant::now();
             }
-            pipe.phases.add(Phase::Read, read_clock.elapsed());
-        }
-        Frontier::Odag(store) => {
-            // Deterministic pattern order + one global path-index space,
-            // so round-robin blocks interleave across patterns (a single
-            // pattern smaller than one block would otherwise put all its
-            // work on one worker).
-            let mut pats: Vec<&Pattern> = store.by_pattern.keys().collect();
-            pats.sort_unstable();
-            let mut offset = 0u64;
-            let mut read_clock = Instant::now();
-            for pat in pats {
-                let odag = &store.by_pattern[pat];
-                offset = odag.enumerate_from(g, mode, wid, w, cfg.block, offset, |words| {
+            Frontier::Odag(store, plan) => {
+                // A chunk is a slice of the global path-index space the
+                // barrier-built plan lays out across sorted patterns;
+                // the cached cost tables make the descent skip test
+                // O(1) without recomputing costs per worker.
+                let mut read_clock = Instant::now();
+                plan.enumerate_range(store, g, mode, claim.lo, claim.hi, |pat, words| {
                     pipe.phases.add(Phase::Read, read_clock.elapsed());
                     pipe.parent.words.clear();
                     pipe.parent.words.extend_from_slice(words);
@@ -321,8 +346,8 @@ pub fn run_step(
                     }
                     read_clock = Instant::now();
                 });
+                pipe.phases.add(Phase::Read, read_clock.elapsed());
             }
-            pipe.phases.add(Phase::Read, read_clock.elapsed());
         }
     }
 

@@ -5,7 +5,7 @@
 //! the rest are external downloads), so `dataset()` generates stand-ins
 //! matched to each dataset's published shape — |V|, |E|, #labels, average
 //! degree, and a heavy-tailed degree distribution for the social graphs —
-//! at a configurable scale factor. See DESIGN.md "Substitutions".
+//! at a configurable scale factor. See ARCHITECTURE.md "Substitutions".
 //!
 //! All generators are deterministic given the seed, so experiments are
 //! reproducible and workers can regenerate the identical graph.
@@ -84,7 +84,7 @@ pub struct DatasetSpec {
     /// Heavy-tailed (social/citation) vs near-uniform degree shape.
     pub power_law: bool,
     /// Default scale applied by `dataset()` before the user scale, so the
-    /// big graphs run in-session (documented in DESIGN.md).
+    /// big graphs run in-session (documented in ARCHITECTURE.md).
     pub base_scale: f64,
 }
 

@@ -6,7 +6,8 @@
 //!
 //! * **L3 (this crate)** — the Arabesque coordinator: the filter–process
 //!   computational model ([`api`]), the BSP exploration engine over a
-//!   simulated multi-server cluster ([`engine`]), coordination-free
+//!   simulated multi-server cluster with an elastic work-stealing
+//!   superstep ([`engine`], [`engine::steal`]), coordination-free
 //!   embedding canonicality ([`embedding`]), ODAG compressed frontier
 //!   storage ([`odag`]), two-level pattern aggregation ([`agg`]), the
 //!   three paper applications ([`apps`]) and the TLV / TLP / centralized
@@ -16,8 +17,10 @@
 //!   masked-matmul-reduce kernel, AOT-lowered to HLO text in
 //!   `artifacts/` and executed from Rust through PJRT ([`runtime`]).
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment
-//! index mapping every table and figure of the paper to a bench target.
+//! `ARCHITECTURE.md` (repo root) maps the paper's filter-process model
+//! onto this module tree and walks one superstep through its
+//! Extract/Process/Merge/Steal phases; `rust/benches/README.md`
+//! documents the measurement surface.
 //!
 //! ## Quickstart
 //!

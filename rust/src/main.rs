@@ -16,7 +16,7 @@ use arabesque::util::err::{Context, Result};
 
 use arabesque::apps::{Cliques, Fsm, MaximalCliques, Motifs};
 use arabesque::baselines::{tlp::TlpCluster, tlv::TlvCluster};
-use arabesque::engine::{Cluster, Config, RunResult};
+use arabesque::engine::{Cluster, Config, Partition, RunResult};
 use arabesque::graph::{gen, loader, LabeledGraph};
 use arabesque::output::{CountingSink, FileSink, OutputSink};
 use arabesque::runtime::{CensusExecutor, Motif3Counts};
@@ -41,11 +41,13 @@ run options:
   --max-size <n>         max embedding size    (default: motifs 3, cliques 4, fsm unbounded)
   --servers <n>          simulated servers     (default 1)
   --threads <n>          threads per server    (default 4)
-  --block <n>            load-balance block    (default 64)
+  --block <n>            load-balance chunk    (default 64)
   --engine <tle|tlv|tlp> paradigm              (default tle)
   --output <path>        write outputs to a file
   --no-odag              store frontiers as plain embedding lists
   --one-level            disable two-level pattern aggregation
+  --no-steal             static 5.3 partition (disable work stealing)
+  --skew <pct>           start pct% of frontier chunks on worker 0
   --keep-labels          keep vertex labels for motifs/cliques
   --stats                print per-step statistics
 ";
@@ -59,7 +61,10 @@ fn main() {
 }
 
 fn dispatch(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw, &["no-odag", "one-level", "stats", "help", "keep-labels"])?;
+    let args = Args::parse(
+        raw,
+        &["no-odag", "one-level", "no-steal", "stats", "help", "keep-labels"],
+    )?;
     if args.flag("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -104,10 +109,18 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let servers = args.get_usize("servers", 1)?;
     let threads = args.get_usize("threads", 4)?;
-    let cfg = Config::new(servers, threads)
+    let skew = args.get_usize("skew", 0)?;
+    if skew > 100 {
+        bail!("--skew must be 0..=100, got {skew}");
+    }
+    let mut cfg = Config::new(servers, threads)
         .with_odag(!args.flag("no-odag"))
         .with_two_level(!args.flag("one-level"))
+        .with_steal(!args.flag("no-steal"))
         .with_block(args.get_u64("block", 64)?);
+    if skew > 0 {
+        cfg = cfg.with_partition(Partition::Skewed(skew as u8));
+    }
     let support = args.get_usize("support", 300)?;
     let app_name = args.get("app").context("--app is required")?;
 
@@ -179,6 +192,13 @@ fn print_run(r: &RunResult, per_step: bool) {
         human_count(r.agg_stats.canonize_calls),
         r.canonical_patterns,
     );
+    if r.steals > 0 {
+        println!(
+            "work stealing: steals={} stolen-units={}",
+            human_count(r.steals),
+            human_count(r.stolen_units),
+        );
+    }
     let fr: Vec<String> = r
         .phases
         .fractions()

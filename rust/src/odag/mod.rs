@@ -21,6 +21,15 @@
 //! round-robin *blocks* of `b` consecutive path indices, descending only
 //! into subtrees that intersect the worker's blocks — costs (subtree
 //! path counts) make the skip test O(1) per node.
+//!
+//! The engine's work-stealing superstep goes through
+//! [`ExtractionPlan`] instead: the plan is built **once per step at the
+//! barrier** from the merged store — deterministic pattern order, each
+//! pattern's slice of one global path-index space, and the [`Odag::costs`]
+//! tables cached so workers stop recomputing them per step — and
+//! [`Odag::enumerate_range`] then extracts any `[lo, hi)` slice of that
+//! index space, which is what lets frontier chunks move between workers
+//! mid-step (`engine::steal`).
 
 use std::collections::HashMap;
 
@@ -220,6 +229,7 @@ impl Odag {
     /// index space so blocks interleave across patterns — otherwise
     /// every ODAG smaller than one block would land on the same worker.
     /// Returns `index_offset + total_paths()` (the next ODAG's offset).
+    #[allow(clippy::too_many_arguments)]
     pub fn enumerate_from<F: FnMut(&[u32])>(
         &self,
         g: &LabeledGraph,
@@ -243,6 +253,91 @@ impl Odag {
             offset += size;
         }
         offset
+    }
+
+    /// Enumerate the canonical sequences whose global path index falls
+    /// in `[lo, hi)`, where this ODAG's paths occupy
+    /// `[base, base + total_paths())` of the global index space and
+    /// `costs` is this ODAG's cached [`Odag::costs`] table (computed
+    /// once per step by [`ExtractionPlan::build`], not per worker).
+    ///
+    /// This is the work-stealing twin of [`Odag::enumerate`]: a chunk of
+    /// consecutive indices can be claimed by *any* worker, so the
+    /// partition is a range, not a round-robin ownership test. Subtrees
+    /// disjoint from the range are skipped in O(1) via the cost table,
+    /// and non-canonical prefixes are pruned during descent exactly as
+    /// in [`Odag::enumerate`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn enumerate_range<F: FnMut(&[u32])>(
+        &self,
+        g: &LabeledGraph,
+        mode: Mode,
+        costs: &[Vec<u64>],
+        base: u64,
+        lo: u64,
+        hi: u64,
+        mut f: F,
+    ) {
+        if self.is_empty() || lo >= hi {
+            return;
+        }
+        let mut prefix: Vec<u32> = Vec::with_capacity(self.k());
+        let mut off = base;
+        let arr0 = &self.arrays[0];
+        for j in 0..arr0.ids.len() {
+            if off >= hi {
+                break;
+            }
+            self.descend_range(g, mode, 0, j, off, lo, hi, costs, &mut prefix, &mut f);
+            off += costs[0][j];
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn descend_range<F: FnMut(&[u32])>(
+        &self,
+        g: &LabeledGraph,
+        mode: Mode,
+        depth: usize,
+        idx: usize,
+        node_lo: u64,
+        lo: u64,
+        hi: u64,
+        costs: &[Vec<u64>],
+        prefix: &mut Vec<u32>,
+        f: &mut F,
+    ) {
+        let size = costs[depth][idx];
+        // A zero-cost subtree occupies no index space and holds no
+        // complete paths; otherwise skip unless [node_lo, node_lo+size)
+        // intersects [lo, hi).
+        if size == 0 || node_lo >= hi || node_lo + size <= lo {
+            return;
+        }
+        let id = self.arrays[depth].ids[idx];
+        // Canonicality prune: cuts the whole subtree of a bad prefix.
+        if !embedding::is_canonical_extension(g, mode, prefix, id) {
+            return;
+        }
+        prefix.push(id);
+        if depth + 1 == self.k() {
+            // Leaf: size == 1, and the intersection test above already
+            // proved node_lo ∈ [lo, hi).
+            f(prefix);
+        } else {
+            let next_arr = &self.arrays[depth + 1];
+            let mut off = node_lo;
+            for &to in &self.arrays[depth].conns[idx] {
+                if off >= hi {
+                    break;
+                }
+                if let Some(jx) = next_arr.index_of(to) {
+                    self.descend_range(g, mode, depth + 1, jx, off, lo, hi, costs, prefix, f);
+                    off += costs[depth + 1][jx];
+                }
+            }
+        }
+        prefix.pop();
     }
 
     /// Does the path-index range `[lo, lo+size)` contain any index owned
@@ -370,6 +465,90 @@ impl OdagStore {
 
     pub fn total_paths(&self) -> u64 {
         self.by_pattern.values().map(Odag::total_paths).sum()
+    }
+}
+
+/// A superstep's extraction plan over an [`OdagStore`], built **once at
+/// the barrier** and shared read-only by every worker.
+///
+/// The plan fixes three things the seed engine recomputed per worker
+/// per step:
+///
+/// 1. the deterministic pattern order (sorted, so path indices are
+///    reproducible run to run),
+/// 2. each pattern's base offset in one **global path-index space**
+///    (blocks interleave across patterns; a pattern smaller than one
+///    block would otherwise land whole on one worker),
+/// 3. the per-pattern §5.3 cost tables ([`Odag::costs`]) — the
+///    dominant share of extraction setup, now paid once instead of
+///    `workers ×` per step.
+///
+/// [`ExtractionPlan::enumerate_range`] extracts any slice `[lo, hi)` of
+/// the global index space, which is the unit the work-stealing ledger
+/// (`engine::steal`) deals in.
+#[derive(Debug, Clone, Default)]
+pub struct ExtractionPlan {
+    /// Patterns in deterministic (sorted) extraction order.
+    pats: Vec<Pattern>,
+    /// `base[i]` = first global path index of `pats[i]`'s ODAG.
+    base: Vec<u64>,
+    /// `costs[i]` = cached [`Odag::costs`] of `pats[i]`'s ODAG.
+    costs: Vec<Vec<Vec<u64>>>,
+    /// Total global path indices (spurious-inclusive).
+    total: u64,
+}
+
+impl ExtractionPlan {
+    pub fn build(store: &OdagStore) -> ExtractionPlan {
+        let mut pats: Vec<Pattern> = store.by_pattern.keys().cloned().collect();
+        pats.sort_unstable();
+        let mut base = Vec::with_capacity(pats.len());
+        let mut costs = Vec::with_capacity(pats.len());
+        let mut total = 0u64;
+        for p in &pats {
+            let c = store.by_pattern[p].costs();
+            base.push(total);
+            total += c.first().map_or(0, |row| row.iter().sum::<u64>());
+            costs.push(c);
+        }
+        ExtractionPlan { pats, base, costs, total }
+    }
+
+    /// Total global path indices (the frontier's extraction unit count).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Enumerate every sequence whose global path index falls in
+    /// `[lo, hi)`, calling `f(pattern, words)` — the pattern is the ODAG
+    /// the sequence was extracted from, which the worker compares
+    /// against the sequence's quick pattern to drop spurious
+    /// cross-pattern extractions.
+    pub fn enumerate_range<F: FnMut(&Pattern, &[u32])>(
+        &self,
+        store: &OdagStore,
+        g: &LabeledGraph,
+        mode: Mode,
+        lo: u64,
+        hi: u64,
+        mut f: F,
+    ) {
+        if lo >= hi {
+            return;
+        }
+        // First pattern whose slice can overlap: the last with base <= lo.
+        let mut i = self.base.partition_point(|&b| b <= lo).saturating_sub(1);
+        while i < self.pats.len() {
+            let b = self.base[i];
+            if b >= hi {
+                break;
+            }
+            let pat = &self.pats[i];
+            store.by_pattern[pat].enumerate_range(g, mode, &self.costs[i], b, lo, hi, |w| {
+                f(pat, w)
+            });
+            i += 1;
+        }
     }
 }
 
@@ -552,6 +731,113 @@ mod tests {
         assert_eq!(by_ref.by_pattern.len(), by_move.by_pattern.len());
         for (p, o) in &by_ref.by_pattern {
             assert_eq!(by_move.by_pattern.get(p), Some(o));
+        }
+    }
+
+    #[test]
+    fn enumerate_range_chunks_equal_whole_enumeration() {
+        let g = fig5_graph();
+        let embs = canonical_size3(&g);
+        let o = build_odag(&g, &embs);
+        let costs = o.costs();
+        let total = o.total_paths();
+        let mut whole = Vec::new();
+        o.enumerate(&g, Mode::VertexInduced, 0, 1, 64, |w| whole.push(w.to_vec()));
+        // Any chunking of [0, total) re-extracts exactly the same
+        // sequences in the same order.
+        for chunk in [1u64, 2, 3, 7, 64] {
+            let mut got = Vec::new();
+            let mut lo = 0;
+            while lo < total {
+                let hi = (lo + chunk).min(total);
+                o.enumerate_range(&g, Mode::VertexInduced, &costs, 0, lo, hi, |w| {
+                    got.push(w.to_vec())
+                });
+                lo = hi;
+            }
+            assert_eq!(got, whole, "chunk={chunk}");
+        }
+        // An empty or out-of-space range extracts nothing.
+        let mut none = 0;
+        o.enumerate_range(&g, Mode::VertexInduced, &costs, 0, total, total + 9, |_| none += 1);
+        o.enumerate_range(&g, Mode::VertexInduced, &costs, 0, 5, 5, |_| none += 1);
+        assert_eq!(none, 0);
+    }
+
+    #[test]
+    fn enumerate_range_respects_base_offset() {
+        let g = fig5_graph();
+        let o = build_odag(&g, &canonical_size3(&g));
+        let costs = o.costs();
+        let total = o.total_paths();
+        let mut at_zero = Vec::new();
+        o.enumerate_range(&g, Mode::VertexInduced, &costs, 0, 0, total, |w| {
+            at_zero.push(w.to_vec())
+        });
+        // Shifting the ODAG's base shifts the indices that address it.
+        let base = 1000u64;
+        let mut shifted = Vec::new();
+        o.enumerate_range(&g, Mode::VertexInduced, &costs, base, base, base + total, |w| {
+            shifted.push(w.to_vec())
+        });
+        assert_eq!(at_zero, shifted);
+        let mut below = 0;
+        o.enumerate_range(&g, Mode::VertexInduced, &costs, base, 0, base, |_| below += 1);
+        assert_eq!(below, 0);
+    }
+
+    #[test]
+    fn extraction_plan_matches_chained_enumerate_from() {
+        // The plan's global index space must be exactly the old
+        // engine's: sorted patterns chained by total_paths. Extracting
+        // the full range through the plan equals per-pattern whole
+        // enumeration in sorted-pattern order.
+        let g = fig5_graph();
+        let p1 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        let p2 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        let mut store = OdagStore::new();
+        for e in canonical_size3(&g) {
+            // Split arbitrarily between two patterns by first id parity.
+            let pat = if e[0] % 2 == 0 { &p1 } else { &p2 };
+            store.add(pat, &e);
+        }
+        let plan = ExtractionPlan::build(&store);
+        assert_eq!(plan.total(), store.total_paths());
+
+        let mut want: Vec<(Pattern, Vec<u32>)> = Vec::new();
+        let mut pats: Vec<&Pattern> = store.by_pattern.keys().collect();
+        pats.sort_unstable();
+        let mut offset = 0u64;
+        for pat in pats {
+            offset = store.by_pattern[pat].enumerate_from(
+                &g,
+                Mode::VertexInduced,
+                0,
+                1,
+                64,
+                offset,
+                |w| want.push((pat.clone(), w.to_vec())),
+            );
+        }
+
+        let mut got: Vec<(Pattern, Vec<u32>)> = Vec::new();
+        plan.enumerate_range(&store, &g, Mode::VertexInduced, 0, plan.total(), |p, w| {
+            got.push((p.clone(), w.to_vec()))
+        });
+        assert_eq!(got, want);
+
+        // And chunked extraction through the plan covers the same set.
+        for chunk in [1u64, 4, 9] {
+            let mut chunked: Vec<(Pattern, Vec<u32>)> = Vec::new();
+            let mut lo = 0;
+            while lo < plan.total() {
+                let hi = (lo + chunk).min(plan.total());
+                plan.enumerate_range(&store, &g, Mode::VertexInduced, lo, hi, |p, w| {
+                    chunked.push((p.clone(), w.to_vec()))
+                });
+                lo = hi;
+            }
+            assert_eq!(chunked, want, "chunk={chunk}");
         }
     }
 

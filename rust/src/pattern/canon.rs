@@ -1,5 +1,5 @@
 //! Exact graph canonization for small patterns (the bliss [20]
-//! substitute — see DESIGN.md "Substitutions").
+//! substitute — see ARCHITECTURE.md "Substitutions").
 //!
 //! A pattern's canonical form is the permutation of its vertices that
 //! minimizes the *code* `(vlabels, upper-triangular labeled adjacency)`

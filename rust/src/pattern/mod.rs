@@ -12,7 +12,11 @@
 //!   canonizer with label/degree pruning.
 //!
 //! Two-level aggregation (paper §5.4) reduces canonization calls from
-//! one per embedding to one per distinct quick pattern.
+//! one per embedding to one per distinct quick pattern — the level-1
+//! reduce lives in [`crate::agg::PatternAggregator`]; the engine's
+//! extraction sites compute each parent's quick pattern once and derive
+//! children incrementally via [`quick_pattern_extend`]. See
+//! ARCHITECTURE.md for where patterns sit in the superstep.
 
 pub mod canon;
 

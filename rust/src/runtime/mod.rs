@@ -1,5 +1,7 @@
 //! PJRT runtime: load and execute the AOT census artifacts from the
-//! Rust hot path (Python never runs here).
+//! Rust hot path (Python never runs here). This is the L2/L1 sidecar of
+//! the stack described in ARCHITECTURE.md — the mining engine itself
+//! ([`crate::engine`]) never depends on it.
 //!
 //! `make artifacts` lowers the L2 JAX census model (around the L1 Pallas
 //! kernel) to HLO *text* in `artifacts/`; with the `pjrt` cargo feature

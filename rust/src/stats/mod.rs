@@ -3,10 +3,11 @@
 
 use std::time::{Duration, Instant};
 
-/// The CPU-breakdown phases of paper Fig 12, plus user code, plus the
-/// barrier merge (ours — the paper folds it into W/R; this reproduction
-/// runs the barrier as a parallel tree reduction and attributes its
-/// thread-CPU explicitly).
+/// The CPU-breakdown phases of paper Fig 12, plus user code, plus two
+/// of ours: the barrier merge (the paper folds it into W/R; this
+/// reproduction runs the barrier as a parallel tree reduction and
+/// attributes its thread-CPU explicitly) and the work-stealing ledger
+/// (paper §5.3 taken past static blocks — see `engine::steal`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Phase {
     /// W — writing embeddings: ODAG creation, serialization, transfer.
@@ -23,11 +24,15 @@ pub enum Phase {
     /// paper to be an insignificant fraction.
     User,
     /// M — barrier merge work (parallel ODAG union + aggregation
-    /// reduce), measured as thread-CPU across the merge workers.
+    /// reduce + broadcast fold), measured as thread-CPU across the
+    /// merge workers.
     Merge,
+    /// S — work-stealing ledger traffic: victim scans and chunk CAS
+    /// claims when a worker runs past its own queue (`engine::steal`).
+    Steal,
 }
 
-pub const ALL_PHASES: [Phase; 7] = [
+pub const ALL_PHASES: [Phase; 8] = [
     Phase::Write,
     Phase::Read,
     Phase::Generate,
@@ -35,6 +40,7 @@ pub const ALL_PHASES: [Phase; 7] = [
     Phase::PatternAgg,
     Phase::User,
     Phase::Merge,
+    Phase::Steal,
 ];
 
 impl Phase {
@@ -47,6 +53,7 @@ impl Phase {
             Phase::PatternAgg => 'P',
             Phase::User => 'U',
             Phase::Merge => 'M',
+            Phase::Steal => 'S',
         }
     }
 
@@ -59,6 +66,7 @@ impl Phase {
             Phase::PatternAgg => 4,
             Phase::User => 5,
             Phase::Merge => 6,
+            Phase::Steal => 7,
         }
     }
 }
@@ -71,7 +79,7 @@ impl Phase {
 /// same-phase work, attribute once).
 #[derive(Debug, Clone, Default)]
 pub struct PhaseTimes {
-    nanos: [u64; 7],
+    nanos: [u64; 8],
 }
 
 impl PhaseTimes {
@@ -151,6 +159,12 @@ pub struct StepStats {
     /// Candidates that entered the frontier (π ran and the termination
     /// filter allowed expansion).
     pub frontier: u64,
+    /// Successful work-steal operations this step: chunks a worker took
+    /// from a peer's queue after draining its own (`engine::steal`).
+    pub steals: u64,
+    /// Frontier index units covered by stolen chunks — how much of the
+    /// step's extraction moved off its statically assigned worker.
+    pub stolen_units: u64,
     /// Serialized frontier size in bytes, as stored (ODAG or list).
     pub frontier_bytes: u64,
     /// What the frontier WOULD occupy as a plain embedding list
@@ -181,7 +195,7 @@ pub struct StepStats {
     /// completes when the busiest worker does and the merge tree runs
     /// across workers; this testbed has a single core, so measured
     /// `wall` serializes everything and `sim_wall` is the faithful
-    /// scalability metric (see DESIGN.md "Substitutions").
+    /// scalability metric (see ARCHITECTURE.md "Substitutions").
     pub sim_wall: Duration,
 }
 
@@ -302,10 +316,10 @@ mod tests {
     }
 
     #[test]
-    fn phase_letters_match_paper_plus_merge() {
-        // WRGCPU are the paper's Fig-12 phases; M (barrier merge) is
-        // this reproduction's addition for the parallel barrier.
+    fn phase_letters_match_paper_plus_merge_and_steal() {
+        // WRGCPU are the paper's Fig-12 phases; M (barrier merge) and S
+        // (work-stealing ledger) are this reproduction's additions.
         let letters: String = ALL_PHASES.iter().map(Phase::letter).collect();
-        assert_eq!(letters, "WRGCPUM");
+        assert_eq!(letters, "WRGCPUMS");
     }
 }

@@ -9,7 +9,7 @@ use std::collections::HashSet;
 
 use arabesque::apps::Motifs;
 use arabesque::embedding::{self, Mode};
-use arabesque::engine::{tree_reduce, Cluster, Config, RunResult};
+use arabesque::engine::{tree_reduce, Cluster, Config, Partition, RunResult};
 use arabesque::graph::{gen, LabeledGraph};
 use arabesque::odag::{Odag, OdagStore};
 use arabesque::pattern::{canon, Pattern};
@@ -401,6 +401,55 @@ fn prop_streaming_pipeline_matches_reference_semantics() {
             let r = Cluster::new(Config::new(s, t).with_block(8)).run(&g, &app);
             assert_eq!(r.processed, reference.processed, "seed={seed} {s}x{t}");
             assert_eq!(sorted_output(&r), ref_out, "seed={seed} {s}x{t}");
+        }
+    }
+}
+
+/// Work stealing never duplicates or drops a frontier chunk: for every
+/// worker count 1–9, both frontier representations, and partitions up
+/// to "worker 0 owns (almost) everything", a stealing run's aggregation
+/// and output results are bit-identical to the static no-steal
+/// reference. This is the engine-level completeness proof for the chunk
+/// ledger: a lost chunk would lower `processed`/outputs, a duplicated
+/// chunk would raise them or double counts in `pattern_output`.
+#[test]
+fn prop_stealing_preserves_reference_semantics() {
+    for seed in 0..2u64 {
+        let n = 24 + (seed as usize) * 6;
+        let g = gen::erdos_renyi(n, 3 * n, 2, 1, 100 + seed);
+        let app = Motifs::new(3);
+        let reference =
+            Cluster::new(Config::new(1, 1).with_odag(false).with_steal(false)).run(&g, &app);
+        let ref_out = sorted_output(&reference);
+        assert!(reference.processed > 0, "seed={seed}: workload must be nonempty");
+        for workers in 1..=9usize {
+            for odag in [true, false] {
+                for partition in
+                    [Partition::RoundRobin, Partition::Skewed(90), Partition::Skewed(100)]
+                {
+                    for steal in [false, true] {
+                        let cfg = Config::new(1, workers)
+                            .with_odag(odag)
+                            .with_block(4)
+                            .with_partition(partition)
+                            .with_steal(steal);
+                        let r = Cluster::new(cfg).run(&g, &app);
+                        let label = format!(
+                            "seed={seed} workers={workers} odag={odag} \
+                             partition={partition:?} steal={steal}"
+                        );
+                        assert_eq!(r.processed, reference.processed, "{label}");
+                        assert_eq!(r.candidates, reference.candidates, "{label}");
+                        assert_eq!(r.num_outputs, reference.num_outputs, "{label}");
+                        assert_eq!(r.total_frontier(), reference.total_frontier(), "{label}");
+                        assert_eq!(sorted_output(&r), ref_out, "{label}");
+                        if !steal {
+                            assert_eq!(r.steals, 0, "{label}: no-steal run recorded steals");
+                            assert_eq!(r.stolen_units, 0, "{label}");
+                        }
+                    }
+                }
+            }
         }
     }
 }
