@@ -192,6 +192,46 @@ fn main() {
         std::hint::black_box(n);
     });
 
+    // --- cursor vs re-descent -----------------------------------------
+    // The same 64-index chunking, drained through ONE resumable cursor:
+    // consecutive chunks resume the retained descent stack instead of
+    // re-descending root-to-leaf per chunk (the pair above). The gap is
+    // the per-chunk descent overhead the cursor deletes. (The cursor
+    // also carries quick patterns, so its per-leaf work is a superset —
+    // the carried-vs-recomputed pair below isolates that term.)
+    bench("plan extract (cursor resume, 64-chunks)", it(200).max(2), || {
+        let mut cur = plan.cursor(&store, &g, Mode::VertexInduced);
+        let mut n = 0u64;
+        let mut lo = 0u64;
+        while lo < plan.total() {
+            let hi = (lo + 64).min(plan.total());
+            cur.drain(lo, hi, |_, w, _, _| n += w[0] as u64);
+            lo = hi;
+        }
+        std::hint::black_box(n);
+    });
+
+    // --- carried vs recomputed quick patterns --------------------------
+    // What the pattern-carrying descent saves: the old extraction sites
+    // paid a full O(k²) quick_pattern rescan per extracted parent; the
+    // cursor pushes an O(k) delta per descent frame, amortized across
+    // sibling leaves, and materializes at the leaf.
+    bench("quick patterns (rescan per leaf)", it(200).max(2), || {
+        let mut n = 0u64;
+        plan.enumerate_range(&store, &g, Mode::VertexInduced, 0, plan.total(), |_, w| {
+            let e = Embedding::new(w.to_vec());
+            let q = pattern::quick_pattern(&g, &e, Mode::VertexInduced);
+            n += q.num_edges() as u64;
+        });
+        std::hint::black_box(n);
+    });
+    bench("quick patterns (carried by cursor)", it(200).max(2), || {
+        let mut cur = plan.cursor(&store, &g, Mode::VertexInduced);
+        let mut n = 0u64;
+        cur.drain(0, plan.total(), |_, _, _, q| n += q.num_edges() as u64);
+        std::hint::black_box(n);
+    });
+
     // --- work-stealing chunk ledger ------------------------------------
     // Claim-path costs of the steal ledger (single-threaded, so the CAS
     // always succeeds — the uncontended fast path every chunk pays).

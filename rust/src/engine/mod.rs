@@ -48,8 +48,16 @@
 //! aggregate *broadcast* (history fold + byte accounting) rides the
 //! same parallel barrier as two measured tasks instead of a coordinator
 //! loop, and ODAG extraction state (sorted pattern order + §5.3 cost
-//! tables) is built once here as an [`ExtractionPlan`] rather than
-//! recomputed by every worker. Shuffle accounting lives in the workers
+//! tables) is built once here as an [`ExtractionPlan`] — its
+//! per-pattern cost tables computed across the pool
+//! ([`ExtractionPlan::build_measured`]) — rather than recomputed by
+//! every worker. Workers then extract through one pattern-carrying
+//! resumable cursor each (`odag::PlanCursor`): chunk claims resume the
+//! retained descent instead of re-descending per chunk, and leaves
+//! arrive with their quick patterns carried down the descent
+//! ([`StepStats::pattern_rescans`] stays 0 in ODAG mode,
+//! [`StepStats::root_descents`] counts the surviving full descents).
+//! Shuffle accounting lives in the workers
 //! ([`worker::WorkerOut::shuffle_comm`]), so the coordinator only sums
 //! counters; with stealing disabled the message/byte totals are
 //! bit-identical to the old sequential loop (with stealing they track
@@ -199,6 +207,12 @@ pub struct RunResult {
     pub steals: u64,
     /// Frontier index units that moved workers via stealing.
     pub stolen_units: u64,
+    /// Full quick-pattern rescans paid at extraction across the run
+    /// (Σ per-step [`StepStats::pattern_rescans`]); 0 in ODAG mode.
+    pub pattern_rescans: u64,
+    /// Full ODAG-cursor root re-descents across the run
+    /// (Σ per-step [`StepStats::root_descents`]).
+    pub root_descents: u64,
     pub comm: CommStats,
     pub phases: PhaseTimes,
     pub agg_stats: AggStats,
@@ -366,6 +380,8 @@ impl Cluster {
         let mut processed_total = 0u64;
         let mut steals_total = 0u64;
         let mut stolen_units_total = 0u64;
+        let mut pattern_rescans_total = 0u64;
+        let mut root_descents_total = 0u64;
         let mut peak_frontier_bytes = 0u64;
 
         let mut step = 1usize;
@@ -428,6 +444,8 @@ impl Cluster {
                 st.list_bytes += out.list_bytes;
                 st.steals += out.steals;
                 st.stolen_units += out.stolen_units;
+                st.pattern_rescans += out.pattern_rescans;
+                st.root_descents += out.root_descents;
                 st.phases.merge(&out.phases);
                 st.busy_max = st.busy_max.max(out.busy);
                 st.busy_sum += out.busy;
@@ -503,12 +521,32 @@ impl Cluster {
             pattern_history = new_pat_history;
             int_history = new_int_history;
             st.merge_cpu += c_hp + c_hi;
-            st.phases.add(Phase::Merge, st.merge_cpu);
             // Critical-path contribution mirrors tree_reduce: with the
             // folds spread over two threads the barrier waits for the
             // slower one; run sequentially (w == 1) both are on the
             // critical path.
             merge_critical_par += if parallel { c_hp.max(c_hi) } else { c_hp + c_hi };
+
+            // Next step's extraction plan, built here at the barrier
+            // with its per-pattern §5.3 cost tables — the dominant
+            // build cost, embarrassingly parallel — spread over the
+            // pool as measured `Phase::Merge` tasks (previously a
+            // sequential-coordinator remainder).
+            let odag_next = if cfg.use_odag {
+                let merged_odags = odags_merged.unwrap_or_default();
+                let t_plan = Instant::now();
+                let (plan, c_plan, u_plan) = ExtractionPlan::build_measured(
+                    &merged_odags,
+                    if parallel { w } else { 1 },
+                );
+                par_wall += t_plan.elapsed();
+                st.merge_cpu += u_plan;
+                merge_critical_par += c_plan;
+                Some((merged_odags, plan))
+            } else {
+                None
+            };
+            st.phases.add(Phase::Merge, st.merge_cpu);
 
             // Broadcast accounting: replicated to every other server.
             st.comm.add(
@@ -525,18 +563,12 @@ impl Cluster {
             // Either representation is merged and replicated at every
             // worker (paper §5.2: partitioning happens at extraction), so
             // both pay the broadcast — ODAGs just pay far fewer bytes.
-            frontier = if cfg.use_odag {
-                let merged_odags = odags_merged.unwrap_or_default();
+            frontier = if let Some((merged_odags, plan)) = odag_next {
                 st.frontier_bytes = merged_odags.byte_size() as u64;
                 st.comm.add(
                     merged_odags.by_pattern.len() as u64 * (cfg.servers as u64 - 1),
                     st.frontier_bytes * (cfg.servers as u64 - 1),
                 );
-                // Extraction plan (sorted pattern order + §5.3 cost
-                // tables) built once here for every worker of the next
-                // step; its cost lands in the barrier's sequential
-                // remainder below.
-                let plan = ExtractionPlan::build(&merged_odags);
                 Frontier::Odag(merged_odags, plan)
             } else {
                 // Single source of truth: the workers' write-time
@@ -553,6 +585,8 @@ impl Cluster {
             candidates_total += st.candidates;
             steals_total += st.steals;
             stolen_units_total += st.stolen_units;
+            pattern_rescans_total += st.pattern_rescans;
+            root_descents_total += st.root_descents;
             comm_total.merge(&st.comm);
             phases_total.merge(&st.phases);
             st.merge_wall = t_merge.elapsed();
@@ -600,6 +634,8 @@ impl Cluster {
             candidates: candidates_total,
             steals: steals_total,
             stolen_units: stolen_units_total,
+            pattern_rescans: pattern_rescans_total,
+            root_descents: root_descents_total,
             comm: comm_total,
             phases: phases_total,
             agg_stats,
@@ -700,6 +736,43 @@ mod tests {
         assert_eq!(folded[&p2].as_long(), 5);
         // Step map is untouched (it becomes the next step's read side).
         assert_eq!(step[&p1].as_long(), 3);
+    }
+
+    #[test]
+    fn odag_extraction_never_rescans_quick_patterns() {
+        // The cursor carries quick patterns down the descent: an ODAG
+        // run must finish with zero extraction-site rescans, while list
+        // mode pays exactly one per extracted parent.
+        let g = gen::erdos_renyi(30, 90, 2, 1, 3);
+        let app = Motifs::new(3);
+        let odag = Cluster::new(Config::new(1, 3).with_block(4)).run(&g, &app);
+        assert!(odag.processed > 0);
+        assert_eq!(odag.pattern_rescans, 0, "ODAG mode must carry quick patterns");
+        for s in &odag.steps {
+            assert_eq!(s.pattern_rescans, 0, "step {}", s.step);
+        }
+        let list =
+            Cluster::new(Config::new(1, 3).with_odag(false).with_block(4)).run(&g, &app);
+        // The run terminates on an empty frontier, so every frontier
+        // entry became a list-mode parent exactly once.
+        assert_eq!(list.steps.last().map(|s| s.frontier), Some(0));
+        assert_eq!(list.pattern_rescans, list.total_frontier());
+        // And a list run never touches an ODAG cursor.
+        assert_eq!(list.root_descents, 0);
+    }
+
+    #[test]
+    fn single_worker_odag_claims_are_one_contiguous_run() {
+        // One worker's round-robin queue is chunk ids 0,1,2,…: every
+        // claim resumes the cursor, so each ODAG-extracting step pays
+        // at most one root descent (vs one per chunk before cursors).
+        let g = gen::erdos_renyi(24, 70, 2, 1, 9);
+        let r = Cluster::new(Config::new(1, 1).with_block(4)).run(&g, &Motifs::new(3));
+        assert!(r.steps.len() >= 2, "need ODAG-extracting steps");
+        for s in &r.steps {
+            assert!(s.root_descents <= 1, "step {}: {} descents", s.step, s.root_descents);
+        }
+        assert!(r.root_descents >= 1, "ODAG steps must have descended");
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //!
 //! * a worker claims its own chunks front-to-back (`head`),
 //! * a worker that runs dry picks the peer with the **most remaining
-//!   chunks** and steals one from that peer's back end (`tail`),
+//!   cost units** (sum of unclaimed chunk widths, so a queue holding
+//!   the clipped final chunk weighs what it actually covers) and
+//!   steals one from that peer's back end (`tail`),
 //! * both moves are single CAS operations on one packed `AtomicU64` per
 //!   worker, so a chunk is claimed exactly once — never duplicated,
 //!   never dropped (pinned by the unit tests here and the engine-level
@@ -109,6 +111,9 @@ pub struct ChunkQueues {
     chunk: u64,
     /// Total frontier index units (the last chunk may be partial).
     total: u64,
+    /// Total chunk count (`ceil(total / chunk)`); chunk id
+    /// `n_chunks - 1` is the one clipped chunk.
+    n_chunks: u64,
     /// When false, `next` never steals — the static-partition reference.
     steal: bool,
 }
@@ -168,18 +173,46 @@ impl ChunkQueues {
             }
         };
         let cursor = owned.iter().map(|q| AtomicU64::new(pack(0, q.len))).collect();
-        ChunkQueues { owned, cursor, chunk, total, steal }
+        ChunkQueues { owned, cursor, chunk, total, n_chunks, steal }
     }
 
     /// Total number of chunks in the ledger.
     pub fn num_chunks(&self) -> u64 {
-        self.owned.iter().map(|q| q.len).sum()
+        self.n_chunks
     }
 
     /// Chunks still unclaimed in worker `w`'s queue (racy snapshot).
     pub fn remaining(&self, w: usize) -> u64 {
         let (head, tail) = unpack(self.cursor[w].load(Ordering::SeqCst));
         tail.saturating_sub(head)
+    }
+
+    /// Frontier index units still unclaimed in worker `w`'s queue — the
+    /// sum of its unclaimed chunks' *widths* (racy snapshot). Every
+    /// chunk is `chunk` units wide except the final chunk of the index
+    /// space, which is clipped to `total`; weighing victims by units
+    /// instead of chunk count keeps heterogeneous chunks balanced.
+    /// O(1): the owned id sequence is arithmetic, so "does `w` still
+    /// hold the clipped chunk" is a divisibility test, not a scan.
+    pub fn remaining_units(&self, w: usize) -> u64 {
+        let (head, tail) = unpack(self.cursor[w].load(Ordering::SeqCst));
+        let rem = tail.saturating_sub(head);
+        if rem == 0 {
+            return 0;
+        }
+        let mut units = rem * self.chunk;
+        // Clip adjustment: subtract what the last chunk is short of a
+        // full width, if that chunk sits unclaimed in w's queue.
+        let last = self.n_chunks - 1;
+        let q = &self.owned[w];
+        debug_assert!(q.stride >= 1, "placements produce strides >= 1");
+        if last >= q.start && (last - q.start) % q.stride == 0 {
+            let i = (last - q.start) / q.stride;
+            if (head..tail).contains(&i) && i < q.len {
+                units -= (last + 1) * self.chunk - self.total;
+            }
+        }
+        units
     }
 
     /// Claim the next chunk for worker `wid`: its own queue first
@@ -219,18 +252,21 @@ impl ChunkQueues {
     }
 
     /// Steal one chunk from the back of the queue with the most
-    /// remaining chunks. Rescans on any race; returns `None` only after
-    /// a full scan finds every queue drained (work never grows
-    /// mid-step, so "empty everywhere once" is final).
+    /// remaining **cost units** (sum of unclaimed chunk widths — see
+    /// [`ChunkQueues::remaining_units`]), not the most chunks: a queue
+    /// holding the clipped final chunk weighs less than its chunk count
+    /// suggests, so unit-weighting picks the genuinely heaviest victim.
+    /// Rescans on any race; returns `None` only after a full scan finds
+    /// every queue drained (work never grows mid-step, so "empty
+    /// everywhere once" is final).
     fn steal_chunk(&self, thief: usize) -> Option<u64> {
         loop {
             let mut best: Option<(usize, u64)> = None;
-            for (v, cur) in self.cursor.iter().enumerate() {
+            for v in 0..self.cursor.len() {
                 if v == thief {
                     continue;
                 }
-                let (head, tail) = unpack(cur.load(Ordering::SeqCst));
-                let rem = tail.saturating_sub(head);
+                let rem = self.remaining_units(v);
                 let heavier = match best {
                     None => rem > 0,
                     Some((_, r)) => rem > r,
@@ -387,6 +423,36 @@ mod tests {
         let c = q.next(2).unwrap();
         assert!(c.stolen);
         assert_eq!(q.remaining(0), heavy_before - 1);
+    }
+
+    #[test]
+    fn remaining_units_accounts_for_the_clipped_chunk() {
+        // 4 chunks over [0, 52) at width 16: widths 16,16,16,4. Round-
+        // robin over 3 workers: w0 owns {0, 3}, w1 {1}, w2 {2}.
+        let q = ChunkQueues::new(52, 16, 3, Partition::RoundRobin, true);
+        assert_eq!(q.num_chunks(), 4);
+        assert_eq!(q.remaining_units(0), 20); // 16 + the clipped 4
+        assert_eq!(q.remaining_units(1), 16);
+        assert_eq!(q.remaining_units(2), 16);
+        // Units and counts track claims together.
+        assert!(q.pop_own(0).is_some()); // chunk 0 (full width)
+        assert_eq!(q.remaining(0), 1);
+        assert_eq!(q.remaining_units(0), 4); // only the clipped chunk left
+    }
+
+    #[test]
+    fn steal_weighs_victims_by_units_not_chunk_count() {
+        // Same ledger; after w0 claims its full-width chunk, w0 and w2
+        // both hold exactly one chunk — but w0's is the 4-unit clipped
+        // tail while w2 holds 16 units. Count-based selection tied and
+        // fell to scan order (w0); unit-weighting must pick w2.
+        let q = ChunkQueues::new(52, 16, 3, Partition::RoundRobin, true);
+        assert!(q.pop_own(0).is_some());
+        while q.pop_own(1).is_some() {}
+        let c = q.next(1).expect("peers still hold chunks");
+        assert!(c.stolen);
+        assert_eq!((c.lo, c.hi), (32, 48), "must steal w2's full chunk");
+        assert_eq!(q.remaining_units(0), 4, "w0's clipped tail untouched");
     }
 
     /// Hammer the ledger from `workers` threads; whatever the

@@ -17,6 +17,16 @@
 //! counted in [`WorkerOut::steals`]/[`WorkerOut::stolen_units`] and the
 //! ledger traffic is charged to `Phase::Steal`.
 //!
+//! In ODAG mode the claims feed one **pattern-carrying resumable
+//! cursor** per worker per step ([`PlanCursor`](crate::odag::PlanCursor)):
+//! consecutive and forward claims resume the retained descent stack
+//! instead of re-descending root-to-leaf per chunk
+//! ([`WorkerOut::root_descents`] counts the remaining full descents),
+//! and every extracted parent arrives with its quick pattern and
+//! visit-order vertices already carried down the descent — the
+//! per-parent O(k²) `quick_pattern` rescan survives only in list mode,
+//! where it is counted in [`WorkerOut::pattern_rescans`].
+//!
 //! The worker also computes its own cross-server shuffle accounting
 //! (paper §4.3) before returning, so the barrier merely sums
 //! [`WorkerOut::shuffle_comm`] — the coordinator no longer walks every
@@ -95,6 +105,14 @@ pub struct WorkerOut {
     pub steals: u64,
     /// Frontier index units covered by those stolen chunks.
     pub stolen_units: u64,
+    /// Full `quick_pattern` rescans this worker paid at extraction —
+    /// one per list-mode parent; 0 in ODAG mode, where the cursor
+    /// carries the pattern down the descent.
+    pub pattern_rescans: u64,
+    /// Full root re-descents of this worker's ODAG cursor (bounded by
+    /// its non-contiguous claim runs; the pre-cursor engine paid one
+    /// per chunk).
+    pub root_descents: u64,
     /// Cross-server shuffle traffic of this worker's parts, computed
     /// worker-side. Summing per-worker contributions is bit-identical to
     /// the old coordinator loop: the individual `add`s are the same and
@@ -129,18 +147,23 @@ impl Pipeline<'_> {
     /// Process the parent currently in `self.parent`: α/β with the
     /// aggregates of its generation step, extension generation,
     /// canonicality, then each surviving candidate. `parent_quick` is
-    /// its quick pattern, already computed by the extraction site (in
-    /// ODAG mode it doubles as the spurious-sequence check — the seed
-    /// engine computed it twice). `reapply_filter` re-runs φ: ODAG
-    /// extraction can surface spurious sequences, and anti-monotonicity
-    /// makes the full-embedding check cover every prefix (see odag
-    /// module docs).
-    fn process_parent(&mut self, parent_quick: Pattern, reapply_filter: bool) {
-        // Parent visit-order vertices: reused by every child's
-        // incremental quick pattern.
-        let t = Instant::now();
-        let parent_verts = self.parent.vertices(self.g, self.mode);
-        self.phases.add(Phase::PatternAgg, t.elapsed());
+    /// its quick pattern, already computed by the extraction site (the
+    /// ODAG cursor carries it down the descent, where it doubles as the
+    /// spurious-sequence check — the seed engine computed it twice).
+    /// `parent_verts` is the parent's visit-order vertex list when the
+    /// extraction site already has it (the cursor carries this too);
+    /// `None` makes the pipeline derive it — but only *after* the α
+    /// filter, since only surviving children consume it (charging the
+    /// scan to a filter-rejected parent skewed `Phase::PatternAgg`).
+    /// `reapply_filter` re-runs φ: ODAG extraction can surface spurious
+    /// sequences, and anti-monotonicity makes the full-embedding check
+    /// cover every prefix (see odag module docs).
+    fn process_parent(
+        &mut self,
+        parent_quick: Pattern,
+        parent_verts: Option<&[u32]>,
+        reapply_filter: bool,
+    ) {
         self.ctx.current_quick = Some(parent_quick);
         if reapply_filter {
             let t = Instant::now();
@@ -163,6 +186,20 @@ impl Pipeline<'_> {
         self.phases.add(Phase::User, t.elapsed());
         let parent_quick = self.ctx.current_quick.take().unwrap();
 
+        // Parent visit-order vertices, reused by every child's
+        // incremental quick pattern — derived here, past the filters,
+        // when the extraction site didn't carry it.
+        let owned_verts;
+        let parent_verts: &[u32] = match parent_verts {
+            Some(v) => v,
+            None => {
+                let t = Instant::now();
+                owned_verts = self.parent.vertices(self.g, self.mode);
+                self.phases.add(Phase::PatternAgg, t.elapsed());
+                &owned_verts
+            }
+        };
+
         // G: extension candidates.
         let t = Instant::now();
         let mut exts = embedding::extensions(self.g, &self.parent, self.mode);
@@ -174,7 +211,7 @@ impl Pipeline<'_> {
         exts.retain(|&x| embedding::is_canonical_extension(g, mode, parent_words, x));
         self.phases.add(Phase::Canonicality, t.elapsed());
         for x in exts {
-            self.handle_candidate(x, &parent_quick, &parent_verts);
+            self.handle_candidate(x, &parent_quick, parent_verts);
         }
     }
 
@@ -285,6 +322,17 @@ pub fn run_step(
     // `read_clock` runs while extraction walks the frontier and pauses
     // while the pipeline handles a parent, so R measures extraction
     // alone (in the seed it also hid the staging clones it paid for).
+    // In ODAG mode R now also covers the pattern-carrying descent (the
+    // per-prefix quick-pattern deltas), which replaces the per-parent
+    // rescan previously charged to P.
+    //
+    // ODAG extraction state lives in ONE cursor per worker per step:
+    // claims resume its retained descent stack instead of re-descending
+    // root-to-leaf per chunk (`odag::PlanCursor`).
+    let mut odag_cursor = match frontier {
+        Frontier::Odag(store, plan) => Some(plan.cursor(store, g, mode)),
+        _ => None,
+    };
     loop {
         let t_claim = Instant::now();
         let Some(claim) = queues.next(wid) else {
@@ -310,7 +358,10 @@ pub fn run_step(
             }
             Frontier::List(all) => {
                 // A chunk is a contiguous slice of the embedding list,
-                // processed in place — no clone, no staging buffer.
+                // processed in place — no clone, no staging buffer. A
+                // plain list carries no pattern, so each parent pays the
+                // full quick-pattern rescan (counted: Fig 12's P phase
+                // and the `pattern_rescans` ODAG win both read off it).
                 let mut read_clock = Instant::now();
                 for words in &all[claim.lo as usize..claim.hi as usize] {
                     pipe.phases.add(Phase::Read, read_clock.elapsed());
@@ -319,36 +370,42 @@ pub fn run_step(
                     let t = Instant::now();
                     let quick = pattern::quick_pattern(g, &pipe.parent, mode);
                     pipe.phases.add(Phase::PatternAgg, t.elapsed());
-                    pipe.process_parent(quick, false);
+                    pipe.out.pattern_rescans += 1;
+                    pipe.process_parent(quick, None, false);
                     read_clock = Instant::now();
                 }
                 pipe.phases.add(Phase::Read, read_clock.elapsed());
             }
-            Frontier::Odag(store, plan) => {
+            Frontier::Odag(..) => {
                 // A chunk is a slice of the global path-index space the
-                // barrier-built plan lays out across sorted patterns;
-                // the cached cost tables make the descent skip test
-                // O(1) without recomputing costs per worker.
+                // barrier-built plan lays out across sorted patterns.
+                // The cursor resumes its retained descent for
+                // consecutive/forward claims and carries each leaf's
+                // quick pattern + vertices down with it, so no parent
+                // pays a rescan here.
+                let cur = odag_cursor.as_mut().expect("odag frontier opened a cursor");
                 let mut read_clock = Instant::now();
-                plan.enumerate_range(store, g, mode, claim.lo, claim.hi, |pat, words| {
+                cur.drain(claim.lo, claim.hi, |pat, words, verts, quick| {
                     pipe.phases.add(Phase::Read, read_clock.elapsed());
                     pipe.parent.words.clear();
                     pipe.parent.words.extend_from_slice(words);
-                    let t = Instant::now();
-                    let quick = pattern::quick_pattern(g, &pipe.parent, mode);
-                    pipe.phases.add(Phase::PatternAgg, t.elapsed());
                     // Drop spurious sequences whose quick pattern differs
                     // from this ODAG's pattern: such an embedding lives
                     // in (and is extracted from) its own pattern's ODAG —
-                    // without this check it would be processed twice.
+                    // without this check it would be processed twice. The
+                    // carried pattern is the check input; nothing is
+                    // recomputed.
                     if quick == *pat {
-                        pipe.process_parent(quick, true);
+                        pipe.process_parent(quick, Some(verts), true);
                     }
                     read_clock = Instant::now();
                 });
                 pipe.phases.add(Phase::Read, read_clock.elapsed());
             }
         }
+    }
+    if let Some(cur) = &odag_cursor {
+        pipe.out.root_descents = cur.root_descents();
     }
 
     let Pipeline { ctx, mut out, mut phases, parent, child, .. } = pipe;

@@ -199,6 +199,15 @@ fn print_run(r: &RunResult, per_step: bool) {
             human_count(r.stolen_units),
         );
     }
+    if r.pattern_rescans > 0 || r.root_descents > 0 {
+        // ODAG runs report root descents (one per non-contiguous claim
+        // run) and zero rescans; list runs report one rescan per parent.
+        println!(
+            "extraction: pattern-rescans={} root-descents={}",
+            human_count(r.pattern_rescans),
+            human_count(r.root_descents),
+        );
+    }
     let fr: Vec<String> = r
         .phases
         .fractions()

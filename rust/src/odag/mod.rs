@@ -26,16 +26,25 @@
 //! [`ExtractionPlan`] instead: the plan is built **once per step at the
 //! barrier** from the merged store — deterministic pattern order, each
 //! pattern's slice of one global path-index space, and the [`Odag::costs`]
-//! tables cached so workers stop recomputing them per step — and
-//! [`Odag::enumerate_range`] then extracts any `[lo, hi)` slice of that
-//! index space, which is what lets frontier chunks move between workers
-//! mid-step (`engine::steal`).
+//! tables cached so workers stop recomputing them per step (the
+//! per-pattern `costs()` calls spread over the barrier pool via
+//! [`ExtractionPlan::build_measured`]). Extraction itself is a
+//! **pattern-carrying resumable descent**: each worker opens one
+//! [`PlanCursor`] per step and feeds it every claimed `[lo, hi)` chunk
+//! — consecutive and forward claims resume the retained descent stack
+//! in amortized O(1) frames instead of re-descending root-to-leaf per
+//! chunk, and every extracted leaf arrives with its quick pattern and
+//! visit-order vertices already built by a [`QuickStack`] carried down
+//! the descent (see [`Cursor`]). [`Odag::enumerate_range`], the fresh
+//! per-chunk descent, remains the reference semantics the cursor is
+//! property-tested against.
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use crate::embedding::{self, Mode};
 use crate::graph::LabeledGraph;
-use crate::pattern::Pattern;
+use crate::pattern::{Pattern, QuickStack};
 use crate::util::codec::{CodecError, Reader, Writer};
 
 /// One per-pattern ODAG holding embeddings of a fixed length `k`.
@@ -340,6 +349,20 @@ impl Odag {
         prefix.pop();
     }
 
+    /// Open a resumable, pattern-carrying extraction cursor over this
+    /// ODAG's slice `[base, base + total_paths())` of the global path
+    /// index space. `costs` is this ODAG's cached [`Odag::costs`] table.
+    /// See [`Cursor`].
+    pub fn cursor<'a>(
+        &'a self,
+        g: &'a LabeledGraph,
+        mode: Mode,
+        costs: &'a [Vec<u64>],
+        base: u64,
+    ) -> Cursor<'a> {
+        Cursor::new(self, g, mode, costs, base)
+    }
+
     /// Does the path-index range `[lo, lo+size)` contain any index owned
     /// by worker `me` under round-robin blocks of `block`?
     fn range_owned(lo: u64, size: u64, me: usize, n_workers: usize, block: u64) -> bool {
@@ -398,6 +421,255 @@ impl Odag {
             }
         }
         prefix.pop();
+    }
+}
+
+/// One descent frame of a [`Cursor`]: iteration state over the children
+/// of an entered node (the root frame iterates array 0's entries).
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    /// Entry index in `arrays[depth - 1]` of the node whose children
+    /// this frame walks; unused for the root frame (depth 0).
+    entry: usize,
+    /// Next child position to consider (root: position in `arrays[0]`;
+    /// otherwise position in `conns[entry]`).
+    child: usize,
+    /// Global path index where the next child's subtree starts.
+    off: u64,
+}
+
+/// A canonical leaf the cursor is positioned at: the extracted word
+/// sequence plus everything the pipeline needs — its global path index,
+/// its visit-order vertex list, and its quick pattern, all carried down
+/// the descent instead of recomputed per parent.
+#[derive(Debug)]
+pub struct Leaf<'c> {
+    /// Global path index of this leaf.
+    pub index: u64,
+    /// The embedding's word sequence.
+    pub words: &'c [u32],
+    /// The embedding's vertices in visit order (`Embedding::vertices`).
+    pub vertices: &'c [u32],
+    /// The embedding's quick pattern, materialized from the carried
+    /// [`QuickStack`] — equal to `pattern::quick_pattern` of `words`.
+    pub quick: Pattern,
+}
+
+/// A **resumable, pattern-carrying** descent over one ODAG (the
+/// superstep's hottest loop — paper §5.2–§5.3).
+///
+/// The recursive [`Odag::enumerate_range`] re-descends root-to-leaf for
+/// every chunk a worker claims. The cursor instead *owns* the descent
+/// stack — one frame per depth (array index, child offset, global
+/// offset) plus a [`QuickStack`] pattern delta per prefix word — so a
+/// worker draining consecutive or forward-moving chunks resumes in
+/// amortized O(1) frames: [`Cursor::seek`] pops/advances only the
+/// frames the jump invalidates, and a full root re-descent happens only
+/// on a *backward* seek (a steal behind the current position), counted
+/// in [`Cursor::root_descents`].
+///
+/// Carrying the quick pattern down the descent (push one delta per
+/// prefix frame, pop on backtrack) means every leaf reaches the
+/// filter/process pipeline with pattern + visit-order vertices already
+/// built: the per-parent O(k²) quick-pattern rescan of the old
+/// extraction sites is deleted, and in ODAG mode the carried pattern is
+/// also the spurious-sequence check input.
+///
+/// Equivalence with fresh [`Odag::enumerate_range`] / whole
+/// [`Odag::enumerate`] extraction (any chunking, any seek order, both
+/// modes) is pinned by `prop_cursor_resume_equals_fresh_extraction`.
+pub struct Cursor<'a> {
+    odag: &'a Odag,
+    g: &'a LabeledGraph,
+    mode: Mode,
+    costs: &'a [Vec<u64>],
+    base: u64,
+    frames: Vec<Frame>,
+    words: Vec<u32>,
+    quick: QuickStack,
+    /// Global index of the pending leaf (valid when `at_leaf`).
+    pending: u64,
+    /// Positioned at a canonical leaf, not yet handed out.
+    at_leaf: bool,
+    /// The pending leaf was handed out by `next`; it must be popped
+    /// before the cursor moves again.
+    emitted: bool,
+    /// Smallest global index the cursor can still reach without a full
+    /// re-descent (state is valid for any target `>= resume_at`).
+    resume_at: u64,
+    started: bool,
+    exhausted: bool,
+    /// Full root-to-leaf re-descents performed: the first positioning
+    /// plus one per backward seek. Forward seeks — consecutive chunks,
+    /// round-robin strides, forward steals — resume incrementally.
+    pub root_descents: u64,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(
+        odag: &'a Odag,
+        g: &'a LabeledGraph,
+        mode: Mode,
+        costs: &'a [Vec<u64>],
+        base: u64,
+    ) -> Cursor<'a> {
+        let empty = odag.is_empty();
+        Cursor {
+            odag,
+            g,
+            mode,
+            costs,
+            base,
+            frames: Vec::new(),
+            words: Vec::new(),
+            quick: QuickStack::new(),
+            pending: 0,
+            at_leaf: false,
+            emitted: false,
+            resume_at: base,
+            started: empty,
+            exhausted: empty,
+            root_descents: 0,
+        }
+    }
+
+    /// Position the cursor so the next [`Cursor::next`] returns the
+    /// first canonical leaf with global index `>= lo`. Returns `true`
+    /// when the seek resumed from retained frames (forward move) and
+    /// `false` when it needed a full root re-descent (first positioning
+    /// or a backward jump).
+    pub fn seek(&mut self, lo: u64) -> bool {
+        let lo = lo.max(self.base);
+        if self.emitted {
+            self.pop_leaf();
+        }
+        let resumed = self.started && lo >= self.resume_at;
+        if !resumed {
+            self.reset_descend();
+        }
+        self.resume_at = lo;
+        self.advance_to(lo);
+        resumed
+    }
+
+    /// Hand out the pending leaf if its global index is `< hi`, then
+    /// advance past it on the following call. Returns `None` when the
+    /// next leaf falls at or beyond `hi` (the leaf stays pending for a
+    /// later seek/next) or the ODAG is exhausted.
+    pub fn next(&mut self, hi: u64) -> Option<Leaf<'_>> {
+        if !self.started {
+            self.seek(self.base);
+        } else if self.emitted {
+            self.pop_leaf();
+            self.advance_to(self.resume_at);
+        }
+        if !self.at_leaf || self.pending >= hi {
+            return None;
+        }
+        self.emitted = true;
+        self.resume_at = self.pending + 1;
+        Some(Leaf {
+            index: self.pending,
+            words: &self.words,
+            vertices: self.quick.vertices(),
+            quick: self.quick.pattern(),
+        })
+    }
+
+    /// Drop all descent state and re-arm the root frame.
+    fn reset_descend(&mut self) {
+        self.frames.clear();
+        self.words.clear();
+        self.quick.clear();
+        self.at_leaf = false;
+        self.emitted = false;
+        self.exhausted = self.odag.is_empty();
+        self.started = true;
+        self.root_descents += 1;
+        if !self.exhausted {
+            self.frames.push(Frame { entry: usize::MAX, child: 0, off: self.base });
+        }
+    }
+
+    /// Leave the pending leaf behind (emitted or skipped by a seek).
+    fn pop_leaf(&mut self) {
+        debug_assert!(self.at_leaf);
+        self.words.pop();
+        self.quick.pop();
+        self.at_leaf = false;
+        self.emitted = false;
+    }
+
+    /// Advance until positioned at a canonical leaf with global index
+    /// `>= lo`, or exhausted. Subtrees wholly below `lo` are skipped in
+    /// O(1) via the cost table, exactly like `descend_range`; prefixes
+    /// failing the canonicality check prune their whole subtree.
+    fn advance_to(&mut self, lo: u64) {
+        if self.exhausted {
+            return;
+        }
+        if self.at_leaf {
+            if self.pending >= lo {
+                return;
+            }
+            self.pop_leaf();
+        }
+        let k = self.odag.k();
+        loop {
+            let Some(top) = self.frames.last() else {
+                self.exhausted = true;
+                return;
+            };
+            let depth = self.frames.len() - 1; // children live at this depth
+            // Resolve the next child: its entry index in arrays[depth].
+            let (n_children, jx) = if depth == 0 {
+                (self.odag.arrays[0].ids.len(), Some(top.child))
+            } else {
+                let conns = &self.odag.arrays[depth - 1].conns[top.entry];
+                let jx = conns
+                    .get(top.child)
+                    .and_then(|&to| self.odag.arrays[depth].index_of(to));
+                (conns.len(), jx)
+            };
+            if top.child >= n_children {
+                // This node's children are exhausted: backtrack.
+                self.frames.pop();
+                if depth > 0 {
+                    self.words.pop();
+                    self.quick.pop();
+                }
+                continue;
+            }
+            let top = self.frames.last_mut().expect("frame checked above");
+            top.child += 1;
+            // A conn target absent from the next array contributes no
+            // subtree and no index space (mirrors `descend_range`).
+            let Some(jx) = jx else { continue };
+            let size = self.costs[depth][jx];
+            if size == 0 {
+                continue; // zero-cost subtree: no complete paths
+            }
+            let child_lo = top.off;
+            top.off += size;
+            if child_lo + size <= lo {
+                continue; // wholly behind the target: O(1) skip
+            }
+            let id = self.odag.arrays[depth].ids[jx];
+            // Canonicality prune: cuts the whole subtree of a bad prefix.
+            if !embedding::is_canonical_extension(self.g, self.mode, &self.words, id) {
+                continue;
+            }
+            self.words.push(id);
+            self.quick.push(self.g, id, self.mode);
+            if depth + 1 == k {
+                // Leaf: size == 1, and child_lo + 1 > lo proves
+                // child_lo >= lo.
+                self.at_leaf = true;
+                self.pending = child_lo;
+                return;
+            }
+            self.frames.push(Frame { entry: jx, child: 0, off: child_lo });
+        }
     }
 }
 
@@ -486,7 +758,7 @@ impl OdagStore {
 /// [`ExtractionPlan::enumerate_range`] extracts any slice `[lo, hi)` of
 /// the global index space, which is the unit the work-stealing ledger
 /// (`engine::steal`) deals in.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ExtractionPlan {
     /// Patterns in deterministic (sorted) extraction order.
     pats: Vec<Pattern>,
@@ -499,19 +771,82 @@ pub struct ExtractionPlan {
 }
 
 impl ExtractionPlan {
+    /// Sequential build — the reference semantics of
+    /// [`ExtractionPlan::build_measured`], which the engine's barrier
+    /// uses to spread the per-pattern `costs()` calls over its pool.
     pub fn build(store: &OdagStore) -> ExtractionPlan {
+        Self::build_measured(store, 1).0
+    }
+
+    /// Build the plan with the per-pattern §5.3 cost tables — the
+    /// dominant share of the build — computed across up to `threads`
+    /// scoped threads. The calls are embarrassingly parallel (one
+    /// read-only ODAG each); only the sort and the base-offset prefix
+    /// sum stay sequential.
+    ///
+    /// Returns `(plan, critical, total)` where `critical` is the
+    /// simulated parallel cost (max thread-CPU across the cost workers)
+    /// and `total` the thread-CPU summed over them — the same
+    /// accounting contract as `engine::tree_reduce`, so the barrier can
+    /// charge the build to `Phase::Merge` and its critical path instead
+    /// of the sequential coordinator remainder. With `threads <= 1` the
+    /// build runs inline and `critical == total`. Any thread count
+    /// yields an identical plan (pinned by
+    /// `build_measured_equals_sequential_build`).
+    pub fn build_measured(
+        store: &OdagStore,
+        threads: usize,
+    ) -> (ExtractionPlan, Duration, Duration) {
         let mut pats: Vec<Pattern> = store.by_pattern.keys().cloned().collect();
         pats.sort_unstable();
+        let threads = threads.clamp(1, pats.len().max(1));
+        let (costs, critical, total_cpu) = if threads <= 1 {
+            let cpu0 = crate::stats::thread_cpu_time();
+            let costs: Vec<Vec<Vec<u64>>> =
+                pats.iter().map(|p| store.by_pattern[p].costs()).collect();
+            let spent = crate::stats::thread_cpu_time().saturating_sub(cpu0);
+            (costs, spent, spent)
+        } else {
+            // Near-equal contiguous slices of the sorted pattern list,
+            // one scoped thread each; slice results concatenate back in
+            // pattern order.
+            let per = pats.len().div_ceil(threads);
+            let results = std::thread::scope(|scope| {
+                let handles: Vec<_> = pats
+                    .chunks(per)
+                    .map(|slice| {
+                        scope.spawn(move || {
+                            let cpu0 = crate::stats::thread_cpu_time();
+                            let costs: Vec<Vec<Vec<u64>>> =
+                                slice.iter().map(|p| store.by_pattern[p].costs()).collect();
+                            let spent =
+                                crate::stats::thread_cpu_time().saturating_sub(cpu0);
+                            (costs, spent)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("plan-build thread panicked"))
+                    .collect::<Vec<_>>()
+            });
+            let mut costs = Vec::with_capacity(pats.len());
+            let mut critical = Duration::ZERO;
+            let mut total_cpu = Duration::ZERO;
+            for (part, spent) in results {
+                costs.extend(part);
+                critical = critical.max(spent);
+                total_cpu += spent;
+            }
+            (costs, critical, total_cpu)
+        };
         let mut base = Vec::with_capacity(pats.len());
-        let mut costs = Vec::with_capacity(pats.len());
         let mut total = 0u64;
-        for p in &pats {
-            let c = store.by_pattern[p].costs();
+        for c in &costs {
             base.push(total);
             total += c.first().map_or(0, |row| row.iter().sum::<u64>());
-            costs.push(c);
         }
-        ExtractionPlan { pats, base, costs, total }
+        (ExtractionPlan { pats, base, costs, total }, critical, total_cpu)
     }
 
     /// Total global path indices (the frontier's extraction unit count).
@@ -549,6 +884,123 @@ impl ExtractionPlan {
             });
             i += 1;
         }
+    }
+
+    /// Open a [`PlanCursor`] over the whole global index space — the
+    /// worker-facing resumable extraction handle: one per worker per
+    /// step, fed every claimed chunk via [`PlanCursor::drain`].
+    pub fn cursor<'a>(
+        &'a self,
+        store: &'a OdagStore,
+        g: &'a LabeledGraph,
+        mode: Mode,
+    ) -> PlanCursor<'a> {
+        PlanCursor {
+            plan: self,
+            store,
+            g,
+            mode,
+            cur: None,
+            cur_pat: usize::MAX,
+            pos: u64::MAX,
+            descents: 0,
+        }
+    }
+}
+
+/// A resumable cursor over an [`ExtractionPlan`]'s **global** path
+/// index space: per-pattern [`Cursor`]s created on demand, with the
+/// active one retained across [`PlanCursor::drain`] calls so a worker's
+/// successive chunk claims resume the descent instead of re-descending
+/// per chunk.
+///
+/// [`PlanCursor::root_descents`] counts the descents that *broke* a
+/// contiguous run: a drain starting somewhere other than where the
+/// previous one ended and needing fresh or reset descent state. A
+/// pattern boundary crossed mid-run is free (the next ODAG's descent
+/// starts at its own root either way), so the counter is bounded by the
+/// worker's number of non-contiguous claim runs — the invariant
+/// `StepStats::root_descents` asserts in tests.
+pub struct PlanCursor<'a> {
+    plan: &'a ExtractionPlan,
+    store: &'a OdagStore,
+    g: &'a LabeledGraph,
+    mode: Mode,
+    /// The retained per-pattern cursor and which pattern it walks.
+    cur: Option<Cursor<'a>>,
+    cur_pat: usize,
+    /// Watermark: where the previous drain ended (`u64::MAX` = none).
+    pos: u64,
+    descents: u64,
+}
+
+impl PlanCursor<'_> {
+    /// Extract every sequence with global path index in `[lo, hi)`, in
+    /// ascending index order, calling
+    /// `f(pattern, words, vertices, quick)` — the ODAG's pattern plus
+    /// the carried visit-order vertices and quick pattern of each leaf.
+    /// Equivalent to [`ExtractionPlan::enumerate_range`] with the
+    /// per-leaf quick pattern recomputation already paid during descent
+    /// (and amortized across sibling leaves).
+    pub fn drain<F: FnMut(&Pattern, &[u32], &[u32], Pattern)>(
+        &mut self,
+        lo: u64,
+        hi: u64,
+        mut f: F,
+    ) {
+        if lo >= hi {
+            return;
+        }
+        let plan = self.plan;
+        let mut lo = lo;
+        // First pattern whose slice can overlap: the last with base <= lo.
+        let mut i = plan.base.partition_point(|&b| b <= lo).saturating_sub(1);
+        while i < plan.pats.len() {
+            let b = plan.base[i];
+            if b >= hi {
+                break;
+            }
+            let end = plan.base.get(i + 1).copied().unwrap_or(plan.total);
+            let s_lo = lo.max(b);
+            let s_hi = hi.min(end);
+            if s_lo >= s_hi {
+                i += 1;
+                continue; // empty ODAG: no index space
+            }
+            if self.cur_pat != i {
+                let pat = &plan.pats[i];
+                self.cur = Some(self.store.by_pattern[pat].cursor(
+                    self.g,
+                    self.mode,
+                    &plan.costs[i],
+                    b,
+                ));
+                self.cur_pat = i;
+            }
+            let cur = self.cur.as_mut().expect("cursor installed above");
+            let resumed = cur.seek(s_lo);
+            // A contiguous continuation (s_lo == watermark) never counts:
+            // either the retained cursor resumed, or we crossed into a
+            // fresh pattern whose root descent is unavoidable.
+            if !resumed && s_lo != self.pos {
+                self.descents += 1;
+            }
+            let pat = &plan.pats[i];
+            while let Some(leaf) = cur.next(s_hi) {
+                f(pat, leaf.words, leaf.vertices, leaf.quick);
+            }
+            self.pos = s_hi;
+            if s_hi >= hi {
+                break;
+            }
+            lo = s_hi;
+            i += 1;
+        }
+    }
+
+    /// Descents that broke a contiguous claim run (see type docs).
+    pub fn root_descents(&self) -> u64 {
+        self.descents
     }
 }
 
@@ -839,6 +1291,207 @@ mod tests {
             }
             assert_eq!(chunked, want, "chunk={chunk}");
         }
+    }
+
+    #[test]
+    fn cursor_sequential_chunks_equal_fresh_range_extraction() {
+        let g = fig5_graph();
+        let o = build_odag(&g, &canonical_size3(&g));
+        let costs = o.costs();
+        let total = o.total_paths();
+        let mut whole = Vec::new();
+        o.enumerate(&g, Mode::VertexInduced, 0, 1, 64, |w| whole.push(w.to_vec()));
+        for chunk in [1u64, 2, 5, 64] {
+            let mut cur = o.cursor(&g, Mode::VertexInduced, &costs, 0);
+            let mut got = Vec::new();
+            let mut lo = 0;
+            while lo < total {
+                let hi = (lo + chunk).min(total);
+                let resumed = cur.seek(lo);
+                assert_eq!(resumed, lo != 0, "chunk={chunk} lo={lo}");
+                while let Some(leaf) = cur.next(hi) {
+                    assert!((lo..hi).contains(&leaf.index));
+                    got.push(leaf.words.to_vec());
+                }
+                lo = hi;
+            }
+            assert_eq!(got, whole, "chunk={chunk}");
+            // Contiguous chunking is one run: exactly one root descent.
+            assert_eq!(cur.root_descents, 1, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn cursor_carries_quick_pattern_and_vertices() {
+        let g = fig5_graph();
+        let o = build_odag(&g, &canonical_size3(&g));
+        let costs = o.costs();
+        let total = o.total_paths();
+        let mut cur = o.cursor(&g, Mode::VertexInduced, &costs, 0);
+        let mut n = 0;
+        while let Some(leaf) = cur.next(total) {
+            let e = embedding::Embedding::new(leaf.words.to_vec());
+            assert_eq!(
+                leaf.quick,
+                crate::pattern::quick_pattern(&g, &e, Mode::VertexInduced),
+                "carried quick pattern != rescan at {:?}",
+                leaf.words
+            );
+            assert_eq!(leaf.vertices, e.vertices(&g, Mode::VertexInduced));
+            n += 1;
+        }
+        assert!(n > 0);
+    }
+
+    #[test]
+    fn cursor_backward_seek_re_descends_forward_seek_resumes() {
+        let g = fig5_graph();
+        let o = build_odag(&g, &canonical_size3(&g));
+        let costs = o.costs();
+        let total = o.total_paths();
+        assert!(total > 4);
+        let mut cur = o.cursor(&g, Mode::VertexInduced, &costs, 0);
+        // First positioning: one descent.
+        cur.seek(0);
+        assert_eq!(cur.root_descents, 1);
+        // Forward jump (skipping indices) resumes in place.
+        assert!(cur.seek(total / 2));
+        assert_eq!(cur.root_descents, 1);
+        // Backward jump needs a fresh root descent.
+        assert!(!cur.seek(1));
+        assert_eq!(cur.root_descents, 2);
+        // And still extracts correctly after the reset.
+        let mut got = Vec::new();
+        while let Some(leaf) = cur.next(total) {
+            got.push(leaf.words.to_vec());
+        }
+        let mut want = Vec::new();
+        o.enumerate_range(&g, Mode::VertexInduced, &costs, 0, 1, total, |w| {
+            want.push(w.to_vec())
+        });
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cursor_respects_base_offset_and_exhaustion() {
+        let g = fig5_graph();
+        let o = build_odag(&g, &canonical_size3(&g));
+        let costs = o.costs();
+        let total = o.total_paths();
+        let base = 500u64;
+        let mut cur = o.cursor(&g, Mode::VertexInduced, &costs, base);
+        let mut shifted = Vec::new();
+        while let Some(leaf) = cur.next(base + total) {
+            assert!((base..base + total).contains(&leaf.index));
+            shifted.push(leaf.words.to_vec());
+        }
+        let mut at_zero = Vec::new();
+        let mut cur0 = o.cursor(&g, Mode::VertexInduced, &costs, 0);
+        while let Some(leaf) = cur0.next(total) {
+            at_zero.push(leaf.words.to_vec());
+        }
+        assert_eq!(shifted, at_zero);
+        // Exhausted cursors stay exhausted without extra descents.
+        assert!(cur.next(u64::MAX).is_none());
+        assert_eq!(cur.root_descents, 1);
+        // Empty ODAG: no leaves, no descents.
+        let empty = Odag::new(3);
+        let ec = empty.costs();
+        let mut cur = empty.cursor(&g, Mode::VertexInduced, &ec, 0);
+        assert!(cur.next(u64::MAX).is_none());
+        assert_eq!(cur.root_descents, 0);
+    }
+
+    #[test]
+    fn plan_cursor_matches_enumerate_range_and_counts_runs() {
+        let g = fig5_graph();
+        let p1 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        let p2 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        let mut store = OdagStore::new();
+        for e in canonical_size3(&g) {
+            let pat = if e[0] % 2 == 0 { &p1 } else { &p2 };
+            store.add(pat, &e);
+        }
+        let plan = ExtractionPlan::build(&store);
+        let mut want: Vec<(Pattern, Vec<u32>)> = Vec::new();
+        plan.enumerate_range(&store, &g, Mode::VertexInduced, 0, plan.total(), |p, w| {
+            want.push((p.clone(), w.to_vec()))
+        });
+
+        // Contiguous chunked drains: same sequences, carried quick
+        // pattern equals a rescan, one claim run => <= 1 root descent
+        // even across the pattern boundary.
+        for chunk in [1u64, 3, 7] {
+            let mut cur = plan.cursor(&store, &g, Mode::VertexInduced);
+            let mut got: Vec<(Pattern, Vec<u32>)> = Vec::new();
+            let mut lo = 0;
+            while lo < plan.total() {
+                let hi = (lo + chunk).min(plan.total());
+                cur.drain(lo, hi, |p, w, verts, quick| {
+                    let e = embedding::Embedding::new(w.to_vec());
+                    assert_eq!(
+                        quick,
+                        crate::pattern::quick_pattern(&g, &e, Mode::VertexInduced)
+                    );
+                    assert_eq!(verts, e.vertices(&g, Mode::VertexInduced));
+                    got.push((p.clone(), w.to_vec()));
+                });
+                lo = hi;
+            }
+            assert_eq!(got, want, "chunk={chunk}");
+            assert!(cur.root_descents() <= 1, "chunk={chunk}: contiguous run re-descended");
+        }
+
+        // Out-of-order drains: union still exact, and root descents stay
+        // bounded by the number of non-contiguous claim runs.
+        let chunk = 4u64;
+        let mut claims: Vec<(u64, u64)> = Vec::new();
+        let mut lo = 0;
+        while lo < plan.total() {
+            claims.push((lo, (lo + chunk).min(plan.total())));
+            lo += chunk;
+        }
+        claims.reverse();
+        let runs = 1 + claims
+            .windows(2)
+            .filter(|w| w[1].0 != w[0].1)
+            .count() as u64;
+        let mut cur = plan.cursor(&store, &g, Mode::VertexInduced);
+        let mut got: Vec<(Pattern, Vec<u32>)> = Vec::new();
+        for &(lo, hi) in &claims {
+            cur.drain(lo, hi, |p, w, _, _| got.push((p.clone(), w.to_vec())));
+        }
+        got.sort();
+        let mut want_sorted = want.clone();
+        want_sorted.sort();
+        assert_eq!(got, want_sorted);
+        assert!(
+            cur.root_descents() <= runs,
+            "descents {} > runs {runs}",
+            cur.root_descents()
+        );
+    }
+
+    #[test]
+    fn build_measured_equals_sequential_build() {
+        let g = fig5_graph();
+        let p1 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        let p2 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        let p3 = Pattern::new(vec![1, 1, 1], vec![(0, 1, 0), (1, 2, 0)]);
+        let mut store = OdagStore::new();
+        for (i, e) in canonical_size3(&g).into_iter().enumerate() {
+            let pat = [&p1, &p2, &p3][i % 3];
+            store.add(pat, &e);
+        }
+        let want = ExtractionPlan::build(&store);
+        for threads in [1usize, 2, 3, 8] {
+            let (plan, critical, total) = ExtractionPlan::build_measured(&store, threads);
+            assert_eq!(plan, want, "threads={threads}");
+            assert!(critical <= total, "threads={threads}");
+        }
+        // Empty store: a plan with no patterns and no index space.
+        let (empty, _, _) = ExtractionPlan::build_measured(&OdagStore::new(), 4);
+        assert_eq!(empty.total(), 0);
     }
 
     #[test]

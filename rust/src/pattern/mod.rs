@@ -130,25 +130,19 @@ pub fn quick_pattern(g: &LabeledGraph, e: &Embedding, mode: Mode) -> Pattern {
     Pattern::new(vlabels, edges)
 }
 
-/// Incremental quick pattern: extend a parent's quick pattern by one
-/// word without rescanning the whole embedding — the engine computes
-/// the parent's quick pattern (and vertex list) once per parent and
-/// derives each child's in O(k).
-///
-/// `parent_vertices` must be the parent's vertices in visit order
-/// (`Embedding::vertices`); `word` is the new vertex id (vertex mode) or
-/// edge id (edge mode). Also returns the child's vertex list.
-pub fn quick_pattern_extend(
+/// Append the quick-pattern delta of one extension word to raw pattern
+/// parts. This is the shared kernel of [`quick_pattern_extend`] (one
+/// child off a parent) and [`QuickStack`] (a whole descent): it only
+/// ever *appends* to the three vectors, which is what lets the stack
+/// undo a push by truncation.
+fn quick_extend_parts(
     g: &LabeledGraph,
-    parent_quick: &Pattern,
-    parent_vertices: &[u32],
+    vlabels: &mut Vec<Label>,
+    edges: &mut Vec<(u8, u8, Label)>,
+    vertices: &mut Vec<u32>,
     word: u32,
     mode: Mode,
-) -> (Pattern, Vec<u32>) {
-    let mut vlabels = parent_quick.vlabels.clone();
-    let mut edges = parent_quick.edges.clone();
-    let mut vertices = Vec::with_capacity(parent_vertices.len() + 1);
-    vertices.extend_from_slice(parent_vertices);
+) {
     match mode {
         Mode::VertexInduced => {
             let new_pos = vertices.len() as u8;
@@ -172,12 +166,118 @@ pub fn quick_pattern_extend(
                     }
                 }
             };
-            let a = pos_of(ed.src, &mut vertices, &mut vlabels);
-            let b = pos_of(ed.dst, &mut vertices, &mut vlabels);
+            let a = pos_of(ed.src, &mut *vertices, &mut *vlabels);
+            let b = pos_of(ed.dst, &mut *vertices, &mut *vlabels);
             edges.push((a.min(b), a.max(b), ed.label));
         }
     }
+}
+
+/// Incremental quick pattern: extend a parent's quick pattern by one
+/// word without rescanning the whole embedding — the engine computes
+/// the parent's quick pattern (and vertex list) once per parent and
+/// derives each child's in O(k).
+///
+/// `parent_vertices` must be the parent's vertices in visit order
+/// (`Embedding::vertices`); `word` is the new vertex id (vertex mode) or
+/// edge id (edge mode). Also returns the child's vertex list.
+pub fn quick_pattern_extend(
+    g: &LabeledGraph,
+    parent_quick: &Pattern,
+    parent_vertices: &[u32],
+    word: u32,
+    mode: Mode,
+) -> (Pattern, Vec<u32>) {
+    let mut vlabels = parent_quick.vlabels.clone();
+    let mut edges = parent_quick.edges.clone();
+    let mut vertices = Vec::with_capacity(parent_vertices.len() + 1);
+    vertices.extend_from_slice(parent_vertices);
+    quick_extend_parts(g, &mut vlabels, &mut edges, &mut vertices, word, mode);
     (Pattern::new(vlabels, edges), vertices)
+}
+
+/// A pattern-carrying descent stack: the quick pattern of a growing
+/// word prefix, maintained incrementally with one [`QuickStack::push`]
+/// per descent step and one [`QuickStack::pop`] per backtrack.
+///
+/// The ODAG cursor carries one of these down the extraction descent, so
+/// a leaf embedding arrives at the filter/process pipeline with its
+/// quick pattern (and visit-order vertex list) already built — the
+/// per-parent O(k²) [`quick_pattern`] rescan the old extraction sites
+/// paid is gone, and in ODAG mode the carried pattern doubles as the
+/// spurious-sequence check input. Because an extension only ever
+/// *appends* to the label/edge/vertex vectors, a pop is three
+/// truncations — no per-frame clones.
+///
+/// Equivalence with [`quick_pattern`] recomputation is pinned by unit
+/// tests here and the cursor property suite
+/// (`prop_cursor_resume_equals_fresh_extraction`).
+#[derive(Debug, Clone, Default)]
+pub struct QuickStack {
+    vlabels: Vec<Label>,
+    edges: Vec<(u8, u8, Label)>,
+    vertices: Vec<u32>,
+    /// Pre-push lengths of (vlabels, edges, vertices), one per frame.
+    marks: Vec<(u32, u32, u32)>,
+}
+
+impl QuickStack {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of words pushed (the current prefix length).
+    pub fn depth(&self) -> usize {
+        self.marks.len()
+    }
+
+    /// Extend the carried pattern by one word (vertex id in vertex mode,
+    /// edge id in edge mode).
+    pub fn push(&mut self, g: &LabeledGraph, word: u32, mode: Mode) {
+        self.marks.push((
+            self.vlabels.len() as u32,
+            self.edges.len() as u32,
+            self.vertices.len() as u32,
+        ));
+        quick_extend_parts(
+            g,
+            &mut self.vlabels,
+            &mut self.edges,
+            &mut self.vertices,
+            word,
+            mode,
+        );
+    }
+
+    /// Undo the most recent push (backtrack one descent step).
+    pub fn pop(&mut self) {
+        let (vl, el, vt) = self.marks.pop().expect("pop on empty QuickStack");
+        self.vlabels.truncate(vl as usize);
+        self.edges.truncate(el as usize);
+        self.vertices.truncate(vt as usize);
+    }
+
+    /// Drop every frame (reset for a fresh descent; capacity persists).
+    pub fn clear(&mut self) {
+        self.vlabels.clear();
+        self.edges.clear();
+        self.vertices.clear();
+        self.marks.clear();
+    }
+
+    /// The prefix's vertices in visit order (`Embedding::vertices` of
+    /// the carried prefix).
+    pub fn vertices(&self) -> &[u32] {
+        &self.vertices
+    }
+
+    /// Materialize the carried quick pattern. Identical to
+    /// [`quick_pattern`] of the pushed word sequence: the parts are the
+    /// same appends [`quick_pattern_extend`] performs, and
+    /// [`Pattern::new`] normalizes edge order.
+    pub fn pattern(&self) -> Pattern {
+        Pattern::new(self.vlabels.clone(), self.edges.clone())
+    }
 }
 
 /// Quick pattern + canonization in one call: returns the canonical
@@ -274,6 +374,54 @@ mod tests {
                 frontier = next;
             }
         }
+    }
+
+    #[test]
+    fn quick_stack_push_pop_matches_rescan() {
+        // Descend a small exploration tree with one shared QuickStack,
+        // popping between siblings: at every node the carried pattern
+        // and vertex list must equal the from-scratch recomputation.
+        let g = crate::graph::gen::erdos_renyi(20, 60, 3, 2, 4);
+        for mode in [Mode::VertexInduced, Mode::EdgeInduced] {
+            let mut stack = QuickStack::new();
+            fn descend(
+                g: &LabeledGraph,
+                mode: Mode,
+                stack: &mut QuickStack,
+                prefix: &mut Vec<u32>,
+                depth_left: usize,
+            ) {
+                let e = Embedding::new(prefix.clone());
+                assert_eq!(stack.pattern(), quick_pattern(g, &e, mode), "{prefix:?}");
+                assert_eq!(stack.vertices(), e.vertices(g, mode), "{prefix:?}");
+                if depth_left == 0 {
+                    return;
+                }
+                for x in crate::embedding::extensions(g, &e, mode).into_iter().take(3) {
+                    if !crate::embedding::is_canonical_extension(g, mode, prefix, x) {
+                        continue;
+                    }
+                    stack.push(g, x, mode);
+                    prefix.push(x);
+                    descend(g, mode, stack, prefix, depth_left - 1);
+                    prefix.pop();
+                    stack.pop();
+                }
+            }
+            for w in crate::embedding::initial_candidates(&g, mode).into_iter().take(6) {
+                stack.push(&g, w, mode);
+                descend(&g, mode, &mut stack, &mut vec![w], 2);
+                stack.pop();
+            }
+            assert_eq!(stack.depth(), 0);
+            assert_eq!(stack.pattern(), Pattern::new(vec![], vec![]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "pop on empty QuickStack")]
+    fn quick_stack_underflow_panics() {
+        QuickStack::new().pop();
     }
 
     #[test]

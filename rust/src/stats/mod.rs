@@ -165,6 +165,18 @@ pub struct StepStats {
     /// Frontier index units covered by stolen chunks — how much of the
     /// step's extraction moved off its statically assigned worker.
     pub stolen_units: u64,
+    /// Full `quick_pattern` rescans paid at extraction (one per list-
+    /// mode parent). ODAG extraction carries quick patterns down the
+    /// descent (`pattern::QuickStack` inside `odag::Cursor`), so ODAG
+    /// steps keep this at **0** — pinned by
+    /// `odag_extraction_never_rescans_quick_patterns`.
+    pub pattern_rescans: u64,
+    /// Full root re-descents of the workers' ODAG cursors this step.
+    /// Consecutive/forward chunk claims resume the retained descent
+    /// stack, so this is bounded by the number of non-contiguous claim
+    /// runs (at most one per steal that jumps backward) — the old
+    /// engine paid one descent per *chunk*.
+    pub root_descents: u64,
     /// Serialized frontier size in bytes, as stored (ODAG or list).
     pub frontier_bytes: u64,
     /// What the frontier WOULD occupy as a plain embedding list

@@ -302,6 +302,10 @@ fn a_dry_worker_steals_every_chunk() {
     assert_eq!(out.stolen_units, 5);
     assert!(out.processed > 0, "stolen chunks were actually processed");
     assert_eq!(queues.remaining(0), 0, "the loaded queue was drained by the thief");
+    // List-mode extraction pays exactly one quick-pattern rescan per
+    // parent; there is no ODAG cursor to descend.
+    assert_eq!(out.pattern_rescans, 5);
+    assert_eq!(out.root_descents, 0);
 }
 
 #[test]

@@ -12,7 +12,7 @@ use arabesque::embedding::{self, Mode};
 use arabesque::engine::{tree_reduce, Cluster, Config, Partition, RunResult};
 use arabesque::graph::{gen, LabeledGraph};
 use arabesque::odag::{Odag, OdagStore};
-use arabesque::pattern::{canon, Pattern};
+use arabesque::pattern::{canon, quick_pattern, Pattern};
 use arabesque::util::codec::{Reader, Writer};
 use arabesque::util::rng::Rng;
 
@@ -309,6 +309,127 @@ fn prop_odag_roundtrip_and_partitions() {
         let mut whole_sorted = whole.clone();
         whole_sorted.sort();
         assert_eq!(parts, whole_sorted, "seed={seed} w={workers} b={block}");
+    }
+}
+
+/// Canonical length-3 word sequences of `g` under `mode`, by extension
+/// BFS (each canonical child is reached exactly once — paper Thm 4).
+fn canonical_triples(g: &LabeledGraph, mode: Mode) -> Vec<Vec<u32>> {
+    let mut frontier: Vec<Vec<u32>> =
+        embedding::initial_candidates(g, mode).into_iter().map(|w| vec![w]).collect();
+    for _ in 0..2 {
+        let mut next = Vec::new();
+        for parent in &frontier {
+            let e = embedding::Embedding::new(parent.clone());
+            for x in embedding::extensions(g, &e, mode) {
+                if embedding::is_canonical_extension(g, mode, parent, x) {
+                    let mut c = parent.clone();
+                    c.push(x);
+                    next.push(c);
+                }
+            }
+        }
+        frontier = next;
+    }
+    frontier
+}
+
+/// The tentpole equivalences of the pattern-carrying resumable cursor:
+/// cursor-resumed extraction ≡ fresh `enumerate_range` per chunk ≡
+/// whole `enumerate`, across modes × chunk splits × base offsets ×
+/// shuffled claim orders; every leaf's carried quick pattern and
+/// visit-order vertex list equal the from-scratch recomputation; and
+/// `root_descents` stays within the number of non-contiguous claim
+/// runs. (Engine-level, the carried patterns feed aggregation directly,
+/// so `prop_streaming_pipeline_matches_reference_semantics` — the
+/// odag × two-level × workers 1–9 matrix against a rescanning list
+/// reference — pins carried ≡ recomputed end-to-end as well.)
+#[test]
+fn prop_cursor_resume_equals_fresh_extraction() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(300 + seed);
+        let g = random_graph(&mut rng, 14, 12, 2);
+        for mode in [Mode::VertexInduced, Mode::EdgeInduced] {
+            let all = canonical_triples(&g, mode);
+            let stored: Vec<Vec<u32>> =
+                all.iter().filter(|_| rng.chance(0.7)).cloned().collect();
+            if stored.is_empty() {
+                continue;
+            }
+            let mut odag = Odag::new(3);
+            for e in &stored {
+                odag.add(e);
+            }
+            let costs = odag.costs();
+            let total = odag.total_paths();
+            let mut whole = Vec::new();
+            odag.enumerate(&g, mode, 0, 1, 16, |w| whole.push(w.to_vec()));
+            let base = rng.gen_range(1000);
+
+            // Sequential chunk splits through ONE resumed cursor.
+            for chunk in [1u64, 3, 8] {
+                let mut cur = odag.cursor(&g, mode, &costs, base);
+                let mut got = Vec::new();
+                let mut fresh = Vec::new();
+                let mut lo = base;
+                while lo < base + total {
+                    let hi = (lo + chunk).min(base + total);
+                    cur.seek(lo);
+                    while let Some(leaf) = cur.next(hi) {
+                        let e = embedding::Embedding::new(leaf.words.to_vec());
+                        assert_eq!(
+                            leaf.quick,
+                            quick_pattern(&g, &e, mode),
+                            "seed={seed} {mode:?}: carried != rescan"
+                        );
+                        assert_eq!(leaf.vertices, e.vertices(&g, mode), "seed={seed} {mode:?}");
+                        got.push(leaf.words.to_vec());
+                    }
+                    odag.enumerate_range(&g, mode, &costs, base, lo, hi, |w| {
+                        fresh.push(w.to_vec())
+                    });
+                    lo = hi;
+                }
+                assert_eq!(got, whole, "seed={seed} {mode:?} chunk={chunk}: cursor");
+                assert_eq!(fresh, whole, "seed={seed} {mode:?} chunk={chunk}: fresh");
+                assert_eq!(
+                    cur.root_descents, 1,
+                    "seed={seed} {mode:?} chunk={chunk}: contiguous split re-descended"
+                );
+            }
+
+            // Shuffled claim order (steals jump around): the union is
+            // exact and descents stay within the claim-run bound.
+            let chunk = 1 + rng.gen_range(5);
+            let mut claims: Vec<(u64, u64)> = Vec::new();
+            let mut lo = base;
+            while lo < base + total {
+                claims.push((lo, (lo + chunk).min(base + total)));
+                lo += chunk;
+            }
+            for i in (1..claims.len()).rev() {
+                let j = rng.gen_range((i + 1) as u64) as usize;
+                claims.swap(i, j);
+            }
+            let runs = 1 + claims.windows(2).filter(|w| w[1].0 != w[0].1).count() as u64;
+            let mut cur = odag.cursor(&g, mode, &costs, base);
+            let mut got = Vec::new();
+            for &(lo, hi) in &claims {
+                cur.seek(lo);
+                while let Some(leaf) = cur.next(hi) {
+                    got.push(leaf.words.to_vec());
+                }
+            }
+            got.sort();
+            let mut whole_sorted = whole.clone();
+            whole_sorted.sort();
+            assert_eq!(got, whole_sorted, "seed={seed} {mode:?}: shuffled claims");
+            assert!(
+                cur.root_descents <= runs,
+                "seed={seed} {mode:?}: descents {} > runs {runs}",
+                cur.root_descents
+            );
+        }
     }
 }
 
