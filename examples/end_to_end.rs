@@ -1,5 +1,6 @@
 //! End-to-end driver: proves all layers compose on a real small
-//! workload, per-paper-style reporting. Recorded in EXPERIMENTS.md.
+//! workload, per-paper-style reporting. The measurement surface and
+//! recorded trajectory live in rust/benches/README.md.
 //!
 //! Pipeline exercised:
 //!   1. generate the scaled dataset suite (synthetic stand-ins, Table 1);

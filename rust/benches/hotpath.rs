@@ -1,6 +1,6 @@
 //! Hot-path microbenchmarks (no criterion in the offline vendor set;
 //! plain loop timing with med-of-5 reporting). Drives the §Perf
-//! optimization loop in EXPERIMENTS.md.
+//! optimization loop documented in rust/benches/README.md.
 //!
 //! ```text
 //! cargo bench --bench hotpath             # full iteration counts

@@ -1,0 +1,423 @@
+//! A minimal hand-rolled Rust lexer for the in-tree linter.
+//!
+//! The linter's rules need exactly three things the raw text cannot
+//! give safely: (1) code tokens with line numbers, so `unwrap` inside a
+//! string or a comment never counts; (2) comment text per line, so
+//! justification comments (`ordering:`, `SAFETY`) and `lint:allow`
+//! escapes can be found; (3) enough structure (brace matching) to carve
+//! out `#[cfg(test)]` spans. It is *not* a parser — no AST, no macro
+//! expansion, no dependency (the crate stays zero-dependency, so `syn`
+//! was never on the table). Handles the token classes that appear in
+//! this repo: line/doc comments, nested block comments, string / raw
+//! string / char literals, lifetimes, numbers, identifiers, punctuation.
+
+/// Classified code token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (the lexer does not distinguish).
+    Ident,
+    /// Any literal: string, raw string, char, or number.
+    Lit,
+    /// Lifetime (`'a`). Kept separate so `'static` is not an ident.
+    Lifetime,
+    /// Single punctuation character.
+    Punct,
+}
+
+/// One code token with its 1-indexed source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// Lexed source: the code token stream plus per-line comment text.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// `comment[i]` holds all comment text that appears on line `i + 1`
+    /// (multi-line block comments contribute each spanned line).
+    pub comment: Vec<String>,
+    /// Lines that contain at least one code token.
+    pub code_lines: Vec<bool>,
+}
+
+impl Lexed {
+    /// Comment text on 1-indexed `line` (empty if none).
+    pub fn comment_on(&self, line: u32) -> &str {
+        self.comment.get(line as usize - 1).map_or("", String::as_str)
+    }
+
+    /// Whether 1-indexed `line` holds any code token.
+    pub fn has_code(&self, line: u32) -> bool {
+        self.code_lines.get(line as usize - 1).copied().unwrap_or(false)
+    }
+
+    /// True when `needle` occurs in the comments of `line` itself or in
+    /// the contiguous run of comment-only lines directly above it —
+    /// the adjacency rule used for `lint:allow`, `ordering:`, and
+    /// `SAFETY` justifications. The whole block counts so multi-line
+    /// rationales stay legal; a blank line severs it.
+    pub fn justified(&self, line: u32, needle: &str) -> bool {
+        if self.comment_on(line).contains(needle) {
+            return true;
+        }
+        let mut l = line.saturating_sub(1);
+        while l >= 1 && !self.has_code(l) {
+            let c = self.comment_on(l);
+            if c.is_empty() {
+                break; // blank line ends the comment block
+            }
+            if c.contains(needle) {
+                return true;
+            }
+            l -= 1;
+        }
+        false
+    }
+
+    /// True when `// lint:allow(rule)` appears on `line` or in the
+    /// contiguous comment block directly above it — same adjacency as
+    /// [`Lexed::justified`], so an allow and its multi-line rationale
+    /// form one block.
+    pub fn allowed_at(&self, line: u32, rule: &str) -> bool {
+        self.justified(line, &format!("lint:allow({rule})"))
+    }
+
+    fn push_comment(&mut self, line: u32, text: &str) {
+        let idx = line as usize - 1;
+        if self.comment.len() <= idx {
+            self.comment.resize(idx + 1, String::new());
+        }
+        let slot = &mut self.comment[idx];
+        if !slot.is_empty() {
+            slot.push(' ');
+        }
+        slot.push_str(text);
+    }
+
+    fn push_tok(&mut self, kind: TokKind, text: String, line: u32) {
+        let idx = line as usize - 1;
+        if self.code_lines.len() <= idx {
+            self.code_lines.resize(idx + 1, false);
+        }
+        self.code_lines[idx] = true;
+        self.toks.push(Tok { kind, text, line });
+    }
+}
+
+/// Lex `src`. Unterminated constructs (possible in fixtures, not in
+/// compiling code) close at end of input rather than erroring — for a
+/// linter, degrading gracefully beats refusing the file.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = b.len();
+
+    while i < n {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                // Line comment (also doc `///` and `//!`).
+                let start = i;
+                while i < n && b[i] != '\n' {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                out.push_comment(line, &text);
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                // Block comment, nesting per Rust rules. Attribute each
+                // spanned line its own chunk of the text.
+                let mut depth = 1usize;
+                i += 2;
+                let mut chunk = String::from("/*");
+                while i < n && depth > 0 {
+                    if b[i] == '\n' {
+                        out.push_comment(line, &chunk);
+                        chunk.clear();
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                        depth += 1;
+                        chunk.push_str("/*");
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                        depth -= 1;
+                        chunk.push_str("*/");
+                        i += 2;
+                    } else {
+                        chunk.push(b[i]);
+                        i += 1;
+                    }
+                }
+                if !chunk.is_empty() {
+                    out.push_comment(line, &chunk);
+                }
+            }
+            '"' => {
+                let (text, nl) = scan_string(&b, &mut i);
+                out.push_tok(TokKind::Lit, text, line);
+                line += nl;
+            }
+            'r' if starts_raw_string(&b, i) => {
+                let (text, nl) = scan_raw_string(&b, &mut i);
+                out.push_tok(TokKind::Lit, text, line);
+                line += nl;
+            }
+            '\'' => {
+                // Lifetime (`'a`, `'static`) vs char literal (`'x'`,
+                // `'\n'`): a lifetime is `'` + ident NOT followed by a
+                // closing quote.
+                if i + 1 < n && (b[i + 1].is_alphabetic() || b[i + 1] == '_') {
+                    let mut j = i + 1;
+                    while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                        j += 1;
+                    }
+                    if j < n && b[j] == '\'' {
+                        // Char literal like 'x'.
+                        let text: String = b[i..=j].iter().collect();
+                        out.push_tok(TokKind::Lit, text, line);
+                        i = j + 1;
+                    } else {
+                        let text: String = b[i..j].iter().collect();
+                        out.push_tok(TokKind::Lifetime, text, line);
+                        i = j;
+                    }
+                } else {
+                    // Escaped or punctuation char literal: scan to the
+                    // closing quote, honoring backslash escapes.
+                    let start = i;
+                    i += 1;
+                    while i < n && b[i] != '\'' {
+                        i += if b[i] == '\\' { 2 } else { 1 };
+                    }
+                    i = (i + 1).min(n);
+                    let text: String = b[start..i.min(n)].iter().collect();
+                    out.push_tok(TokKind::Lit, text, line);
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                out.push_tok(TokKind::Ident, text, line);
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_' || b[i] == '.') {
+                    // A dot continues the number only before another
+                    // digit: `1.5` yes; `0..10` and `self.0.get()` no.
+                    if b[i] == '.' && !(i + 1 < n && b[i + 1].is_ascii_digit()) {
+                        break;
+                    }
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                out.push_tok(TokKind::Lit, text, line);
+            }
+            c => {
+                out.push_tok(TokKind::Punct, c.to_string(), line);
+                i += 1;
+            }
+        }
+    }
+    // Pad the per-line tables to the full line count.
+    let total = line as usize;
+    if out.comment.len() < total {
+        out.comment.resize(total, String::new());
+    }
+    if out.code_lines.len() < total {
+        out.code_lines.resize(total, false);
+    }
+    out
+}
+
+/// Is `r`, `r#`, `r##`… at `i` the start of a raw string literal?
+fn starts_raw_string(b: &[char], i: usize) -> bool {
+    let mut j = i + 1;
+    while j < b.len() && b[j] == '#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == '"' && (j > i + 1 || b[i + 1] == '"')
+}
+
+/// Scan a normal string literal starting at `*i` (on the opening
+/// quote); returns (text, newlines spanned) and leaves `*i` past the
+/// closing quote.
+fn scan_string(b: &[char], i: &mut usize) -> (String, u32) {
+    let start = *i;
+    let mut nl = 0u32;
+    *i += 1;
+    while *i < b.len() {
+        match b[*i] {
+            '\\' => *i += 2,
+            '"' => {
+                *i += 1;
+                break;
+            }
+            c => {
+                if c == '\n' {
+                    nl += 1;
+                }
+                *i += 1;
+            }
+        }
+    }
+    (b[start..(*i).min(b.len())].iter().collect(), nl)
+}
+
+/// Scan `r"…"` / `r#"…"#` with any number of hashes.
+fn scan_raw_string(b: &[char], i: &mut usize) -> (String, u32) {
+    let start = *i;
+    let mut nl = 0u32;
+    *i += 1; // past 'r'
+    let mut hashes = 0usize;
+    while *i < b.len() && b[*i] == '#' {
+        hashes += 1;
+        *i += 1;
+    }
+    *i += 1; // past opening quote
+    while *i < b.len() {
+        if b[*i] == '\n' {
+            nl += 1;
+            *i += 1;
+            continue;
+        }
+        if b[*i] == '"' {
+            let mut j = *i + 1;
+            let mut seen = 0usize;
+            while j < b.len() && b[j] == '#' && seen < hashes {
+                seen += 1;
+                j += 1;
+            }
+            if seen == hashes {
+                *i = j;
+                break;
+            }
+        }
+        *i += 1;
+    }
+    (b[start..(*i).min(b.len())].iter().collect(), nl)
+}
+
+/// 1-indexed line spans `[start, end]` of items gated by
+/// `#[cfg(test)]` — the attribute plus the braced item that follows.
+/// Used to exempt unit-test modules from library-code rules.
+pub fn cfg_test_spans(lx: &Lexed) -> Vec<(u32, u32)> {
+    let t = &lx.toks;
+    let mut spans = Vec::new();
+    let mut k = 0usize;
+    while k + 5 < t.len() {
+        let is_cfg_test = t[k].text == "#"
+            && t[k + 1].text == "["
+            && t[k + 2].text == "cfg"
+            && t[k + 3].text == "("
+            && t[k + 4].text == "test"
+            && t[k + 5].text == ")";
+        if !is_cfg_test {
+            k += 1;
+            continue;
+        }
+        let start = t[k].line;
+        // Find the gated item's opening brace (or `;` for an
+        // extern/struct-like item without a body).
+        let mut j = k + 6;
+        while j < t.len() && t[j].text != "{" && t[j].text != ";" {
+            j += 1;
+        }
+        if j >= t.len() || t[j].text == ";" {
+            spans.push((start, t.get(j).map_or(start, |x| x.line)));
+            k = j;
+            continue;
+        }
+        let mut depth = 0i64;
+        while j < t.len() {
+            match t[j].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        spans.push((start, t.get(j).map_or(start, |x| x.line)));
+        k = j + 1;
+    }
+    spans
+}
+
+/// Is 1-indexed `line` inside any of `spans`?
+pub fn in_spans(spans: &[(u32, u32)], line: u32) -> bool {
+    spans.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_do_not_leak_tokens() {
+        let lx = lex("let x = \"unwrap() // not code\"; // real comment\nfoo();\n");
+        assert!(lx.toks.iter().all(|t| t.text != "unwrap"));
+        assert!(lx.comment_on(1).contains("real comment"));
+        assert!(!lx.comment_on(1).contains("not code"));
+        assert_eq!(lx.toks.iter().filter(|t| t.text == "foo").count(), 1);
+    }
+
+    #[test]
+    fn raw_strings_and_chars_and_lifetimes() {
+        let lx = lex("let s = r#\"x \"q\" y\"#; let c = '\\n'; fn f<'a>(v: &'a str) {}\n");
+        assert_eq!(lx.toks.iter().filter(|t| t.kind == TokKind::Lifetime).count(), 2);
+        assert!(lx.toks.iter().any(|t| t.kind == TokKind::Lit && t.text.starts_with("r#")));
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let lx = lex("/* a /* nested */ still\ncomment */ code();\n");
+        assert!(lx.comment_on(1).contains("nested"));
+        assert!(lx.comment_on(2).contains("comment"));
+        assert!(lx.has_code(2));
+        assert!(!lx.has_code(1));
+    }
+
+    #[test]
+    fn cfg_test_span_covers_module() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn more() {}\n";
+        let lx = lex(src);
+        let spans = cfg_test_spans(&lx);
+        assert_eq!(spans, vec![(2, 5)]);
+        assert!(in_spans(&spans, 4));
+        assert!(!in_spans(&spans, 6));
+    }
+
+    #[test]
+    fn justified_walks_contiguous_comment_block() {
+        let src = "// ordering: Relaxed is fine here\n// because of reasons spanning\n// several lines\nload(Ordering::Relaxed);\n\n// unrelated\n\nstore(Ordering::SeqCst);\n";
+        let lx = lex(src);
+        assert!(lx.justified(4, "ordering:"));
+        assert!(!lx.justified(8, "ordering:"), "blank line breaks the block");
+    }
+
+    #[test]
+    fn allow_marker_blocked_by_blank_line() {
+        let src = "// lint:allow(no-unwrap) — fine, with\n// a wrapped rationale\nx.unwrap();\n\n// lint:allow(no-unwrap)\n\ny.unwrap();\n";
+        let lx = lex(src);
+        assert!(lx.allowed_at(3, "no-unwrap"), "marker may sit higher in the block");
+        assert!(!lx.allowed_at(7, "no-unwrap"), "blank line severs the block");
+    }
+}

@@ -1,0 +1,201 @@
+//! In-tree static analysis: the repo's invariant linter.
+//!
+//! Arabesque's correctness argument rests on invariants the compiler
+//! cannot see: every per-worker counter is merged at the barrier,
+//! concurrency primitives stay in the few modules whose protocols are
+//! model-checked (`engine::steal_model`) or audited, library code never
+//! panics through `unwrap`, and prose references track file renames.
+//! This module enforces them as named, allowlist-able rules over a
+//! hand-rolled lexer ([`lexer`]) — zero dependencies, no `syn`.
+//!
+//! Run as `cargo run --release --bin lint` (blocking in CI), or from
+//! tests via [`lint_repo`] / [`lint_rust_source`]. Suppress a finding
+//! at its site with `// lint:allow(<rule-id>)` on the same line or in
+//! the comment block directly above; the rule catalog lives in
+//! [`rules`] and in ARCHITECTURE.md's "Static analysis & model
+//! checking" section.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub use rules::{Finding, MergeSpec, ATOMICS_ALLOWLIST, MERGE_SPECS};
+
+/// Root-level Markdown files that are append-only logs or external
+/// references — their historical mentions of since-renamed docs are
+/// records, not links, so `doc-refs` skips them.
+const DOC_REFS_SKIP_MD: &[&str] = &["CHANGES.md", "ISSUE.md", "SNIPPETS.md", "PAPERS.md"];
+
+/// Directories never scanned.
+const SKIP_DIRS: &[&str] = &[".git", "target", "lint_fixtures", "__pycache__", ".claude"];
+
+/// All rules applicable to one Rust library source string. `rel` is the
+/// path reported in findings and matched against scope allowlists;
+/// `root` anchors `doc-refs` existence checks. This is the entry point
+/// the fixture tests drive directly.
+pub fn lint_rust_source(root: &Path, rel: &str, src: &str) -> Vec<Finding> {
+    let lx = lexer::lex(src);
+    let mut out = Vec::new();
+    out.extend(rules::no_unwrap(rel, &lx));
+    out.extend(rules::atomics_scope(rel, &lx));
+    out.extend(rules::ordering_comment(rel, &lx));
+    out.extend(rules::unsafe_comment(rel, &lx));
+    out.extend(doc_refs_in_comments(root, rel, &lx));
+    out
+}
+
+/// `doc-refs` over the comment stream of lexed Rust source.
+pub fn doc_refs_in_comments(root: &Path, rel: &str, lx: &lexer::Lexed) -> Vec<Finding> {
+    let lines = lx
+        .comment
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| !c.is_empty())
+        .map(|(i, c)| (i as u32 + 1, c.as_str()));
+    rules::doc_refs(root, rel, lines, &|line| lx.allowed_at(line, "doc-refs"))
+}
+
+/// `doc-refs` over a raw text file (Markdown, Python): every line is
+/// prose as far as this rule is concerned.
+pub fn doc_refs_in_text(root: &Path, rel: &str, src: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = src.lines().collect();
+    let allow = |line: u32| {
+        let at = |l: u32| {
+            l >= 1
+                && lines
+                    .get(l as usize - 1)
+                    .is_some_and(|t| t.contains("lint:allow(doc-refs)"))
+        };
+        at(line) || at(line.saturating_sub(1))
+    };
+    rules::doc_refs(
+        root,
+        rel,
+        lines.iter().enumerate().map(|(i, t)| (i as u32 + 1, *t)),
+        &allow,
+    )
+}
+
+/// Scan the whole repository rooted at `root`. Scope:
+///
+/// * `rust/src/**/*.rs` — all rules;
+/// * other `.rs` (tests, benches, examples) — `doc-refs` only
+///   (tests/benches are exempt from the code rules by design);
+/// * `**/*.md` (minus the append-only logs) and `python/**/*.py` —
+///   `doc-refs`;
+/// * the [`MERGE_SPECS`] bindings — `merge-coverage`.
+///
+/// Findings come back sorted by file then line. `Err` is an I/O-level
+/// failure (unreadable tree), not a lint result.
+pub fn lint_repo(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    walk(root, root, &mut files)?;
+    files.sort();
+
+    let mut out = Vec::new();
+    for rel in &files {
+        let rel_s = rel.to_string_lossy().replace('\\', "/");
+        let path = root.join(rel);
+        let Some(ext) = rel.extension().and_then(|e| e.to_str()) else {
+            continue;
+        };
+        match ext {
+            "rs" => {
+                let src = read(&path)?;
+                if rel_s.starts_with("rust/src/") {
+                    out.extend(lint_rust_source(root, &rel_s, &src));
+                } else {
+                    let lx = lexer::lex(&src);
+                    out.extend(doc_refs_in_comments(root, &rel_s, &lx));
+                }
+            }
+            "md" => {
+                if !DOC_REFS_SKIP_MD.iter().any(|s| rel_s == *s) {
+                    let src = read(&path)?;
+                    out.extend(doc_refs_in_text(root, &rel_s, &src));
+                }
+            }
+            "py" => {
+                let src = read(&path)?;
+                out.extend(doc_refs_in_text(root, &rel_s, &src));
+            }
+            _ => {}
+        }
+    }
+
+    for spec in MERGE_SPECS {
+        let def = lexer::lex(&read(&root.join(spec.def_file))?);
+        let acc = lexer::lex(&read(&root.join(spec.acc_file))?);
+        out.extend(rules::merge_coverage(spec, &def, &acc));
+    }
+
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(out)
+}
+
+fn read(path: &Path) -> Result<String, String> {
+    fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))
+}
+
+/// Collect scannable files under `dir` as paths relative to `root`.
+fn walk(root: &Path, dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("readdir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("readdir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if SKIP_DIRS.iter().any(|s| name == *s) {
+                continue;
+            }
+            walk(root, &path, out)?;
+        } else if matches!(
+            path.extension().and_then(|e| e.to_str()),
+            Some("rs") | Some("md") | Some("py")
+        ) {
+            if let Ok(rel) = path.strip_prefix(root) {
+                out.push(rel.to_path_buf());
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The repo must lint clean — the same invariant CI enforces via
+    /// the `lint` binary, pinned here so `cargo test` alone catches it.
+    #[test]
+    fn repository_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = lint_repo(root).expect("repo must be readable");
+        assert!(
+            findings.is_empty(),
+            "lint violations:\n{}",
+            findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+        );
+    }
+
+    #[test]
+    fn merge_specs_resolve() {
+        // Every spec's struct and fn must still exist — a rename that
+        // silently empties a spec would turn merge-coverage into a
+        // no-op. (The spec-out-of-date findings assert the inverse.)
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        for spec in MERGE_SPECS {
+            let def = lexer::lex(&read(&root.join(spec.def_file)).expect("def file"));
+            let acc = lexer::lex(&read(&root.join(spec.acc_file)).expect("acc file"));
+            let findings = rules::merge_coverage(spec, &def, &acc);
+            assert!(
+                findings.iter().all(|f| !f.msg.contains("spec out of date")),
+                "{}: {findings:?}",
+                spec.strukt
+            );
+        }
+    }
+}

@@ -1,0 +1,480 @@
+//! The linter's rule catalog. Each rule has a machine-readable id,
+//! reports `file:line`, and is suppressible at the site with
+//! `// lint:allow(<rule-id>)` on the same line or in the comment block
+//! directly above.
+//!
+//! | id                 | invariant                                              |
+//! |--------------------|--------------------------------------------------------|
+//! | `merge-coverage`   | every field of the stats structs appears in its merge  |
+//! | `atomics-scope`    | `unsafe`/`AtomicU64`/`Ordering::*` only in allowlisted |
+//! |                    | modules                                                |
+//! | `ordering-comment` | every `Ordering::*` use carries an `ordering:` comment |
+//! | `unsafe-comment`   | every `unsafe` carries a `SAFETY` comment              |
+//! | `no-unwrap`        | no `unwrap()`/`expect()` in library code               |
+//! | `doc-refs`         | `.md` references in comments/docs must exist           |
+//!
+//! Rules operate on [`lexer::Lexed`] token streams, never raw text, so
+//! occurrences inside strings or comments don't count (and `.md`
+//! references inside *comments* do — that's where they live).
+
+use std::path::Path;
+
+use super::lexer::{cfg_test_spans, in_spans, lex, Lexed, TokKind};
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Machine-readable rule id (`no-unwrap`, `atomics-scope`, …).
+    pub rule: &'static str,
+    /// Path as scanned (repo-relative in the repo run).
+    pub file: String,
+    /// 1-indexed line.
+    pub line: u32,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Modules allowed to touch `unsafe` / `AtomicU64` / `Ordering`:
+/// the steal ledger and its model checker, the stats clock syscall,
+/// and the output sinks' counters. Matched as path suffixes.
+pub const ATOMICS_ALLOWLIST: &[&str] = &[
+    "engine/steal.rs",
+    "engine/steal_model.rs",
+    "stats/mod.rs",
+    "output/mod.rs",
+];
+
+/// `no-unwrap`: no `.unwrap()` / `.expect(` in library code. Unit-test
+/// modules (`#[cfg(test)]` spans) are exempt; integration tests and
+/// benches are exempt by not being scanned with this rule at all.
+pub fn no_unwrap(file: &str, lx: &Lexed) -> Vec<Finding> {
+    let spans = cfg_test_spans(lx);
+    let t = &lx.toks;
+    let mut out = Vec::new();
+    for k in 1..t.len() {
+        if t[k].kind != TokKind::Ident || (t[k].text != "unwrap" && t[k].text != "expect") {
+            continue;
+        }
+        // Method call: preceded by `.`, followed by `(`.
+        let called = t[k - 1].text == "." && t.get(k + 1).is_some_and(|n| n.text == "(");
+        if !called || in_spans(&spans, t[k].line) || lx.allowed_at(t[k].line, "no-unwrap") {
+            continue;
+        }
+        out.push(Finding {
+            rule: "no-unwrap",
+            file: file.to_string(),
+            line: t[k].line,
+            msg: format!(
+                "`.{}()` in library code — return an error, make the invariant \
+                 impossible, or justify with lint:allow",
+                t[k].text
+            ),
+        });
+    }
+    out
+}
+
+/// `atomics-scope`: `unsafe`, `AtomicU64`, and `Ordering::*` only in
+/// allowlisted modules — concurrency primitives stay where the model
+/// checker and the audit comments can see them.
+pub fn atomics_scope(file: &str, lx: &Lexed) -> Vec<Finding> {
+    if ATOMICS_ALLOWLIST.iter().any(|m| file.ends_with(m)) {
+        return Vec::new();
+    }
+    let t = &lx.toks;
+    let mut out = Vec::new();
+    for k in 0..t.len() {
+        if t[k].kind != TokKind::Ident {
+            continue;
+        }
+        let hit = match t[k].text.as_str() {
+            "unsafe" | "AtomicU64" => true,
+            // Bare `Ordering` is also the Iterator/cmp type; only the
+            // path form `Ordering::…` is the atomics API.
+            "Ordering" => {
+                t.get(k + 1).map(|a| a.text == ":").unwrap_or(false)
+                    && t.get(k + 2).map(|a| a.text == ":").unwrap_or(false)
+                    && t.get(k + 3)
+                        .map(|a| {
+                            matches!(
+                                a.text.as_str(),
+                                "Relaxed" | "Acquire" | "Release" | "AcqRel" | "SeqCst"
+                            )
+                        })
+                        .unwrap_or(false)
+            }
+            _ => false,
+        };
+        if hit && !lx.allowed_at(t[k].line, "atomics-scope") {
+            out.push(Finding {
+                rule: "atomics-scope",
+                file: file.to_string(),
+                line: t[k].line,
+                msg: format!(
+                    "`{}` outside the allowlisted concurrency modules ({})",
+                    t[k].text,
+                    ATOMICS_ALLOWLIST.join(", ")
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// `ordering-comment`: every atomic-`Ordering` use site must carry an
+/// `ordering:` justification in the contiguous comment block above it
+/// (or on the line). The audit that satisfied this rule lives in
+/// `engine/steal.rs`'s `Cursor` impl and `output`'s counters.
+pub fn ordering_comment(file: &str, lx: &Lexed) -> Vec<Finding> {
+    let t = &lx.toks;
+    let mut out = Vec::new();
+    let mut last_line = 0u32; // one finding per line, not per operand
+    for k in 0..t.len() {
+        // Only the atomic memory orderings — `cmp::Ordering::Less` and
+        // friends are not in scope for this rule.
+        let is_use = t[k].text == "Ordering"
+            && t.get(k + 1).map(|a| a.text == ":").unwrap_or(false)
+            && t.get(k + 2).map(|a| a.text == ":").unwrap_or(false)
+            && t.get(k + 3)
+                .map(|a| {
+                    matches!(
+                        a.text.as_str(),
+                        "Relaxed" | "Acquire" | "Release" | "AcqRel" | "SeqCst"
+                    )
+                })
+                .unwrap_or(false);
+        if !is_use || t[k].line == last_line {
+            continue;
+        }
+        last_line = t[k].line;
+        if lx.justified(t[k].line, "ordering:") || lx.allowed_at(t[k].line, "ordering-comment") {
+            continue;
+        }
+        out.push(Finding {
+            rule: "ordering-comment",
+            file: file.to_string(),
+            line: t[k].line,
+            msg: "atomic op without an `ordering:` justification comment".to_string(),
+        });
+    }
+    out
+}
+
+/// `unsafe-comment`: every `unsafe` must carry a `SAFETY` comment in
+/// the contiguous comment block above it (or on the line).
+pub fn unsafe_comment(file: &str, lx: &Lexed) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for t in &lx.toks {
+        if t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        if lx.justified(t.line, "SAFETY") || lx.allowed_at(t.line, "unsafe-comment") {
+            continue;
+        }
+        out.push(Finding {
+            rule: "unsafe-comment",
+            file: file.to_string(),
+            line: t.line,
+            msg: "`unsafe` without a `SAFETY` comment".to_string(),
+        });
+    }
+    out
+}
+
+/// `doc-refs`: a `.md` mention in comments or docs must point at a
+/// file that exists (relative to the repo root or to the referencing
+/// file's directory). This is the recurring renamed-design-doc failure
+/// class: docs get renamed, prose keeps pointing at the old name.
+///
+/// `lines` is any per-line text stream: comment lines of lexed Rust,
+/// or raw lines of Markdown/Python files.
+pub fn doc_refs<'a>(
+    root: &Path,
+    file: &str,
+    lines: impl Iterator<Item = (u32, &'a str)>,
+    allow: &dyn Fn(u32) -> bool,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let self_dir = Path::new(file).parent().map(Path::to_path_buf).unwrap_or_default();
+    for (lineno, text) in lines {
+        for word in md_refs(text) {
+            let at_root = root.join(&word).is_file();
+            let at_self = root.join(&self_dir).join(&word).is_file();
+            if at_root || at_self || allow(lineno) {
+                continue;
+            }
+            out.push(Finding {
+                rule: "doc-refs",
+                file: file.to_string(),
+                line: lineno,
+                msg: format!("dangling doc reference `{word}` (no such file)"),
+            });
+        }
+    }
+    out
+}
+
+/// Extract `.md`-path-shaped words from a text line, skipping URLs.
+/// `:` counts as a word character so `https://…` stays one word and can
+/// be recognized (and skipped) by its `://`.
+fn md_refs(text: &str) -> Vec<String> {
+    let chars: Vec<char> = text.chars().collect();
+    let is_word = |c: char| c.is_alphanumeric() || matches!(c, '_' | '/' | '.' | '-' | ':');
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < chars.len() {
+        if !is_word(chars[i]) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < chars.len() && is_word(chars[i]) {
+            i += 1;
+        }
+        let word: String = chars[start..i].iter().collect();
+        if word.contains("://") {
+            continue; // URL
+        }
+        let word = word.trim_matches(|c| matches!(c, '.' | '-' | '/' | ':')).to_string();
+        if word.ends_with(".md") && word.len() > 3 {
+            out.push(word);
+        }
+    }
+    out
+}
+
+/// Binding between a struct definition and the function that must
+/// touch every one of its fields (its merge / accumulate path).
+#[derive(Debug, Clone, Copy)]
+pub struct MergeSpec {
+    /// Struct whose fields are checked.
+    pub strukt: &'static str,
+    /// Repo-relative file defining the struct.
+    pub def_file: &'static str,
+    /// `impl` owner the accumulate fn lives in (disambiguates multiple
+    /// `fn merge` in one file).
+    pub impl_owner: &'static str,
+    /// Function that must mention every field.
+    pub fn_name: &'static str,
+    /// Repo-relative file holding that impl.
+    pub acc_file: &'static str,
+}
+
+/// The repo's merge-coverage bindings: the three engine accounting
+/// structs all funnel through `Cluster::run_with_sink` (workers fold
+/// into `StepStats`, steps fold into `RunResult`), and the two stats
+/// structs have their own `merge`.
+pub const MERGE_SPECS: &[MergeSpec] = &[
+    MergeSpec {
+        strukt: "StepStats",
+        def_file: "rust/src/stats/mod.rs",
+        impl_owner: "Cluster",
+        fn_name: "run_with_sink",
+        acc_file: "rust/src/engine/mod.rs",
+    },
+    MergeSpec {
+        strukt: "WorkerOut",
+        def_file: "rust/src/engine/worker.rs",
+        impl_owner: "Cluster",
+        fn_name: "run_with_sink",
+        acc_file: "rust/src/engine/mod.rs",
+    },
+    MergeSpec {
+        strukt: "RunResult",
+        def_file: "rust/src/engine/mod.rs",
+        impl_owner: "Cluster",
+        fn_name: "run_with_sink",
+        acc_file: "rust/src/engine/mod.rs",
+    },
+    MergeSpec {
+        strukt: "PhaseTimes",
+        def_file: "rust/src/stats/mod.rs",
+        impl_owner: "PhaseTimes",
+        fn_name: "merge",
+        acc_file: "rust/src/stats/mod.rs",
+    },
+    MergeSpec {
+        strukt: "CommStats",
+        def_file: "rust/src/stats/mod.rs",
+        impl_owner: "CommStats",
+        fn_name: "merge",
+        acc_file: "rust/src/stats/mod.rs",
+    },
+];
+
+/// `merge-coverage`: every field of `spec.strukt` must appear (as an
+/// identifier) inside `spec.fn_name`'s body. A field that is tracked
+/// per worker but silently dropped at the barrier is exactly the bug
+/// class this catches — it cannot be seen by the compiler, and tests
+/// only catch it for fields they assert on.
+pub fn merge_coverage(spec: &MergeSpec, def: &Lexed, acc: &Lexed) -> Vec<Finding> {
+    let fields = struct_fields(def, spec.strukt);
+    let body: std::collections::HashSet<&str> =
+        fn_body_idents(acc, spec.impl_owner, spec.fn_name).collect();
+    let mut out = Vec::new();
+    if fields.is_empty() {
+        out.push(Finding {
+            rule: "merge-coverage",
+            file: spec.def_file.to_string(),
+            line: 1,
+            msg: format!("struct `{}` not found (spec out of date?)", spec.strukt),
+        });
+        return out;
+    }
+    if body.is_empty() {
+        out.push(Finding {
+            rule: "merge-coverage",
+            file: spec.acc_file.to_string(),
+            line: 1,
+            msg: format!(
+                "fn `{}::{}` not found (spec out of date?)",
+                spec.impl_owner, spec.fn_name
+            ),
+        });
+        return out;
+    }
+    for (name, line) in fields {
+        if body.contains(name.as_str()) || def.allowed_at(line, "merge-coverage") {
+            continue;
+        }
+        out.push(Finding {
+            rule: "merge-coverage",
+            file: spec.def_file.to_string(),
+            line,
+            msg: format!(
+                "field `{}.{}` never appears in `{}::{}` — merged nowhere?",
+                spec.strukt, name, spec.impl_owner, spec.fn_name
+            ),
+        });
+    }
+    out
+}
+
+/// Field names and definition lines of `struct name { … }`.
+fn struct_fields(lx: &Lexed, name: &str) -> Vec<(String, u32)> {
+    let t = &lx.toks;
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k + 1 < t.len() {
+        if t[k].text != "struct" || t[k + 1].text != name {
+            k += 1;
+            continue;
+        }
+        // Skip to the opening brace (tolerating generics), then walk
+        // fields at depth 1: `ident :` directly before a type.
+        let mut j = k + 2;
+        while j < t.len() && t[j].text != "{" && t[j].text != ";" {
+            j += 1;
+        }
+        if j >= t.len() || t[j].text == ";" {
+            return out; // unit/tuple struct: nothing to check
+        }
+        let mut depth = 0i64;
+        while j < t.len() {
+            match t[j].text.as_str() {
+                // `->` in a fn-pointer field type is not a closing angle.
+                ">" if j >= 1 && t[j - 1].text == "-" => {}
+                "{" | "(" | "[" | "<" => depth += 1,
+                "}" | ")" | "]" | ">" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return out;
+                    }
+                }
+                ":" if depth == 1 => {
+                    // `ident :` at depth 1, not `::`.
+                    let double = t.get(j + 1).map(|a| a.text == ":").unwrap_or(false)
+                        || j >= 1 && t[j - 1].text == ":";
+                    if !double && j >= 1 && t[j - 1].kind == TokKind::Ident {
+                        out.push((t[j - 1].text.clone(), t[j - 1].line));
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        return out;
+    }
+    out
+}
+
+/// Identifier tokens inside `fn name`'s body within `impl owner`.
+fn fn_body_idents<'a>(
+    lx: &'a Lexed,
+    owner: &str,
+    name: &str,
+) -> impl Iterator<Item = &'a str> + 'a {
+    let t = &lx.toks;
+    let mut range = 0usize..0usize;
+    // Locate `impl <owner>` (the owner ident within 4 tokens of `impl`,
+    // tolerating generic params like `impl<C: Cursor> Foo<C>`).
+    let mut k = 0usize;
+    'outer: while k < t.len() {
+        if t[k].text == "impl" && (k + 1..t.len().min(k + 8)).any(|j| t[j].text == owner) {
+            // Impl body span.
+            let mut j = k + 1;
+            while j < t.len() && t[j].text != "{" {
+                j += 1;
+            }
+            let impl_start = j;
+            let mut depth = 0i64;
+            let mut impl_end = t.len();
+            while j < t.len() {
+                match t[j].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            impl_end = j;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            // `fn name` inside the impl body.
+            let mut f = impl_start;
+            while f + 1 < impl_end {
+                if t[f].text == "fn" && t[f + 1].text == name {
+                    let mut g = f + 2;
+                    while g < impl_end && t[g].text != "{" {
+                        g += 1;
+                    }
+                    let body_start = g;
+                    let mut d = 0i64;
+                    while g < impl_end {
+                        match t[g].text.as_str() {
+                            "{" => d += 1,
+                            "}" => {
+                                d -= 1;
+                                if d == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        g += 1;
+                    }
+                    range = body_start..g.min(t.len());
+                    break 'outer;
+                }
+                f += 1;
+            }
+            k = impl_end;
+        }
+        k += 1;
+    }
+    t[range].iter().filter(|x| x.kind == TokKind::Ident).map(|x| x.text.as_str())
+}
+
+/// Lex a Rust source string. Thin re-export so rule callers (driver,
+/// tests) need only this module.
+pub fn lex_source(src: &str) -> Lexed {
+    lex(src)
+}

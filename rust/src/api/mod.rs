@@ -145,6 +145,8 @@ impl Ctx<'_> {
     /// Quick pattern of the embedding currently being processed
     /// (engine-provided during `process`/`aggregation_*` calls).
     pub fn quick(&self) -> &Pattern {
+        // lint:allow(no-unwrap) — API contract: only callable inside the
+        // engine-driven process/aggregation callbacks, which set it.
         self.current_quick.as_ref().expect("no current embedding")
     }
 
@@ -165,12 +167,14 @@ impl Ctx<'_> {
     /// `map(pattern(e), value)` for the embedding currently being
     /// processed — avoids cloning the quick pattern per embedding.
     pub fn map_current(&mut self, val: AggVal) {
+        // lint:allow(no-unwrap) — engine-provided during callbacks (see quick).
         let q = self.current_quick.as_ref().expect("no current embedding");
         self.pattern_agg.map_ref(q, val);
     }
 
     /// `mapOutput(pattern(e), value)` for the current embedding.
     pub fn map_output_current(&mut self, val: AggVal) {
+        // lint:allow(no-unwrap) — engine-provided during callbacks (see quick).
         let q = self.current_quick.as_ref().expect("no current embedding");
         self.output_agg.map_ref(q, val);
     }
@@ -178,6 +182,7 @@ impl Ctx<'_> {
     /// FSM fast path: feed the current embedding's vertex domains into
     /// pattern aggregation without per-embedding allocation.
     pub fn map_domain_current(&mut self, vertices: &[crate::graph::VertexId]) {
+        // lint:allow(no-unwrap) — engine-provided during callbacks (see quick).
         let q = self.current_quick.as_ref().expect("no current embedding");
         self.pattern_agg.map_domain(q, vertices);
     }

@@ -39,7 +39,7 @@ impl Fsm {
     /// per (pattern, step): support is a pure function of the aggregate,
     /// and α runs once per embedding — without the memo this dominates
     /// the whole run (it clones domain sets and expands automorphism
-    /// orbits; see EXPERIMENTS.md §Perf).
+    /// orbits; see rust/benches/README.md).
     fn pattern_support(&self, _e: &Embedding, ctx: &mut Ctx) -> Option<usize> {
         let quick = ctx.quick().clone();
         if let Some(&memo) = ctx.step_memo.get(&quick) {

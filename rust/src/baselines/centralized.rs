@@ -41,6 +41,8 @@ pub fn bron_kerbosch(g: &LabeledGraph) -> Vec<Vec<VertexId>> {
             .chain(x.iter())
             .copied()
             .max_by_key(|&u| p.iter().filter(|&&w| g.is_neighbor(u, w)).count())
+            // lint:allow(no-unwrap) — this branch requires P ∪ X nonempty
+            // (checked by the caller's recursion guard).
             .unwrap();
         let cands: Vec<VertexId> =
             p.iter().copied().filter(|&v| !g.is_neighbor(pivot, v)).collect();
@@ -71,6 +73,8 @@ pub fn count_cliques(g: &LabeledGraph, max_size: usize) -> u64 {
         if clique.len() == max {
             return;
         }
+        // lint:allow(no-unwrap) — recursion invariant: clique grows from a
+        // seeded single vertex and never empties.
         let last = *clique.last().unwrap();
         // Extend with v > last adjacent to the whole clique.
         let candidates: Vec<VertexId> = g

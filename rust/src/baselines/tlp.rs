@@ -127,6 +127,8 @@ impl TlpCluster {
                                     }
                                 }
                                 if !idle {
+                                    // lint:allow(no-unwrap) — mutex poisoning means a
+                                    // sibling panicked; propagate it.
                                     busy.lock().unwrap()[wid] =
                                         crate::stats::thread_cpu_time().saturating_sub(cpu0);
                                 }
@@ -134,8 +136,10 @@ impl TlpCluster {
                             })
                         })
                         .collect();
+                    // lint:allow(no-unwrap) — join only errs if the child panicked.
                     handles.into_iter().map(|h| h.join().unwrap()).collect()
                 });
+            // lint:allow(no-unwrap) — poisoning means a worker panicked; propagate.
             let level_busy = busy.into_inner().unwrap();
             sim_wall += level_busy.iter().max().copied().unwrap_or_default();
             per_level_busy.push(level_busy);

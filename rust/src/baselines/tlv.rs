@@ -209,6 +209,7 @@ impl TlvCluster {
                             })
                         })
                         .collect();
+                    // lint:allow(no-unwrap) — join only errs if the child panicked.
                     handles.into_iter().map(|h| h.join().unwrap()).collect()
                 });
 

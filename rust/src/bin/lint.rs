@@ -1,0 +1,51 @@
+//! The repo's invariant linter. Blocking in CI:
+//!
+//! ```text
+//! cargo run --release --bin lint          # scan the repo root
+//! cargo run --release --bin lint -- PATH  # scan another tree
+//! ```
+//!
+//! Exit code 0 when clean, 1 on violations (printed one per line as
+//! `file:line: [rule-id] message`), 2 on I/O failure. Rule catalog and
+//! suppression syntax: `rust/src/analysis/` and ARCHITECTURE.md's
+//! "Static analysis & model checking" section.
+
+use std::path::PathBuf;
+
+use arabesque::analysis;
+
+fn main() {
+    std::process::exit(run());
+}
+
+fn run() -> i32 {
+    // Default to the crate root baked in at compile time — correct for
+    // `cargo run` from anywhere inside the repo — overridable by arg.
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    match analysis::lint_repo(&root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("lint: clean ({} rules)", rule_count());
+            0
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("lint: {} violation(s)", findings.len());
+            1
+        }
+        Err(e) => {
+            eprintln!("lint: error: {e}");
+            2
+        }
+    }
+}
+
+fn rule_count() -> usize {
+    // One per rule id in the catalog (see analysis::rules).
+    ["merge-coverage", "atomics-scope", "ordering-comment", "unsafe-comment", "no-unwrap", "doc-refs"]
+        .len()
+}

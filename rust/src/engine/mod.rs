@@ -64,6 +64,7 @@
 //! where entries were actually computed).
 
 pub mod steal;
+pub mod steal_model;
 pub mod worker;
 
 use std::collections::HashMap;
@@ -275,9 +276,9 @@ pub fn tree_reduce<T: Send>(
                 None => carried = Some(a),
             }
         }
-        let (mut next, times): (Vec<T>, Vec<Duration>) = if pairs.len() == 1 {
+        let single = if pairs.len() == 1 { pairs.pop() } else { None };
+        let (mut next, times): (Vec<T>, Vec<Duration>) = if let Some((mut a, b)) = single {
             // A single pair: merging inline beats a thread spawn.
-            let (mut a, b) = pairs.pop().unwrap();
             let cpu0 = crate::stats::thread_cpu_time();
             merge(&mut a, b);
             let spent = crate::stats::thread_cpu_time().saturating_sub(cpu0);
@@ -297,6 +298,7 @@ pub fn tree_reduce<T: Send>(
                 let mut merged = Vec::with_capacity(handles.len());
                 let mut spent = Vec::with_capacity(handles.len());
                 for h in handles {
+                    // lint:allow(no-unwrap) — join only errs if the child panicked; propagate it.
                     let (m, t) = h.join().expect("merge thread panicked");
                     merged.push(m);
                     spent.push(t);
@@ -424,6 +426,7 @@ impl Cluster {
                         })
                     })
                     .collect();
+                // lint:allow(no-unwrap) — join only errs if the child panicked; propagate it.
                 handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
             });
 
@@ -503,7 +506,9 @@ impl Cluster {
                         .spawn(move || fold_broadcast(ph, sp, |k: &Pattern| k.byte_size()));
                     let hi = scope.spawn(move || fold_broadcast(ih, si, |_: &i64| 8));
                     (
+                        // lint:allow(no-unwrap) — join only errs if the child panicked; propagate it.
                         hp.join().expect("broadcast fold panicked"),
+                        // lint:allow(no-unwrap) — join only errs if the child panicked; propagate it.
                         hi.join().expect("broadcast fold panicked"),
                     )
                 })

@@ -21,10 +21,20 @@
 //!   cost units** (sum of unclaimed chunk widths, so a queue holding
 //!   the clipped final chunk weighs what it actually covers) and
 //!   steals one from that peer's back end (`tail`),
-//! * both moves are single CAS operations on one packed `AtomicU64` per
+//! * both moves are single CAS operations on one packed cursor per
 //!   worker, so a chunk is claimed exactly once — never duplicated,
-//!   never dropped (pinned by the unit tests here and the engine-level
-//!   equivalence matrix in `rust/tests/properties.rs`).
+//!   never dropped.
+//!
+//! The claim protocol is written as an explicit state machine
+//! ([`ClaimSm`]) in which every step performs exactly one shared-memory
+//! operation on an abstract [`Cursor`]. Production drives it over real
+//! `AtomicU64`s; the exhaustive schedule checker in
+//! [`engine::steal_model`](crate::engine::steal_model) drives the *same*
+//! transition function over shadow cells and explores every interleaving
+//! of 2–3 model threads, proving the exactly-once / no-loss / termination
+//! claims instead of asserting them in prose. The engine-level
+//! equivalence matrix in `rust/tests/properties.rs` pins the end-to-end
+//! behavior on real threads.
 //!
 //! Stealing moves *where* a chunk is processed, never *what* is
 //! computed: every downstream reduction (ODAG union, aggregation merge,
@@ -39,6 +49,54 @@
 //! so the `paper` bench's `steal` experiment can show the flattening.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The packed `(head, tail)` cursor of one worker's chunk queue,
+/// abstracted so the claim protocol can run against either real atomics
+/// (production) or single-threaded shadow cells (the exhaustive schedule
+/// checker in [`crate::engine::steal_model`]). The two required
+/// operations are exactly the two shared-memory accesses the protocol
+/// performs; anything not expressible through them cannot sneak into the
+/// verified protocol.
+pub trait Cursor {
+    /// A cursor initialized to the packed value.
+    fn new(packed: u64) -> Self
+    where
+        Self: Sized;
+    /// Read the current packed value.
+    fn load(&self) -> u64;
+    /// Atomically replace `current` with `new`; `Ok(current)` on
+    /// success, `Err(actual)` with the value actually present on failure.
+    fn compare_exchange(&self, current: u64, new: u64) -> Result<u64, u64>;
+}
+
+impl Cursor for AtomicU64 {
+    fn new(packed: u64) -> Self {
+        AtomicU64::new(packed)
+    }
+
+    fn load(&self) -> u64 {
+        // ordering: Relaxed — every load here either seeds a CAS (which
+        // re-validates the value) or feeds an advisory snapshot
+        // (`remaining*`, victim scans) where any momentarily-stale value
+        // is corrected by a rescan. Exactly-once needs only the single-
+        // location modification order of the cursor itself, which Relaxed
+        // already guarantees; the schedule checker proves the protocol
+        // under arbitrary load staleness.
+        AtomicU64::load(self, Ordering::Relaxed)
+    }
+
+    fn compare_exchange(&self, current: u64, new: u64) -> Result<u64, u64> {
+        // ordering: AcqRel on success / Acquire on failure. Claim
+        // correctness only needs the cursor's own modification order
+        // (CAS atomicity), which the exhaustive checker verifies
+        // ordering-independently. The frontier data a claim grants
+        // access to is published before the worker threads spawn
+        // (`thread::scope`), so no claim-site Release is strictly
+        // required; AcqRel is kept as cheap future-proofing against a
+        // later writer publishing per-chunk data through the ledger.
+        AtomicU64::compare_exchange(self, current, new, Ordering::AcqRel, Ordering::Acquire)
+    }
+}
 
 /// Initial chunk→worker placement for a superstep.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,23 +148,57 @@ impl OwnedSeq {
     }
 }
 
+/// The claim protocol as an explicit state machine. Each call to
+/// [`ChunkQueues::step`] performs **exactly one** [`Cursor`] operation
+/// (one load or one compare-exchange) and then folds any number of
+/// purely thread-local transitions. Production ([`ChunkQueues::next`])
+/// drives the machine in a tight loop; the schedule checker drives one
+/// machine per model thread and interleaves their steps in every
+/// possible order. Keeping a single transition function means the
+/// artifact the checker verifies *is* the code production runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ClaimSm {
+    /// About to load the worker's own cursor.
+    OwnLoad,
+    /// Own cursor observed as `seen` with `head < tail`; about to CAS
+    /// the head forward to claim the front chunk.
+    OwnCas { seen: u64 },
+    /// Scanning peers for the heaviest victim. `next` is the peer to
+    /// load on this step; `victim`/`best_units` track the heaviest
+    /// nonempty peer seen so far (`best_units == 0` means none yet).
+    Scan { next: usize, victim: usize, best_units: u64 },
+    /// Victim chosen; about to re-load its cursor to seed the steal CAS.
+    VictimLoad { victim: usize },
+    /// Victim cursor observed as `seen` with `head < tail`; about to
+    /// CAS the tail backward to steal the back chunk.
+    VictimCas { victim: usize, seen: u64 },
+    /// Claim attempt finished: `Some` chunk claimed, or `None` — every
+    /// queue was observed drained in one full scan (work never grows
+    /// mid-step, so "empty everywhere once" is final).
+    Done(Option<Claim>),
+}
+
 /// The shared chunk ledger of one superstep: per-worker arithmetic
-/// chunk sequences behind packed `(head, tail)` atomics.
+/// chunk sequences behind packed `(head, tail)` cursors.
 ///
 /// `owned[w]` describes worker `w`'s initial chunks in ascending order
 /// and is immutable after construction; the only mutable state is one
-/// `AtomicU64` per worker packing two `u32` cursors into that sequence:
+/// cursor per worker packing two `u32` halves into a `u64`:
 /// `head` (next chunk the owner claims) in the high half, `tail`
 /// (one past the last unclaimed chunk, where thieves take) in the low
 /// half. `head == tail` means drained. Claiming is a single
 /// compare-exchange, so no chunk can be handed out twice and no chunk
 /// can be lost — a failed CAS just means someone else won that chunk
-/// and the loser rescans.
-pub struct ChunkQueues {
+/// and the loser rescans. `engine::steal_model` checks this exhaustively
+/// over all small-ledger schedules.
+///
+/// The cursor type defaults to [`AtomicU64`] (production); the model
+/// checker instantiates the same ledger over shadow cells.
+pub struct ChunkQueues<C: Cursor = AtomicU64> {
     /// Each worker's initial chunk-id sequence.
     owned: Vec<OwnedSeq>,
     /// Packed cursors per worker: `(head << 32) | tail`.
-    cursor: Vec<AtomicU64>,
+    cursor: Vec<C>,
     /// Chunk width in frontier index units.
     chunk: u64,
     /// Total frontier index units (the last chunk may be partial).
@@ -126,10 +218,26 @@ fn unpack(v: u64) -> (u64, u64) {
     (v >> 32, v & 0xffff_ffff)
 }
 
-impl ChunkQueues {
+impl ChunkQueues<AtomicU64> {
     /// Cut `[0, total)` into chunks of `chunk` units, place them per
-    /// `partition`, and arm the per-worker cursors.
+    /// `partition`, and arm the per-worker cursors. (Production ledger
+    /// over real atomics; the model checker uses
+    /// [`ChunkQueues::with_cursor`] to build the same ledger over
+    /// shadow cells.)
     pub fn new(total: u64, chunk: u64, workers: usize, partition: Partition, steal: bool) -> Self {
+        Self::with_cursor(total, chunk, workers, partition, steal)
+    }
+}
+
+impl<C: Cursor> ChunkQueues<C> {
+    /// Generic constructor over any [`Cursor`] implementation.
+    pub fn with_cursor(
+        total: u64,
+        chunk: u64,
+        workers: usize,
+        partition: Partition,
+        steal: bool,
+    ) -> Self {
         assert!(workers >= 1);
         let mut chunk = chunk.max(1);
         // Cursors are u32 halves, so the ledger holds at most 2^32 - 1
@@ -172,7 +280,7 @@ impl ChunkQueues {
                     .collect()
             }
         };
-        let cursor = owned.iter().map(|q| AtomicU64::new(pack(0, q.len))).collect();
+        let cursor = owned.iter().map(|q| C::new(pack(0, q.len))).collect();
         ChunkQueues { owned, cursor, chunk, total, n_chunks, steal }
     }
 
@@ -181,9 +289,25 @@ impl ChunkQueues {
         self.n_chunks
     }
 
+    /// Chunk width in frontier index units (the final chunk is clipped).
+    pub fn chunk_width(&self) -> u64 {
+        self.chunk
+    }
+
+    /// Total frontier index units covered by the ledger.
+    pub fn total_units(&self) -> u64 {
+        self.total
+    }
+
+    /// The per-worker cursors, for the model checker's state
+    /// snapshot/restore. Production code never needs this.
+    pub(crate) fn cursors(&self) -> &[C] {
+        &self.cursor
+    }
+
     /// Chunks still unclaimed in worker `w`'s queue (racy snapshot).
     pub fn remaining(&self, w: usize) -> u64 {
-        let (head, tail) = unpack(self.cursor[w].load(Ordering::SeqCst));
+        let (head, tail) = unpack(self.cursor[w].load());
         tail.saturating_sub(head)
     }
 
@@ -195,7 +319,14 @@ impl ChunkQueues {
     /// O(1): the owned id sequence is arithmetic, so "does `w` still
     /// hold the clipped chunk" is a divisibility test, not a scan.
     pub fn remaining_units(&self, w: usize) -> u64 {
-        let (head, tail) = unpack(self.cursor[w].load(Ordering::SeqCst));
+        let (head, tail) = unpack(self.cursor[w].load());
+        self.units_between(w, head, tail)
+    }
+
+    /// Unclaimed units of worker `w`'s queue given an already-loaded
+    /// cursor snapshot — shared by [`ChunkQueues::remaining_units`] and
+    /// the single-load victim scan step of [`ClaimSm`].
+    fn units_between(&self, w: usize, head: u64, tail: u64) -> u64 {
         let rem = tail.saturating_sub(head);
         if rem == 0 {
             return 0;
@@ -217,17 +348,102 @@ impl ChunkQueues {
 
     /// Claim the next chunk for worker `wid`: its own queue first
     /// (front-to-back, preserving the static processing order), then —
-    /// if stealing is enabled — the back of the heaviest peer's queue.
-    /// `None` means every queue is drained: the frontier is fully
-    /// claimed and the worker can head to the barrier.
+    /// if stealing is enabled — the back of the heaviest peer's queue
+    /// (most remaining **cost units**, not most chunks: a queue holding
+    /// the clipped final chunk weighs less than its chunk count
+    /// suggests). Rescans on any race. `None` means every queue was
+    /// observed drained in one full scan: work never grows mid-step, so
+    /// the frontier is fully claimed and the worker can head to the
+    /// barrier.
     pub fn next(&self, wid: usize) -> Option<Claim> {
-        if let Some(c) = self.pop_own(wid) {
-            return Some(self.claim(c, false));
+        let mut sm = ClaimSm::OwnLoad;
+        loop {
+            sm = self.step(wid, sm);
+            if let ClaimSm::Done(c) = sm {
+                return c;
+            }
         }
-        if !self.steal {
-            return None;
+    }
+
+    /// Advance worker `wid`'s claim machine by one shared-memory
+    /// operation. See [`ClaimSm`] for the protocol; the schedule checker
+    /// interleaves these steps across model threads.
+    pub(crate) fn step(&self, wid: usize, sm: ClaimSm) -> ClaimSm {
+        match sm {
+            ClaimSm::OwnLoad => {
+                let seen = self.cursor[wid].load();
+                self.after_own_read(wid, seen)
+            }
+            ClaimSm::OwnCas { seen } => {
+                let (head, tail) = unpack(seen);
+                match self.cursor[wid].compare_exchange(seen, pack(head + 1, tail)) {
+                    Ok(_) => ClaimSm::Done(Some(self.claim(self.owned[wid].get(head), false))),
+                    // Lost the race: someone moved the cursor. The CAS
+                    // failure returned the current value, so fold the
+                    // re-dispatch without a fresh load.
+                    Err(now) => self.after_own_read(wid, now),
+                }
+            }
+            ClaimSm::Scan { next, victim, best_units } => {
+                let (head, tail) = unpack(self.cursor[next].load());
+                let units = self.units_between(next, head, tail);
+                let (victim, best_units) =
+                    if units > best_units { (next, units) } else { (victim, best_units) };
+                self.scan_from(wid, next + 1, victim, best_units)
+            }
+            ClaimSm::VictimLoad { victim } => {
+                let seen = self.cursor[victim].load();
+                let (head, tail) = unpack(seen);
+                if head >= tail {
+                    // Lost the race for this victim — rescan everyone.
+                    self.scan_from(wid, 0, 0, 0)
+                } else {
+                    ClaimSm::VictimCas { victim, seen }
+                }
+            }
+            ClaimSm::VictimCas { victim, seen } => {
+                let (head, tail) = unpack(seen);
+                match self.cursor[victim].compare_exchange(seen, pack(head, tail - 1)) {
+                    Ok(_) => {
+                        ClaimSm::Done(Some(self.claim(self.owned[victim].get(tail - 1), true)))
+                    }
+                    Err(_) => self.scan_from(wid, 0, 0, 0),
+                }
+            }
+            done @ ClaimSm::Done(_) => done,
         }
-        self.steal_chunk(wid).map(|c| self.claim(c, true))
+    }
+
+    /// Thread-local dispatch after an own-cursor value is known (from a
+    /// load or a failed CAS): claim own front if nonempty, else start or
+    /// finish a victim scan.
+    fn after_own_read(&self, wid: usize, seen: u64) -> ClaimSm {
+        let (head, tail) = unpack(seen);
+        if head < tail {
+            ClaimSm::OwnCas { seen }
+        } else if self.steal {
+            self.scan_from(wid, 0, 0, 0)
+        } else {
+            ClaimSm::Done(None)
+        }
+    }
+
+    /// Thread-local scan bookkeeping: position the scan at the next
+    /// peer (skipping `wid` itself), or close it out — steal from the
+    /// best victim if one was seen, otherwise report the ledger drained.
+    fn scan_from(&self, wid: usize, mut next: usize, victim: usize, best_units: u64) -> ClaimSm {
+        if next == wid {
+            next += 1;
+        }
+        if next >= self.cursor.len() {
+            if best_units > 0 {
+                ClaimSm::VictimLoad { victim }
+            } else {
+                ClaimSm::Done(None)
+            }
+        } else {
+            ClaimSm::Scan { next, victim, best_units }
+        }
     }
 
     fn claim(&self, chunk_id: u64, stolen: bool) -> Claim {
@@ -235,59 +451,20 @@ impl ChunkQueues {
         Claim { lo, hi: (lo + self.chunk).min(self.total), stolen }
     }
 
+    /// Drain one chunk from `w`'s own queue without ever stealing —
+    /// used by the unit tests to set up mid-drain ledger states.
+    #[cfg(test)]
     fn pop_own(&self, w: usize) -> Option<u64> {
-        let cur = &self.cursor[w];
-        let mut v = cur.load(Ordering::SeqCst);
+        let mut sm = ClaimSm::OwnLoad;
         loop {
-            let (head, tail) = unpack(v);
-            if head >= tail {
-                return None;
-            }
-            match cur.compare_exchange(v, pack(head + 1, tail), Ordering::SeqCst, Ordering::SeqCst)
-            {
-                Ok(_) => return Some(self.owned[w].get(head)),
-                Err(now) => v = now,
-            }
-        }
-    }
-
-    /// Steal one chunk from the back of the queue with the most
-    /// remaining **cost units** (sum of unclaimed chunk widths — see
-    /// [`ChunkQueues::remaining_units`]), not the most chunks: a queue
-    /// holding the clipped final chunk weighs less than its chunk count
-    /// suggests, so unit-weighting picks the genuinely heaviest victim.
-    /// Rescans on any race; returns `None` only after a full scan finds
-    /// every queue drained (work never grows mid-step, so "empty
-    /// everywhere once" is final).
-    fn steal_chunk(&self, thief: usize) -> Option<u64> {
-        loop {
-            let mut best: Option<(usize, u64)> = None;
-            for v in 0..self.cursor.len() {
-                if v == thief {
-                    continue;
+            sm = match self.step(w, sm) {
+                ClaimSm::Done(c) => return c.map(|claim| claim.lo / self.chunk),
+                // Own queue drained; don't fall through to stealing.
+                ClaimSm::Scan { .. } | ClaimSm::VictimLoad { .. } | ClaimSm::VictimCas { .. } => {
+                    return None;
                 }
-                let rem = self.remaining_units(v);
-                let heavier = match best {
-                    None => rem > 0,
-                    Some((_, r)) => rem > r,
-                };
-                if heavier {
-                    best = Some((v, rem));
-                }
-            }
-            let (victim, _) = best?;
-            let cur = &self.cursor[victim];
-            let v = cur.load(Ordering::SeqCst);
-            let (head, tail) = unpack(v);
-            if head >= tail {
-                continue; // lost the race for this victim — rescan
-            }
-            if cur
-                .compare_exchange(v, pack(head, tail - 1), Ordering::SeqCst, Ordering::SeqCst)
-                .is_ok()
-            {
-                return Some(self.owned[victim].get(tail - 1));
-            }
+                other => other,
+            };
         }
     }
 }
@@ -455,8 +632,67 @@ mod tests {
         assert_eq!(q.remaining_units(0), 4, "w0's clipped tail untouched");
     }
 
+    /// Every `step` call must perform at most one shared-memory
+    /// operation — the granularity the schedule checker interleaves at.
+    /// A counting cursor pins it: drain a two-worker ledger through the
+    /// state machine and check the op totals match the protocol's
+    /// load/CAS budget exactly.
+    #[test]
+    fn step_performs_exactly_one_cursor_op() {
+        use std::cell::Cell;
+
+        struct CountingCell {
+            v: Cell<u64>,
+            ops: Cell<u64>,
+        }
+        impl Cursor for CountingCell {
+            fn new(packed: u64) -> Self {
+                CountingCell { v: Cell::new(packed), ops: Cell::new(0) }
+            }
+            fn load(&self) -> u64 {
+                self.ops.set(self.ops.get() + 1);
+                self.v.get()
+            }
+            fn compare_exchange(&self, current: u64, new: u64) -> Result<u64, u64> {
+                self.ops.set(self.ops.get() + 1);
+                if self.v.get() == current {
+                    self.v.set(new);
+                    Ok(current)
+                } else {
+                    Err(self.v.get())
+                }
+            }
+        }
+
+        // 4 chunks round-robin over 2 workers: each worker owns 2.
+        let q: ChunkQueues<CountingCell> =
+            ChunkQueues::with_cursor(32, 8, 2, Partition::RoundRobin, true);
+        let ops = |q: &ChunkQueues<CountingCell>| -> u64 {
+            q.cursors().iter().map(|c| c.ops.get()).sum()
+        };
+        let mut sm = ClaimSm::OwnLoad;
+        let mut steps = 0u64;
+        let mut claims = 0u64;
+        while claims < 2 {
+            let before = ops(&q);
+            sm = q.step(0, sm);
+            steps += 1;
+            let delta = ops(&q) - before;
+            assert!(delta <= 1, "one step did {delta} cursor ops");
+            if let ClaimSm::Done(c) = sm {
+                assert!(c.is_some());
+                claims += 1;
+                sm = ClaimSm::OwnLoad;
+            }
+        }
+        // Uncontended own-pops: one load + one CAS each.
+        assert_eq!(steps, 4);
+    }
+
     /// Hammer the ledger from `workers` threads; whatever the
     /// interleaving, the union of claims covers [0, total) exactly.
+    /// (`engine::steal_model` proves this exhaustively for small
+    /// ledgers; this pins the real-`AtomicU64` instantiation.)
     #[test]
     fn concurrent_claims_are_disjoint_and_complete() {
         for workers in [2usize, 3, 5, 8] {

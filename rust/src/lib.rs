@@ -36,6 +36,7 @@
 //! ```
 
 pub mod agg;
+pub mod analysis;
 pub mod api;
 pub mod apps;
 pub mod baselines;

@@ -640,6 +640,8 @@ impl<'a> Cursor<'a> {
                 }
                 continue;
             }
+            // lint:allow(no-unwrap) — loop guard: the frames emptiness check
+            // just above `continue`d.
             let top = self.frames.last_mut().expect("frame checked above");
             top.child += 1;
             // A conn target absent from the next array contributes no
@@ -827,6 +829,7 @@ impl ExtractionPlan {
                     .collect();
                 handles
                     .into_iter()
+                    // lint:allow(no-unwrap) — join only errs if the child panicked.
                     .map(|h| h.join().expect("plan-build thread panicked"))
                     .collect::<Vec<_>>()
             });
@@ -977,6 +980,8 @@ impl PlanCursor<'_> {
                 ));
                 self.cur_pat = i;
             }
+            // lint:allow(no-unwrap) — installed by the branch above whenever
+            // absent or switching patterns.
             let cur = self.cur.as_mut().expect("cursor installed above");
             let resumed = cur.seek(s_lo);
             // A contiguous continuation (s_lo == watermark) never counts:

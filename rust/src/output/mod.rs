@@ -29,10 +29,15 @@ pub struct CountingSink {
 
 impl OutputSink for CountingSink {
     fn write(&self, _value: &str) {
+        // ordering: Relaxed — a pure event counter with no other memory
+        // to publish; totals are read after the worker joins (a
+        // happens-before edge from thread::scope) or as racy progress.
         self.n.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
 
     fn count(&self) -> u64 {
+        // ordering: Relaxed — see write; the join barrier orders the
+        // final read.
         self.n.load(std::sync::atomic::Ordering::Relaxed)
     }
 }
@@ -51,6 +56,8 @@ impl MemorySink {
     /// Sorted copy of everything written (worker interleaving makes raw
     /// order nondeterministic).
     pub fn sorted(&self) -> Vec<String> {
+        // lint:allow(no-unwrap) — mutex poisoning means a writer panicked;
+        // propagate.
         let mut v = self.values.lock().unwrap().clone();
         v.sort();
         v
@@ -59,10 +66,12 @@ impl MemorySink {
 
 impl OutputSink for MemorySink {
     fn write(&self, value: &str) {
+        // lint:allow(no-unwrap) — poisoning means a writer panicked; propagate.
         self.values.lock().unwrap().push(value.to_string());
     }
 
     fn count(&self) -> u64 {
+        // lint:allow(no-unwrap) — poisoning means a writer panicked; propagate.
         self.values.lock().unwrap().len() as u64
     }
 }
@@ -85,16 +94,21 @@ impl FileSink {
 
 impl OutputSink for FileSink {
     fn write(&self, value: &str) {
+        // lint:allow(no-unwrap) — poisoning means a writer panicked; propagate.
         let mut w = self.w.lock().unwrap();
         let _ = writeln!(w, "{value}");
+        // ordering: Relaxed — counter only; the file write itself is
+        // ordered by the mutex above.
         self.n.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
 
     fn count(&self) -> u64 {
+        // ordering: Relaxed — see write; totals read after join.
         self.n.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     fn finish(&self) -> Result<()> {
+        // lint:allow(no-unwrap) — poisoning means a writer panicked; propagate.
         self.w.lock().unwrap().flush().context("flush output file")
     }
 }

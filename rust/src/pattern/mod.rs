@@ -118,6 +118,8 @@ impl fmt::Display for Pattern {
 pub fn quick_pattern(g: &LabeledGraph, e: &Embedding, mode: Mode) -> Pattern {
     let vs = e.vertices(g, mode);
     let vlabels: Vec<Label> = vs.iter().map(|&v| g.vertex_label(v)).collect();
+    // lint:allow(no-unwrap) — every edge endpoint is in the embedding's
+    // own vertex list by construction.
     let pos_of = |v: u32| vs.iter().position(|&u| u == v).unwrap() as u8;
     let edges: Vec<(u8, u8, Label)> = e
         .edges(g, mode)
@@ -130,16 +132,18 @@ pub fn quick_pattern(g: &LabeledGraph, e: &Embedding, mode: Mode) -> Pattern {
     Pattern::new(vlabels, edges)
 }
 
-/// Append the quick-pattern delta of one extension word to raw pattern
+/// Apply the quick-pattern delta of one extension word to raw pattern
 /// parts. This is the shared kernel of [`quick_pattern_extend`] (one
-/// child off a parent) and [`QuickStack`] (a whole descent): it only
-/// ever *appends* to the three vectors, which is what lets the stack
-/// undo a push by truncation.
+/// child off a parent) and [`QuickStack`] (a whole descent): labels and
+/// vertices are only ever *appended*; each new edge — already
+/// normalized to `a < b` — is handed to `add_edge`, so the caller picks
+/// its own edge-list discipline (plain append for the one-shot extend,
+/// sorted insertion for the stack).
 fn quick_extend_parts(
     g: &LabeledGraph,
     vlabels: &mut Vec<Label>,
-    edges: &mut Vec<(u8, u8, Label)>,
     vertices: &mut Vec<u32>,
+    add_edge: &mut dyn FnMut(u8, u8, Label),
     word: u32,
     mode: Mode,
 ) {
@@ -148,7 +152,7 @@ fn quick_extend_parts(
             let new_pos = vertices.len() as u8;
             for (i, &p) in vertices.iter().enumerate() {
                 if let Some(eid) = g.edge_between(p, word) {
-                    edges.push((i as u8, new_pos, g.edge(eid).label));
+                    add_edge(i as u8, new_pos, g.edge(eid).label);
                 }
             }
             vlabels.push(g.vertex_label(word));
@@ -156,19 +160,17 @@ fn quick_extend_parts(
         }
         Mode::EdgeInduced => {
             let ed = g.edge(word);
-            let pos_of = |v: u32, vertices: &mut Vec<u32>, vlabels: &mut Vec<Label>| {
-                match vertices.iter().position(|&u| u == v) {
-                    Some(i) => i as u8,
-                    None => {
-                        vertices.push(v);
-                        vlabels.push(g.vertex_label(v));
-                        (vertices.len() - 1) as u8
-                    }
+            let mut pos_of = |v: u32| match vertices.iter().position(|&u| u == v) {
+                Some(i) => i as u8,
+                None => {
+                    vertices.push(v);
+                    vlabels.push(g.vertex_label(v));
+                    (vertices.len() - 1) as u8
                 }
             };
-            let a = pos_of(ed.src, &mut *vertices, &mut *vlabels);
-            let b = pos_of(ed.dst, &mut *vertices, &mut *vlabels);
-            edges.push((a.min(b), a.max(b), ed.label));
+            let a = pos_of(ed.src);
+            let b = pos_of(ed.dst);
+            add_edge(a.min(b), a.max(b), ed.label);
         }
     }
 }
@@ -192,7 +194,14 @@ pub fn quick_pattern_extend(
     let mut edges = parent_quick.edges.clone();
     let mut vertices = Vec::with_capacity(parent_vertices.len() + 1);
     vertices.extend_from_slice(parent_vertices);
-    quick_extend_parts(g, &mut vlabels, &mut edges, &mut vertices, word, mode);
+    quick_extend_parts(
+        g,
+        &mut vlabels,
+        &mut vertices,
+        &mut |a, b, l| edges.push((a, b, l)),
+        word,
+        mode,
+    );
     (Pattern::new(vlabels, edges), vertices)
 }
 
@@ -205,19 +214,33 @@ pub fn quick_pattern_extend(
 /// quick pattern (and visit-order vertex list) already built — the
 /// per-parent O(k²) [`quick_pattern`] rescan the old extraction sites
 /// paid is gone, and in ODAG mode the carried pattern doubles as the
-/// spurious-sequence check input. Because an extension only ever
-/// *appends* to the label/edge/vertex vectors, a pop is three
-/// truncations — no per-frame clones.
+/// spurious-sequence check input.
+///
+/// The carried edge list is kept **sorted and deduplicated at all
+/// times** by binary-search insertion on push, so materializing the
+/// leaf's pattern ([`QuickStack::pattern`]) is a plain clone — no
+/// per-leaf sort+dedup, which dominated `pattern()` now that it runs
+/// once per extracted leaf. Labels and vertices still undo by
+/// truncation; edges undo by removing this frame's insertions in
+/// reverse order (`epos` records each inserted position, making the
+/// pop the exact inverse of the push). Patterns are tiny (≤ ~10
+/// vertices), so the O(|edges|) insert/remove shifts are cheaper than
+/// the per-leaf `sort_unstable` they replace.
 ///
 /// Equivalence with [`quick_pattern`] recomputation is pinned by unit
-/// tests here and the cursor property suite
+/// tests here (`quick_stack_push_pop_matches_rescan`,
+/// `quick_stack_edges_stay_sorted`) and the cursor property suite
 /// (`prop_cursor_resume_equals_fresh_extraction`).
 #[derive(Debug, Clone, Default)]
 pub struct QuickStack {
     vlabels: Vec<Label>,
+    /// Invariant: strictly sorted (sorted + dedup'd) at every frame.
     edges: Vec<(u8, u8, Label)>,
     vertices: Vec<u32>,
-    /// Pre-push lengths of (vlabels, edges, vertices), one per frame.
+    /// Edge-list positions inserted into `edges`, in insertion order;
+    /// frames mark their prefix of this stack.
+    epos: Vec<u32>,
+    /// Pre-push lengths of (vlabels, vertices, epos), one per frame.
     marks: Vec<(u32, u32, u32)>,
 }
 
@@ -232,28 +255,48 @@ impl QuickStack {
     }
 
     /// Extend the carried pattern by one word (vertex id in vertex mode,
-    /// edge id in edge mode).
+    /// edge id in edge mode). New edges go in by binary-search insertion
+    /// (recording the position for the pop), keeping the carried edge
+    /// list identical to what [`Pattern::new`]'s sort+dedup would build.
     pub fn push(&mut self, g: &LabeledGraph, word: u32, mode: Mode) {
         self.marks.push((
             self.vlabels.len() as u32,
-            self.edges.len() as u32,
             self.vertices.len() as u32,
+            self.epos.len() as u32,
         ));
+        let QuickStack { vlabels, edges, vertices, epos, .. } = self;
         quick_extend_parts(
             g,
-            &mut self.vlabels,
-            &mut self.edges,
-            &mut self.vertices,
+            vlabels,
+            vertices,
+            &mut |a, b, l| match edges.binary_search(&(a, b, l)) {
+                // Already present: Pattern::new would dedup it; record
+                // nothing, so the pop leaves it for its original frame.
+                Ok(_) => {}
+                Err(pos) => {
+                    edges.insert(pos, (a, b, l));
+                    epos.push(pos as u32);
+                }
+            },
             word,
             mode,
         );
     }
 
-    /// Undo the most recent push (backtrack one descent step).
+    /// Undo the most recent push (backtrack one descent step): truncate
+    /// labels/vertices, and remove this frame's edge insertions in
+    /// reverse insertion order — each recorded position is exact in the
+    /// state its insertion produced, so the pop inverts the push.
     pub fn pop(&mut self) {
-        let (vl, el, vt) = self.marks.pop().expect("pop on empty QuickStack");
+        // lint:allow(no-unwrap) — stack discipline violation is a caller
+        // bug; pinned by quick_stack_underflow_panics.
+        let (vl, vt, ep) = self.marks.pop().expect("pop on empty QuickStack");
+        while self.epos.len() > ep as usize {
+            if let Some(p) = self.epos.pop() {
+                self.edges.remove(p as usize);
+            }
+        }
         self.vlabels.truncate(vl as usize);
-        self.edges.truncate(el as usize);
         self.vertices.truncate(vt as usize);
     }
 
@@ -262,6 +305,7 @@ impl QuickStack {
         self.vlabels.clear();
         self.edges.clear();
         self.vertices.clear();
+        self.epos.clear();
         self.marks.clear();
     }
 
@@ -272,11 +316,15 @@ impl QuickStack {
     }
 
     /// Materialize the carried quick pattern. Identical to
-    /// [`quick_pattern`] of the pushed word sequence: the parts are the
-    /// same appends [`quick_pattern_extend`] performs, and
-    /// [`Pattern::new`] normalizes edge order.
+    /// [`quick_pattern`] of the pushed word sequence, but a plain clone:
+    /// the sorted-insertion discipline means the carried edge list
+    /// already *is* the normalized form [`Pattern::new`] would produce.
     pub fn pattern(&self) -> Pattern {
-        Pattern::new(self.vlabels.clone(), self.edges.clone())
+        debug_assert!(
+            self.edges.windows(2).all(|w| w[0] < w[1]),
+            "carried edges must stay strictly sorted"
+        );
+        Pattern { vlabels: self.vlabels.clone(), edges: self.edges.clone() }
     }
 }
 
@@ -415,6 +463,44 @@ mod tests {
             }
             assert_eq!(stack.depth(), 0);
             assert_eq!(stack.pattern(), Pattern::new(vec![], vec![]));
+        }
+    }
+
+    #[test]
+    fn quick_stack_edges_stay_sorted() {
+        // The perf contract behind the plain-clone `pattern()`: at every
+        // node of a deep random walk (with pops between siblings), the
+        // carried edge list is strictly sorted and bit-equal to the
+        // sort+dedup normalization `Pattern::new` performs.
+        let g = crate::graph::gen::erdos_renyi(22, 90, 3, 2, 7);
+        for mode in [Mode::VertexInduced, Mode::EdgeInduced] {
+            let mut stack = QuickStack::new();
+            let check = |s: &QuickStack| {
+                let carried = s.pattern();
+                assert!(carried.edges.windows(2).all(|w| w[0] < w[1]), "{:?}", carried.edges);
+                let renorm = Pattern::new(carried.vlabels.clone(), carried.edges.clone());
+                assert_eq!(carried, renorm, "carried list must equal its own normalization");
+            };
+            for w in crate::embedding::initial_candidates(&g, mode).into_iter().take(8) {
+                stack.push(&g, w, mode);
+                let e = Embedding::new(vec![w]);
+                for x in crate::embedding::extensions(&g, &e, mode).into_iter().take(4) {
+                    stack.push(&g, x, mode);
+                    check(&stack);
+                    let e2 = Embedding::new(vec![w, x]);
+                    for y in crate::embedding::extensions(&g, &e2, mode).into_iter().take(3) {
+                        stack.push(&g, y, mode);
+                        check(&stack);
+                        stack.pop();
+                        check(&stack);
+                    }
+                    stack.pop();
+                }
+                stack.pop();
+                check(&stack);
+            }
+            assert_eq!(stack.depth(), 0);
+            assert!(stack.pattern().edges.is_empty());
         }
     }
 

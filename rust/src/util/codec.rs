@@ -84,10 +84,14 @@ impl<'a> Reader<'a> {
     }
 
     pub fn get_u32(&mut self) -> Result<u32, CodecError> {
+        // lint:allow(no-unwrap) — take(4) returned exactly 4 bytes, so
+        // the slice→array conversion is infallible.
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     pub fn get_u64(&mut self) -> Result<u64, CodecError> {
+        // lint:allow(no-unwrap) — take(8) returned exactly 8 bytes, so
+        // the slice→array conversion is infallible.
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 

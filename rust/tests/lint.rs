@@ -1,0 +1,155 @@
+//! Lint fixture suite: every rule must fire at exactly the expected
+//! `file:line` sites and nowhere else, and `lint:allow(<rule>)` must
+//! suppress at the site. Fixtures live in `lint_fixtures/` — a
+//! directory the repo scan skips — and are lexed as text, never
+//! compiled, so each can embed deliberate violations.
+
+use std::path::Path;
+
+use arabesque::analysis::rules::{self, Finding, MergeSpec};
+use arabesque::analysis::{self, lexer};
+
+/// Lines at which `rule` fired, in order.
+fn lines(findings: &[Finding], rule: &str) -> Vec<u32> {
+    findings.iter().filter(|f| f.rule == rule).map(|f| f.line).collect()
+}
+
+#[test]
+fn no_unwrap_fires_allows_and_exempts_unit_tests() {
+    let lx = lexer::lex(include_str!("lint_fixtures/no_unwrap.rs"));
+    let f = rules::no_unwrap("fixture.rs", &lx);
+    // Line 5 `.unwrap()`, line 9 `.expect(` fire; line 14 is allowed,
+    // the string literal produces no tokens, the test module is exempt.
+    assert_eq!(lines(&f, "no-unwrap"), vec![5, 9]);
+    assert!(f.iter().all(|x| x.rule == "no-unwrap"));
+}
+
+#[test]
+fn atomics_scope_fires_outside_allowlist_only() {
+    let lx = lexer::lex(include_str!("lint_fixtures/atomics_scope.rs"));
+    let f = rules::atomics_scope("rust/src/apps/fixture.rs", &lx);
+    // Line 4 the `use` of AtomicU64, line 6 the parameter type, line 7
+    // `Ordering::Relaxed`; lines 10–11 are allowed and `cmp::Ordering`
+    // never counts.
+    assert_eq!(lines(&f, "atomics-scope"), vec![4, 6, 7]);
+    // The identical source inside an allowlisted module is exempt.
+    assert!(rules::atomics_scope("rust/src/engine/steal.rs", &lx).is_empty());
+}
+
+#[test]
+fn ordering_comment_accepts_block_justifications() {
+    let lx = lexer::lex(include_str!("lint_fixtures/ordering_comment.rs"));
+    let f = rules::ordering_comment("fixture.rs", &lx);
+    // Line 7 is bare; line 11 is justified on the line, line 17 by the
+    // comment block above; line 23's block is severed by a blank line;
+    // `cmp::Ordering::Less` (line 27) is out of scope.
+    assert_eq!(lines(&f, "ordering-comment"), vec![7, 23]);
+}
+
+#[test]
+fn unsafe_comment_requires_safety_note() {
+    let lx = lexer::lex(include_str!("lint_fixtures/unsafe_comment.rs"));
+    let f = rules::unsafe_comment("fixture.rs", &lx);
+    // Line 4 bare; line 9 has a SAFETY block; line 14 is allowed.
+    assert_eq!(lines(&f, "unsafe-comment"), vec![4]);
+}
+
+#[test]
+fn doc_refs_flags_dangling_skips_urls_and_allows() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let lx = lexer::lex(include_str!("lint_fixtures/doc_refs.rs"));
+    let f = analysis::doc_refs_in_comments(root, "rust/tests/lint_fixtures/doc_refs.rs", &lx);
+    // The existing doc passes (line 1), the missing one fires (line 2),
+    // the suppressed one is allowed (line 4), the URL is skipped (line 6).
+    assert_eq!(lines(&f, "doc-refs"), vec![2]);
+    assert!(f[0].msg.contains("NO_SUCH_DOC"), "{}", f[0].msg);
+}
+
+#[test]
+fn doc_refs_in_markdown_honors_allow_marker() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src = "See ARCHITECTURE.md.\nSee GONE.md.\n<!-- lint:allow(doc-refs) -->\nSee ALSO_GONE.md.\n";
+    let f = analysis::doc_refs_in_text(root, "fixture.md", src);
+    assert_eq!(lines(&f, "doc-refs"), vec![2]);
+}
+
+#[test]
+fn merge_coverage_reports_dropped_fields_once() {
+    let def = lexer::lex(include_str!("lint_fixtures/merge_def.rs"));
+    let acc = lexer::lex(include_str!("lint_fixtures/merge_acc.rs"));
+    let spec = MergeSpec {
+        strukt: "Totals",
+        def_file: "rust/tests/lint_fixtures/merge_def.rs",
+        impl_owner: "Totals",
+        fn_name: "merge",
+        acc_file: "rust/tests/lint_fixtures/merge_acc.rs",
+    };
+    let f = rules::merge_coverage(&spec, &def, &acc);
+    // `hits`/`misses` are merged, `derived_rate` is allowed; only
+    // `dropped_at_barrier` (line 7) escapes the merge.
+    assert_eq!(lines(&f, "merge-coverage"), vec![7]);
+    assert!(f[0].msg.contains("dropped_at_barrier"), "{}", f[0].msg);
+
+    // The decoy `Unrelated::merge` must not satisfy the Totals spec:
+    // pointing the spec at the decoy owner misses `hits`/`misses`.
+    let decoy = MergeSpec { impl_owner: "Unrelated", ..spec };
+    let f = rules::merge_coverage(&decoy, &def, &acc);
+    assert_eq!(lines(&f, "merge-coverage"), vec![5, 6, 7]);
+}
+
+#[test]
+fn merge_coverage_flags_stale_specs_loudly() {
+    let def = lexer::lex(include_str!("lint_fixtures/merge_def.rs"));
+    let acc = lexer::lex(include_str!("lint_fixtures/merge_acc.rs"));
+    let spec = MergeSpec {
+        strukt: "Renamed",
+        def_file: "rust/tests/lint_fixtures/merge_def.rs",
+        impl_owner: "Totals",
+        fn_name: "merge",
+        acc_file: "rust/tests/lint_fixtures/merge_acc.rs",
+    };
+    let f = rules::merge_coverage(&spec, &def, &acc);
+    assert_eq!(f.len(), 1);
+    assert!(f[0].msg.contains("spec out of date"), "{}", f[0].msg);
+
+    let gone_fn = MergeSpec { strukt: "Totals", fn_name: "accumulate", ..spec };
+    let f = rules::merge_coverage(&gone_fn, &def, &acc);
+    assert_eq!(f.len(), 1);
+    assert!(f[0].msg.contains("spec out of date"), "{}", f[0].msg);
+}
+
+#[test]
+fn findings_are_machine_readable() {
+    let lx = lexer::lex(include_str!("lint_fixtures/unsafe_comment.rs"));
+    let f = rules::unsafe_comment("rust/src/x.rs", &lx);
+    assert_eq!(
+        f[0].to_string(),
+        "rust/src/x.rs:4: [unsafe-comment] `unsafe` without a `SAFETY` comment"
+    );
+}
+
+#[test]
+fn lint_rust_source_composes_all_per_file_rules() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    // A non-allowlisted library path: the atomics fixture trips both
+    // atomics-scope and (for the unjustified sites) ordering-comment.
+    let src = include_str!("lint_fixtures/atomics_scope.rs");
+    let f = analysis::lint_rust_source(root, "rust/src/apps/fixture.rs", src);
+    assert_eq!(lines(&f, "atomics-scope"), vec![4, 6, 7]);
+    assert_eq!(lines(&f, "ordering-comment"), vec![7, 11]);
+    assert!(lines(&f, "no-unwrap").is_empty());
+}
+
+#[test]
+fn whole_repo_scan_is_clean_and_covers_the_tree() {
+    // Same invariant the `lint` binary enforces in CI; pinned here so
+    // `cargo test` alone catches a regression, and with it the scan
+    // scope (the walker must actually visit the source tree).
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = analysis::lint_repo(root).expect("repo must be readable");
+    assert!(
+        findings.is_empty(),
+        "lint violations:\n{}",
+        findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}

@@ -1,0 +1,16 @@
+// Fixture: `atomics-scope` — concurrency primitives outside the
+// allowlisted modules fire once per site; lint:allow suppresses.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn rogue_counter(n: &AtomicU64) -> u64 {
+    n.load(Ordering::Relaxed)
+}
+
+pub fn allowed_site(n: &AtomicU64) -> u64 { // lint:allow(atomics-scope)
+    n.fetch_add(1, Ordering::SeqCst) // lint:allow(atomics-scope)
+}
+
+pub fn cmp_ordering_is_fine(a: u32, b: u32) -> std::cmp::Ordering {
+    a.cmp(&b)
+}

@@ -1,0 +1,7 @@
+// Fixture: `doc-refs` — see ARCHITECTURE.md (exists at the repo root).
+// But NO_SUCH_DOC.md is dangling and fires on this line.
+
+//! Suppressed mention of OTHER_MISSING.md here. lint:allow(doc-refs)
+
+/// URLs are skipped entirely: https://example.com/STILL_MISSING.md
+pub fn placeholder() {}

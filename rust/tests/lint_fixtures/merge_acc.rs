@@ -1,0 +1,17 @@
+// Fixture: `merge-coverage` accumulate side — `Totals::merge` touches
+// `hits` and `misses` but never `dropped_at_barrier`.
+
+impl Totals {
+    pub fn merge(&mut self, o: &Totals) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+    }
+}
+
+impl Unrelated {
+    // A decoy merge in the same file: the impl-owner qualification must
+    // keep the rule from matching this one for `Totals`.
+    pub fn merge(&mut self, o: &Unrelated) {
+        self.not_checked += o.not_checked;
+    }
+}

@@ -1,0 +1,14 @@
+// Fixture: `merge-coverage` definition side — `Totals` has a field the
+// acc fixture's merge never touches, plus an allowlisted derived field.
+
+pub struct Totals {
+    pub hits: u64,
+    pub misses: u64,
+    pub dropped_at_barrier: u64,
+    // lint:allow(merge-coverage) — derived, recomputed at the barrier.
+    pub derived_rate: u64,
+}
+
+pub struct Unrelated {
+    pub not_checked: u64,
+}

@@ -1,0 +1,30 @@
+// Fixture: `no-unwrap` — method-call unwrap/expect in library code
+// fires; allowed sites and #[cfg(test)] modules do not.
+
+pub fn bad(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn also_bad(v: Option<u32>) -> u32 {
+    v.expect("present")
+}
+
+pub fn allowed(v: Option<u32>) -> u32 {
+    // lint:allow(no-unwrap) — fixture-sanctioned.
+    v.unwrap()
+}
+
+pub fn not_a_method_call() -> &'static str {
+    // The bare words don't fire: no `.ident(` shape, and strings and
+    // comments never produce code tokens — unwrap() expect().
+    "unwrap() expect()"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn exempt() {
+        Some(1u32).unwrap();
+        Some(2u32).expect("unit tests may panic freely");
+    }
+}

@@ -1,0 +1,28 @@
+// Fixture: `ordering-comment` — every atomic-Ordering use needs an
+// `ordering:` justification on the line or in the block above it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bare(n: &AtomicU64) -> u64 {
+    n.load(Ordering::Relaxed)
+}
+
+pub fn justified_same_line(n: &AtomicU64) -> u64 {
+    n.load(Ordering::Relaxed) // ordering: advisory snapshot.
+}
+
+pub fn justified_block(n: &AtomicU64) {
+    // ordering: Relaxed — pure counter, totals read after the join
+    // barrier; multi-line justification blocks count too.
+    n.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn blank_line_breaks_the_block(n: &AtomicU64) {
+    // ordering: too far away — the blank line below severs the block.
+
+    n.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn cmp_ordering_not_in_scope(a: u32, b: u32) -> bool {
+    a.cmp(&b) == std::cmp::Ordering::Less
+}

@@ -1,0 +1,15 @@
+// Fixture: `unsafe-comment` — every `unsafe` needs a SAFETY note.
+
+pub fn bad(p: *const u32) -> u32 {
+    unsafe { *p }
+}
+
+pub fn good(p: *const u32) -> u32 {
+    // SAFETY: fixture caller guarantees `p` is valid and aligned.
+    unsafe { *p }
+}
+
+pub fn suppressed(p: *const u32) -> u32 {
+    // lint:allow(unsafe-comment)
+    unsafe { *p }
+}
