@@ -232,6 +232,42 @@ fn main() {
         std::hint::black_box(n);
     });
 
+    // --- spurious-leaf rejection: full compare vs structural hash ------
+    // ODAG extraction over-approximates: this parity-split store files
+    // the same triangle embeddings under a path-3 AND a triangle
+    // pattern, so most extracted leaves are spurious cross-pattern
+    // combinations. The old filter materialized each leaf's carried
+    // quick pattern and full-compared it against the ODAG's pattern;
+    // `drain_matching` rejects mismatches on the carried structural
+    // hash before materializing anything (equivalence pinned by
+    // `drain_matching_equals_full_compare_filtering`).
+    let split = {
+        let p_path = pattern::Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        let p_tri = pattern::Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        let mut s = OdagStore::new();
+        for e in &embs {
+            s.add(if e[0] % 2 == 0 { &p_path } else { &p_tri }, e);
+        }
+        s
+    };
+    let split_plan = ExtractionPlan::build(&split);
+    bench("spurious filter (drain + full compare)", it(200).max(2), || {
+        let mut cur = split_plan.cursor(&split, &g, Mode::VertexInduced);
+        let mut n = 0u64;
+        cur.drain(0, split_plan.total(), |p, _, _, q| {
+            if q == *p {
+                n += 1;
+            }
+        });
+        std::hint::black_box(n);
+    });
+    bench("spurious filter (drain_matching, hashed)", it(200).max(2), || {
+        let mut cur = split_plan.cursor(&split, &g, Mode::VertexInduced);
+        let mut n = 0u64;
+        cur.drain_matching(0, split_plan.total(), |_, _, _, _| n += 1);
+        std::hint::black_box(n);
+    });
+
     // --- work-stealing chunk ledger ------------------------------------
     // Claim-path costs of the steal ledger (single-threaded, so the CAS
     // always succeeds — the uncontended fast path every chunk pays).

@@ -10,6 +10,7 @@
 use std::collections::HashSet;
 
 use crate::graph::VertexId;
+use crate::util::codec::{CodecError, Reader, Writer};
 
 /// Per-position distinct vertex sets for one pattern.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -102,9 +103,35 @@ impl DomainSupport {
         best
     }
 
-    /// Serialized size, for message accounting.
+    /// Serialized size, for message accounting. Exactly the byte count
+    /// [`DomainSupport::serialize`] produces.
     pub fn byte_size(&self) -> usize {
         4 + self.domains.iter().map(|d| 4 + 4 * d.len()).sum::<usize>()
+    }
+
+    /// Wire form: `u32` position count, then per position its vertex
+    /// ids as a **sorted** `u32` list — sorted so a given domain always
+    /// produces identical bytes regardless of hash-set iteration order
+    /// (the distributed conformance suite compares payloads for
+    /// equality after merges from either side of the wire).
+    pub fn serialize(&self, w: &mut Writer) {
+        w.put_u32(self.domains.len() as u32);
+        for d in &self.domains {
+            let mut vs: Vec<VertexId> = d.iter().copied().collect();
+            vs.sort_unstable();
+            w.put_u32_slice(&vs);
+        }
+    }
+
+    /// Decode [`DomainSupport::serialize`] bytes; the position count is
+    /// bounds-checked against the remaining bytes before allocation.
+    pub fn deserialize(r: &mut Reader) -> Result<DomainSupport, CodecError> {
+        let n = r.get_count(r.remaining() as u64 / 4)?;
+        let mut domains = Vec::with_capacity(n);
+        for _ in 0..n {
+            domains.push(r.get_u32_vec()?.into_iter().collect());
+        }
+        Ok(DomainSupport { domains })
     }
 }
 
@@ -185,6 +212,30 @@ mod tests {
         assert_eq!(d.expanded_support(&[vec![0, 1]]), 1);
         // Empty automorphism list behaves like identity.
         assert_eq!(d.expanded_support(&[]), 1);
+    }
+
+    #[test]
+    fn serialization_roundtrip_sorted_and_sized() {
+        let mut d = DomainSupport::new(3);
+        for v in [9u32, 2, 40, 7] {
+            d.add(0, v);
+        }
+        d.add(2, 5);
+        let mut w = Writer::new();
+        d.serialize(&mut w);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), d.byte_size());
+        let back = DomainSupport::deserialize(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(back, d);
+        // Deterministic bytes: re-serializing the roundtripped value
+        // yields the same buffer (per-position lists are sorted).
+        let mut w2 = Writer::new();
+        back.serialize(&mut w2);
+        assert_eq!(w2.into_bytes(), bytes);
+        // Truncations error, never panic.
+        for cut in [0, 2, bytes.len() - 1] {
+            assert!(DomainSupport::deserialize(&mut Reader::new(&bytes[..cut])).is_err());
+        }
     }
 
     #[test]

@@ -41,12 +41,14 @@ impl std::fmt::Display for Finding {
 
 /// Modules allowed to touch `unsafe` / `AtomicU64` / `Ordering`:
 /// the steal ledger and its model checker, the stats clock syscall,
-/// and the output sinks' counters. Matched as path suffixes.
+/// the output sinks' counters, and the distributed frame layer's
+/// measured-bytes counter. Matched as path suffixes.
 pub const ATOMICS_ALLOWLIST: &[&str] = &[
     "engine/steal.rs",
     "engine/steal_model.rs",
     "stats/mod.rs",
     "output/mod.rs",
+    "comm/frame.rs",
 ];
 
 /// `no-unwrap`: no `.unwrap()` / `.expect(` in library code. Unit-test
@@ -267,8 +269,9 @@ pub struct MergeSpec {
 
 /// The repo's merge-coverage bindings: the three engine accounting
 /// structs all funnel through `Cluster::run_with_sink` (workers fold
-/// into `StepStats`, steps fold into `RunResult`), and the two stats
-/// structs have their own `merge`.
+/// into `StepStats`, steps fold into `RunResult`), the two stats
+/// structs have their own `merge`, and the distributed barrier folds
+/// `ShardOut` in `Coordinator::merge_shard_outs`.
 pub const MERGE_SPECS: &[MergeSpec] = &[
     MergeSpec {
         strukt: "StepStats",
@@ -304,6 +307,16 @@ pub const MERGE_SPECS: &[MergeSpec] = &[
         impl_owner: "CommStats",
         fn_name: "merge",
         acc_file: "rust/src/stats/mod.rs",
+    },
+    // A ShardOut field a shard serializes but the coordinator's barrier
+    // never folds is silently dropped work — the distributed twin of the
+    // WorkerOut binding above.
+    MergeSpec {
+        strukt: "ShardOut",
+        def_file: "rust/src/comm/wire.rs",
+        impl_owner: "Coordinator",
+        fn_name: "merge_shard_outs",
+        acc_file: "rust/src/comm/coordinator.rs",
     },
 ];
 

@@ -1,0 +1,475 @@
+//! The coordinator side of the distributed superstep: spawn shard
+//! processes, drive the lockstep frame protocol, and run the same
+//! barrier the in-process engine runs — over `ShardOut`s deserialized
+//! from sockets instead of `WorkerOut`s joined from threads.
+//!
+//! Equivalence argument (pinned by `rust/tests/distributed.rs`): every
+//! cross-worker reduction in the engine is commutative and associative
+//! (ODAG union, aggregation merge, counter addition, max), so the
+//! two-level merge here — each shard pre-folds its `T` workers, the
+//! coordinator tree-reduces the `N` shard results — is value-identical
+//! to the in-process engine's flat reduce over all `N*T` workers. The
+//! broadcast byte/message accounting uses the identical formulas over
+//! the identical merged values, so the simulated `CommStats` model is
+//! bit-identical too; `CommStats::wire_bytes` adds what this process
+//! actually put on (and took off) its sockets, measured per step.
+//!
+//! The coordinator holds no workers: its per-step job is serialize,
+//! broadcast, collect, merge, decide termination. At the end it gathers
+//! each shard's flushed output aggregation and sink count, runs
+//! `app.report` locally, and assembles the same `RunResult` the
+//! in-process engine returns.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::agg::{self, AggStats, AggVal};
+use crate::api::RunAggregates;
+use crate::bail;
+use crate::engine::{fold_broadcast, tree_reduce, Config, Partition, RunResult};
+use crate::graph::{loader, LabeledGraph};
+use crate::odag::OdagStore;
+use crate::output::OutputSink;
+use crate::pattern::Pattern;
+use crate::stats::{CommStats, Phase, PhaseTimes, StepStats};
+use crate::util::codec::Writer;
+use crate::util::err::{Context, Result};
+
+use super::frame::{expect_frame, send_frame, FrameKind, WireCounter};
+use super::wire::{self, put_embedding_list, put_int_map, put_pattern_map, FinalOut, ShardOut};
+use super::AppSpec;
+
+/// The coordinator's frontier: the engine's [`crate::engine::Frontier`]
+/// without an extraction plan — shards rebuild plans locally, and the
+/// coordinator itself never extracts.
+enum CoordFrontier {
+    Init,
+    List(Vec<Vec<u32>>),
+    Odag(OdagStore),
+}
+
+impl CoordFrontier {
+    fn is_empty(&self) -> bool {
+        match self {
+            CoordFrontier::Init => false,
+            CoordFrontier::List(v) => v.is_empty(),
+            CoordFrontier::Odag(s) => s.is_empty(),
+        }
+    }
+}
+
+/// Encode a `Step` frame payload. Must stay layout-identical to
+/// [`wire::StepMsg::deserialize`] — the encode side borrows coordinator
+/// state instead of cloning the (potentially large) maps into an owned
+/// `StepMsg`.
+fn encode_step(
+    step: u64,
+    frontier: &CoordFrontier,
+    prev_p: &HashMap<Pattern, AggVal>,
+    prev_i: &HashMap<i64, AggVal>,
+) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u64(step);
+    match frontier {
+        CoordFrontier::Init => w.put_u8(0),
+        CoordFrontier::List(list) => {
+            w.put_u8(1);
+            put_embedding_list(&mut w, list);
+        }
+        CoordFrontier::Odag(store) => {
+            w.put_u8(2);
+            store.serialize(&mut w);
+        }
+    }
+    put_pattern_map(&mut w, prev_p);
+    put_int_map(&mut w, prev_i);
+    w.into_bytes()
+}
+
+/// Shard child processes, killed on drop so a coordinator error never
+/// leaks orphan processes.
+struct ShardProcs {
+    children: Vec<Child>,
+}
+
+impl ShardProcs {
+    /// Reap every child, failing if any exited unsuccessfully.
+    fn join(mut self) -> Result<()> {
+        let mut children = std::mem::take(&mut self.children);
+        for (k, child) in children.iter_mut().enumerate() {
+            let status = child.wait().with_context(|| format!("wait for shard {k}"))?;
+            if !status.success() {
+                bail!("shard {k} exited with {status}");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ShardProcs {
+    fn drop(&mut self) {
+        for child in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Owns the accepted shard connections and the measured-bytes counter.
+struct Coordinator {
+    streams: Vec<TcpStream>,
+    wire: WireCounter,
+}
+
+impl Coordinator {
+    fn broadcast(&mut self, kind: FrameKind, payload: &[u8]) -> Result<()> {
+        for (k, s) in self.streams.iter_mut().enumerate() {
+            send_frame(s, kind, payload, &self.wire)
+                .with_context(|| format!("send {kind:?} to shard {k}"))?;
+        }
+        Ok(())
+    }
+
+    /// Receive one frame of `want` kind from every shard, in shard-id
+    /// order — which makes downstream list concatenation deterministic
+    /// (shard k's embeddings precede shard k+1's, and within a shard
+    /// they are already in worker-id order).
+    fn collect(&mut self, want: FrameKind) -> Result<Vec<Vec<u8>>> {
+        let mut out = Vec::with_capacity(self.streams.len());
+        for (k, s) in self.streams.iter_mut().enumerate() {
+            out.push(
+                expect_frame(s, want, &self.wire)
+                    .with_context(|| format!("receive {want:?} from shard {k}"))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// The cross-shard barrier: exactly `Cluster::run_with_sink`'s
+    /// accumulation loop, field for field, over [`ShardOut`]s instead of
+    /// `WorkerOut`s (the `merge-coverage` lint binds every `ShardOut`
+    /// field to this function). Returns the merged ODAG store, both
+    /// step aggregate maps, and the concatenated list frontier.
+    #[allow(clippy::type_complexity)]
+    fn merge_shard_outs(
+        &self,
+        cfg: &Config,
+        st: &mut StepStats,
+        outs: Vec<ShardOut>,
+        processed_total: &mut u64,
+    ) -> (OdagStore, HashMap<Pattern, AggVal>, HashMap<i64, AggVal>, Vec<Vec<u32>>) {
+        let n = outs.len();
+        let mut agg_parts: Vec<HashMap<Pattern, AggVal>> = Vec::with_capacity(n);
+        let mut int_parts: Vec<HashMap<i64, AggVal>> = Vec::with_capacity(n);
+        let mut odag_parts: Vec<OdagStore> = Vec::with_capacity(n);
+        let mut list_parts: Vec<Vec<Vec<u32>>> = Vec::with_capacity(n);
+        let mut list_total = 0usize;
+        for out in outs {
+            st.candidates += out.candidates;
+            st.processed += out.processed;
+            st.frontier += out.frontier_added;
+            st.list_bytes += out.list_bytes;
+            st.steals += out.steals;
+            st.stolen_units += out.stolen_units;
+            st.pattern_rescans += out.pattern_rescans;
+            st.root_descents += out.root_descents;
+            st.phases.merge(&PhaseTimes::from_nanos(out.phase_nanos));
+            st.busy_max = st.busy_max.max(Duration::from_nanos(out.busy_max_nanos));
+            st.busy_sum += Duration::from_nanos(out.busy_sum_nanos);
+            // Shuffle traffic comes pre-summed per shard; wire bytes are
+            // measured on this process's own sockets, never shipped.
+            st.comm.merge(&CommStats {
+                messages: out.shuffle_messages,
+                bytes: out.shuffle_bytes,
+                wire_bytes: 0,
+            });
+            *processed_total += out.processed;
+            agg_parts.push(out.pattern_part);
+            int_parts.push(out.int_part);
+            if cfg.use_odag {
+                odag_parts.push(out.frontier_odag);
+            } else {
+                list_total += out.frontier_list.len();
+                list_parts.push(out.frontier_list);
+            }
+        }
+
+        let parallel = n > 1;
+        let (odags_merged, c_odag, u_odag) =
+            tree_reduce(odag_parts, OdagStore::merge_owned, parallel);
+        let (pat_merged, c_pat, u_pat) = tree_reduce(agg_parts, agg::merge_into, parallel);
+        let (int_merged, c_int, u_int) = tree_reduce(int_parts, agg::merge_into, parallel);
+        st.merge_cpu = u_odag + u_pat + u_int;
+        st.merge_critical = c_odag + c_pat + c_int;
+
+        let mut merged_list: Vec<Vec<u32>> = Vec::with_capacity(list_total);
+        for part in list_parts {
+            merged_list.extend(part);
+        }
+        (
+            odags_merged.unwrap_or_default(),
+            pat_merged.unwrap_or_default(),
+            int_merged.unwrap_or_default(),
+            merged_list,
+        )
+    }
+}
+
+/// Spawn `cfg.servers` shard processes of `exe`, run the application to
+/// completion across them, and return the same [`RunResult`] the
+/// in-process engine produces (timing fields measured here; all counts,
+/// maps, and simulated comm totals bit-identical — the conformance
+/// suite's invariant).
+///
+/// `exe` is this binary's path: `std::env::current_exe()` from the CLI,
+/// `env!("CARGO_BIN_EXE_arabesque")` from integration tests. The graph
+/// ships to shards through a temp file; config and app ship as argv.
+pub fn run_distributed(
+    exe: &Path,
+    g: &LabeledGraph,
+    spec: &AppSpec,
+    cfg: &Config,
+    sink: Arc<dyn OutputSink>,
+) -> Result<RunResult> {
+    if cfg.steal {
+        bail!("distributed execution requires steal=false (cross-process queues cannot be stolen from)");
+    }
+    let shards = cfg.servers;
+    let t_run = Instant::now();
+    let app = spec.build();
+
+    // Bind first: the listener address names the run (and the temp
+    // file), and shards can connect the moment they start.
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind coordinator listener")?;
+    let addr = listener.local_addr().context("coordinator local addr")?;
+    let graph_path = std::env::temp_dir()
+        .join(format!("arab_dist_{}_{}.graph", std::process::id(), addr.port()));
+    loader::save_arabesque(g, &graph_path)?;
+    let _cleanup = TempFile(graph_path.clone());
+
+    let procs = spawn_shards(exe, cfg, spec, &addr.to_string(), &graph_path)?;
+    let mut coord = accept_shards(&listener, shards)?;
+
+    // ---- the superstep loop: the engine's, with the compute phase
+    // ---- replaced by a broadcast/collect over the shard sockets.
+    let mut frontier = CoordFrontier::Init;
+    let mut prev_pattern_aggs: HashMap<Pattern, AggVal> = HashMap::new();
+    let mut prev_int_aggs: HashMap<i64, AggVal> = HashMap::new();
+    let mut pattern_history: HashMap<Pattern, AggVal> = HashMap::new();
+    let mut int_history: HashMap<i64, AggVal> = HashMap::new();
+
+    let mut steps: Vec<StepStats> = Vec::new();
+    let mut comm_total = CommStats::default();
+    let mut phases_total = PhaseTimes::default();
+    let mut candidates_total = 0u64;
+    let mut processed_total = 0u64;
+    let mut steals_total = 0u64;
+    let mut stolen_units_total = 0u64;
+    let mut pattern_rescans_total = 0u64;
+    let mut root_descents_total = 0u64;
+    let mut peak_frontier_bytes = 0u64;
+
+    let mut step = 1usize;
+    while step <= cfg.max_steps && !frontier.is_empty() {
+        let t_step = Instant::now();
+        let wire0 = coord.wire.total();
+
+        let payload = encode_step(step as u64, &frontier, &prev_pattern_aggs, &prev_int_aggs);
+        coord.broadcast(FrameKind::Step, &payload)?;
+        drop(payload);
+        let shard_outs: Vec<ShardOut> = coord
+            .collect(FrameKind::ShardOut)?
+            .iter()
+            .map(|b| ShardOut::deserialize(b).context("decode ShardOut frame"))
+            .collect::<Result<_>>()?;
+
+        // ---- barrier: identical accumulation, reductions, broadcast
+        // ---- accounting, and history folds as the in-process engine.
+        let t_merge = Instant::now();
+        let mut st = StepStats { step, ..Default::default() };
+        let (merged_odags, step_pattern_aggs, step_int_aggs, merged_list) =
+            coord.merge_shard_outs(cfg, &mut st, shard_outs, &mut processed_total);
+
+        let (new_pat_history, pat_bytes, c_hp) =
+            fold_broadcast(std::mem::take(&mut pattern_history), &step_pattern_aggs, |k: &Pattern| {
+                k.byte_size()
+            });
+        let (new_int_history, int_bytes, c_hi) =
+            fold_broadcast(std::mem::take(&mut int_history), &step_int_aggs, |_: &i64| 8);
+        pattern_history = new_pat_history;
+        int_history = new_int_history;
+        st.merge_cpu += c_hp + c_hi;
+        st.merge_critical += c_hp + c_hi;
+        st.phases.add(Phase::Merge, st.merge_cpu);
+
+        st.comm.add(
+            (step_pattern_aggs.len() + step_int_aggs.len()) as u64 * (cfg.servers as u64 - 1),
+            (pat_bytes + int_bytes) * (cfg.servers as u64 - 1),
+        );
+        prev_pattern_aggs = step_pattern_aggs;
+        prev_int_aggs = step_int_aggs;
+
+        frontier = if cfg.use_odag {
+            st.frontier_bytes = merged_odags.byte_size() as u64;
+            st.comm.add(
+                merged_odags.by_pattern.len() as u64 * (cfg.servers as u64 - 1),
+                st.frontier_bytes * (cfg.servers as u64 - 1),
+            );
+            CoordFrontier::Odag(merged_odags)
+        } else {
+            st.frontier_bytes = st.list_bytes;
+            st.comm.add(
+                (!merged_list.is_empty()) as u64 * (cfg.servers as u64 - 1),
+                st.frontier_bytes * (cfg.servers as u64 - 1),
+            );
+            CoordFrontier::List(merged_list)
+        };
+
+        // Measured transport: everything this step put on the sockets
+        // (Step broadcast out, ShardOut frames in), header included.
+        st.comm.add_wire(coord.wire.total() - wire0);
+
+        peak_frontier_bytes = peak_frontier_bytes.max(st.frontier_bytes);
+        candidates_total += st.candidates;
+        steals_total += st.steals;
+        stolen_units_total += st.stolen_units;
+        pattern_rescans_total += st.pattern_rescans;
+        root_descents_total += st.root_descents;
+        comm_total.merge(&st.comm);
+        phases_total.merge(&st.phases);
+        st.merge_wall = t_merge.elapsed();
+        st.sim_wall = st.busy_max + st.merge_critical;
+        st.wall = t_step.elapsed();
+        steps.push(st);
+        step += 1;
+    }
+
+    // ---- end of computation: collect output aggregation + counters.
+    let wire_finish0 = coord.wire.total();
+    coord.broadcast(FrameKind::Finish, &[])?;
+    let finals: Vec<FinalOut> = coord
+        .collect(FrameKind::FinalOut)?
+        .iter()
+        .map(|b| FinalOut::deserialize(b).context("decode FinalOut frame"))
+        .collect::<Result<_>>()?;
+    let mut agg_stats = AggStats::default();
+    let mut shard_outputs = 0u64;
+    let mut out_parts = Vec::with_capacity(shards);
+    for f in finals {
+        agg_stats.mapped += f.mapped;
+        agg_stats.canonize_calls += f.canonize_calls;
+        agg_stats.quick_patterns += f.quick_patterns;
+        shard_outputs += f.outputs;
+        out_parts.push(f.output_part);
+    }
+    comm_total.add_wire(coord.wire.total() - wire_finish0);
+    let pattern_output = agg::merge_global(out_parts);
+
+    procs.join()?;
+
+    let aggregates = RunAggregates { pattern_history, pattern_output, int_history };
+    app.report(g, &aggregates, sink.as_ref());
+    sink.finish()?;
+
+    let canonical_patterns =
+        aggregates.pattern_history.len().max(aggregates.pattern_output.len()) as u64;
+    let sim_wall = steps.iter().map(|s| s.sim_wall).sum();
+    Ok(RunResult {
+        steps,
+        wall: t_run.elapsed(),
+        sim_wall,
+        num_outputs: shard_outputs + sink.count(),
+        processed: processed_total,
+        candidates: candidates_total,
+        steals: steals_total,
+        stolen_units: stolen_units_total,
+        pattern_rescans: pattern_rescans_total,
+        root_descents: root_descents_total,
+        comm: comm_total,
+        phases: phases_total,
+        agg_stats,
+        canonical_patterns,
+        peak_frontier_bytes,
+        aggregates,
+    })
+}
+
+/// Delete-on-drop guard for the temp graph file.
+struct TempFile(PathBuf);
+
+impl Drop for TempFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+/// Build each shard's argv from the run configuration and launch it.
+fn spawn_shards(
+    exe: &Path,
+    cfg: &Config,
+    spec: &AppSpec,
+    addr: &str,
+    graph_path: &Path,
+) -> Result<ShardProcs> {
+    let mut children = Vec::with_capacity(cfg.servers);
+    for k in 0..cfg.servers {
+        let mut cmd = Command::new(exe);
+        cmd.arg("shard")
+            .arg("--shard-id")
+            .arg(k.to_string())
+            .arg("--shards")
+            .arg(cfg.servers.to_string())
+            .arg("--threads")
+            .arg(cfg.threads_per_server.to_string())
+            .arg("--block")
+            .arg(cfg.block.to_string())
+            .arg("--connect")
+            .arg(addr)
+            .arg("--graph")
+            .arg(graph_path);
+        if !cfg.use_odag {
+            cmd.arg("--no-odag");
+        }
+        if !cfg.two_level_agg {
+            cmd.arg("--one-level");
+        }
+        if let Partition::Skewed(pct) = cfg.partition {
+            cmd.arg("--skew").arg(pct.to_string());
+        }
+        cmd.args(spec.to_args());
+        cmd.stdin(Stdio::null());
+        let child = cmd.spawn().with_context(|| format!("spawn shard {k} from {exe:?}"))?;
+        children.push(child);
+    }
+    Ok(ShardProcs { children })
+}
+
+/// Accept one connection per shard and slot it by the shard id in its
+/// `Hello` — arrival order is whatever the OS scheduler makes it.
+fn accept_shards(listener: &TcpListener, shards: usize) -> Result<Coordinator> {
+    let wire = WireCounter::new();
+    let mut slots: Vec<Option<TcpStream>> = (0..shards).map(|_| None).collect();
+    for _ in 0..shards {
+        let (mut stream, _) = listener.accept().context("accept shard connection")?;
+        stream.set_nodelay(true).context("set TCP_NODELAY")?;
+        let hello = expect_frame(&mut stream, FrameKind::Hello, &wire)?;
+        let id = wire::get_hello(&hello).context("decode Hello frame")?;
+        if id >= shards {
+            bail!("shard announced out-of-range id {id} (expected < {shards})");
+        }
+        if slots[id].is_some() {
+            bail!("two shards announced id {id}");
+        }
+        slots[id] = Some(stream);
+    }
+    let streams = slots
+        .into_iter()
+        .enumerate()
+        .map(|(k, s)| s.with_context(|| format!("shard {k} never connected")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Coordinator { streams, wire })
+}

@@ -1,0 +1,275 @@
+//! Length-prefixed frames over byte streams — the unit of every
+//! coordinator↔shard exchange.
+//!
+//! Wire layout (little-endian, fixed 5-byte header):
+//!
+//! ```text
+//! [u32 payload_len][u8 kind][payload bytes...]
+//! ```
+//!
+//! The functions are generic over `std::io::{Read, Write}`, so the same
+//! decode path runs against a `TcpStream` in production and an
+//! `std::io::Cursor` in the hostile-bytes tests. Every header defect —
+//! truncation, an unknown kind byte, a length prefix past [`MAX_FRAME`]
+//! — surfaces as a [`CodecError`] value before any allocation is sized
+//! by it; a decode path that panics on attacker-controlled bytes would
+//! fail the `codec_hostile_bytes_*` suite.
+//!
+//! Measured traffic: both send and receive add the full on-the-wire
+//! size (header + payload) to a shared [`WireCounter`], which the
+//! coordinator drains into [`CommStats::wire_bytes`] each superstep so
+//! the measured transport cost sits next to the simulated §4.3 model.
+//!
+//! [`CommStats::wire_bytes`]: crate::stats::CommStats
+
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::codec::CodecError;
+use crate::util::err::{Context, Result};
+
+/// Sanity bound on a frame's payload length. Anything larger is corrupt
+/// or adversarial — no superstep payload on the graphs this testbed can
+/// hold comes near 1 GiB.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Bytes of the fixed frame header (`u32` length + `u8` kind).
+pub const HEADER_BYTES: u64 = 5;
+
+/// Every message kind of the coordinator↔shard protocol, in protocol
+/// order. Tags are dense from 0 (decoded via the same guard as
+/// `Reader::get_tag`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Shard → coordinator, once after connecting: identifies the shard.
+    Hello,
+    /// Coordinator → shards, once per superstep: the frontier and the
+    /// previous step's merged aggregates.
+    Step,
+    /// Shard → coordinator, once per superstep: the shard's pre-merged
+    /// worker outputs.
+    ShardOut,
+    /// Coordinator → shards: the run is over, flush and report.
+    Finish,
+    /// Shard → coordinator, once at the end: output aggregation part,
+    /// sink count, and aggregation statistics.
+    FinalOut,
+}
+
+impl FrameKind {
+    const COUNT: u8 = 5;
+
+    fn tag(self) -> u8 {
+        match self {
+            FrameKind::Hello => 0,
+            FrameKind::Step => 1,
+            FrameKind::ShardOut => 2,
+            FrameKind::Finish => 3,
+            FrameKind::FinalOut => 4,
+        }
+    }
+
+    fn from_tag(t: u8, at: usize) -> Result<FrameKind, CodecError> {
+        match t {
+            0 => Ok(FrameKind::Hello),
+            1 => Ok(FrameKind::Step),
+            2 => Ok(FrameKind::ShardOut),
+            3 => Ok(FrameKind::Finish),
+            4 => Ok(FrameKind::FinalOut),
+            _ => Err(CodecError::BadTag { at, tag: t, what: "frame kind" }),
+        }
+    }
+}
+
+/// Shared measured-traffic counter: every byte a frame puts on (or takes
+/// off) a stream, header included. One counter serves all of a
+/// process's streams, so it is atomic; precision of *when* a byte is
+/// counted does not matter, only the per-step total, hence Relaxed.
+#[derive(Default)]
+pub struct WireCounter(AtomicU64);
+
+impl WireCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn add(&self, bytes: u64) {
+        // ordering: pure statistics counter — no other memory is
+        // published through it, so Relaxed suffices.
+        self.0.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Total bytes recorded so far.
+    pub fn total(&self) -> u64 {
+        // ordering: reader only needs an eventually-consistent total;
+        // Relaxed matches the increments.
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Decode and validate the fixed 5-byte header. Pure — the hostile-bytes
+/// tests drive it directly with corrupted headers.
+pub fn decode_header(h: [u8; HEADER_BYTES as usize]) -> Result<(FrameKind, usize), CodecError> {
+    // lint:allow(no-unwrap) — 4-byte slice of a 5-byte array, infallible.
+    let len = u32::from_le_bytes(h[..4].try_into().unwrap());
+    if len > MAX_FRAME {
+        return Err(CodecError::Oversized { at: 0, len: len as u64, max: MAX_FRAME as u64 });
+    }
+    let kind = FrameKind::from_tag(h[4], 4)?;
+    Ok((kind, len as usize))
+}
+
+/// Write one frame and count its on-the-wire bytes.
+pub fn send_frame(
+    w: &mut impl Write,
+    kind: FrameKind,
+    payload: &[u8],
+    wire: &WireCounter,
+) -> Result<()> {
+    if payload.len() as u64 > MAX_FRAME as u64 {
+        return Err(crate::util::err::Error::msg(format!(
+            "refusing to send a {}-byte frame (max {MAX_FRAME})",
+            payload.len()
+        )));
+    }
+    let mut header = [0u8; HEADER_BYTES as usize];
+    header[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[4] = kind.tag();
+    w.write_all(&header).context("write frame header")?;
+    w.write_all(payload).context("write frame payload")?;
+    w.flush().context("flush frame")?;
+    wire.add(HEADER_BYTES + payload.len() as u64);
+    Ok(())
+}
+
+/// Read one frame: header, validation, then exactly `len` payload bytes.
+/// Header defects come back as [`CodecError`] values (via the blanket
+/// error conversion); a short stream surfaces as the underlying io
+/// error. Nothing panics on hostile input.
+pub fn recv_frame(r: &mut impl Read, wire: &WireCounter) -> Result<(FrameKind, Vec<u8>)> {
+    let mut header = [0u8; HEADER_BYTES as usize];
+    r.read_exact(&mut header).context("read frame header")?;
+    let (kind, len) = decode_header(header)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("read frame payload")?;
+    wire.add(HEADER_BYTES + len as u64);
+    Ok((kind, payload))
+}
+
+/// Read one frame and fail unless it is of `want` kind — the lockstep
+/// protocol knows exactly what must arrive next at every point.
+pub fn expect_frame(r: &mut impl Read, want: FrameKind, wire: &WireCounter) -> Result<Vec<u8>> {
+    let (kind, payload) = recv_frame(r, wire)?;
+    if kind != want {
+        return Err(crate::util::err::Error::msg(format!(
+            "protocol violation: expected {want:?} frame, got {kind:?}"
+        )));
+    }
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(kind: FrameKind, payload: &[u8]) -> (FrameKind, Vec<u8>, u64) {
+        let wire = WireCounter::new();
+        let mut buf = Vec::new();
+        send_frame(&mut buf, kind, payload, &wire).unwrap();
+        let sent = wire.total();
+        let (k, p) = recv_frame(&mut Cursor::new(&buf), &wire).unwrap();
+        assert_eq!(wire.total(), 2 * sent, "recv counts the same bytes");
+        (k, p, sent)
+    }
+
+    #[test]
+    fn frames_roundtrip_all_kinds() {
+        for (kind, payload) in [
+            (FrameKind::Hello, &b"\x01\x00\x00\x00"[..]),
+            (FrameKind::Step, &b""[..]),
+            (FrameKind::ShardOut, &[0xAB; 100][..]),
+            (FrameKind::Finish, &b""[..]),
+            (FrameKind::FinalOut, &[7u8, 8, 9][..]),
+        ] {
+            let (k, p, sent) = roundtrip(kind, payload);
+            assert_eq!(k, kind);
+            assert_eq!(p, payload);
+            assert_eq!(sent, HEADER_BYTES + payload.len() as u64);
+        }
+    }
+
+    #[test]
+    fn header_rejects_unknown_kind() {
+        let mut h = [0u8; 5];
+        h[4] = FrameKind::COUNT; // first invalid tag
+        assert_eq!(
+            decode_header(h),
+            Err(CodecError::BadTag { at: 4, tag: FrameKind::COUNT, what: "frame kind" })
+        );
+        h[4] = 0xFF;
+        assert!(decode_header(h).is_err());
+    }
+
+    #[test]
+    fn header_rejects_oversized_length() {
+        let mut h = [0u8; 5];
+        h[..4].copy_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        assert_eq!(
+            decode_header(h),
+            Err(CodecError::Oversized {
+                at: 0,
+                len: (MAX_FRAME + 1) as u64,
+                max: MAX_FRAME as u64
+            })
+        );
+        // The bound itself is fine.
+        h[..4].copy_from_slice(&MAX_FRAME.to_le_bytes());
+        assert!(decode_header(h).is_ok());
+    }
+
+    #[test]
+    fn truncated_streams_error_not_panic() {
+        let wire = WireCounter::new();
+        let mut buf = Vec::new();
+        send_frame(&mut buf, FrameKind::ShardOut, &[1, 2, 3, 4, 5, 6], &wire).unwrap();
+        for cut in 0..buf.len() {
+            let got = recv_frame(&mut Cursor::new(&buf[..cut]), &wire);
+            assert!(got.is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn bit_flipped_headers_never_panic() {
+        let wire = WireCounter::new();
+        let mut buf = Vec::new();
+        send_frame(&mut buf, FrameKind::Step, &[9; 16], &wire).unwrap();
+        for byte in 0..5 {
+            for bit in 0..8 {
+                let mut evil = buf.clone();
+                evil[byte] ^= 1 << bit;
+                // Must return (any) error or a decoded frame — the point
+                // is that no corruption can panic or over-allocate.
+                let _ = recv_frame(&mut Cursor::new(&evil), &wire);
+            }
+        }
+    }
+
+    #[test]
+    fn expect_frame_enforces_kind() {
+        let wire = WireCounter::new();
+        let mut buf = Vec::new();
+        send_frame(&mut buf, FrameKind::Finish, &[], &wire).unwrap();
+        assert!(expect_frame(&mut Cursor::new(&buf), FrameKind::Step, &wire).is_err());
+        assert!(expect_frame(&mut Cursor::new(&buf), FrameKind::Finish, &wire).is_ok());
+    }
+
+    #[test]
+    fn wire_counter_accumulates_across_frames() {
+        let wire = WireCounter::new();
+        let mut buf = Vec::new();
+        send_frame(&mut buf, FrameKind::Hello, &[0; 11], &wire).unwrap();
+        send_frame(&mut buf, FrameKind::Finish, &[], &wire).unwrap();
+        assert_eq!(wire.total(), (HEADER_BYTES + 11) + HEADER_BYTES);
+    }
+}

@@ -1,0 +1,173 @@
+//! Distributed execution over real TCP (`std::net` only).
+//!
+//! The in-process engine simulates the paper's cluster inside one
+//! address space; this module runs the *same* superstep across `N` OS
+//! processes. A coordinator ([`coordinator::run_distributed`]) spawns
+//! one shard process per simulated server, each shard
+//! ([`shard::run_shard`]) owns worker ids `K*T .. (K+1)*T` and runs the
+//! unmodified `engine::worker::run_step` over its share of the global
+//! chunk ledger, and every cross-process exchange travels as a
+//! length-prefixed frame ([`frame`]) of deterministic wire bytes
+//! ([`wire`]).
+//!
+//! The governing invariant — pinned by `rust/tests/distributed.rs` and
+//! a blocking CI smoke step — is that a distributed run is
+//! **bit-identical** to the single-process run with the same `Config`:
+//! same pattern counts, same aggregation maps, same per-step simulated
+//! comm totals. See `ARCHITECTURE.md` § "Distributed execution".
+
+pub mod coordinator;
+pub mod frame;
+pub mod shard;
+pub mod wire;
+
+pub use coordinator::run_distributed;
+pub use shard::run_shard;
+
+use crate::api::GraphMiningApp;
+use crate::apps::{Cliques, Fsm, MaximalCliques, Motifs};
+use crate::bail;
+use crate::util::cli::Args;
+use crate::util::err::{Context, Result};
+
+/// A mining application as data: parsed once from the CLI, shipped to
+/// shard processes as argv, rebuilt identically on both sides. (Apps
+/// themselves are not serializable — they carry closures of behavior —
+/// so the spec is the wire form.)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AppSpec {
+    Motifs(usize),
+    Cliques(usize),
+    MaximalCliques(usize),
+    Fsm { support: usize, max_edges: Option<usize> },
+}
+
+impl AppSpec {
+    /// Parse `--app` + its parameters — the same defaults as `cmd_run`.
+    pub fn from_args(args: &Args) -> Result<AppSpec> {
+        let support = args.get_usize("support", 300)?;
+        Ok(match args.get("app").context("--app is required")? {
+            "fsm" => {
+                let max_edges = match args.get("max-size") {
+                    Some(ms) => {
+                        Some(ms.parse().with_context(|| format!("parse --max-size {ms:?}"))?)
+                    }
+                    None => None,
+                };
+                AppSpec::Fsm { support, max_edges }
+            }
+            "motifs" => AppSpec::Motifs(args.get_usize("max-size", 3)?),
+            "cliques" => AppSpec::Cliques(args.get_usize("max-size", 4)?),
+            "maximal-cliques" => AppSpec::MaximalCliques(args.get_usize("max-size", 5)?),
+            other => bail!("unknown app {other:?}"),
+        })
+    }
+
+    /// The argv fragment that makes [`AppSpec::from_args`] on the shard
+    /// side reproduce this spec.
+    pub fn to_args(&self) -> Vec<String> {
+        let arg = |k: &str, v: usize| vec![format!("--{k}"), v.to_string()];
+        match self {
+            AppSpec::Motifs(k) => {
+                let mut v = vec!["--app".into(), "motifs".into()];
+                v.extend(arg("max-size", *k));
+                v
+            }
+            AppSpec::Cliques(k) => {
+                let mut v = vec!["--app".into(), "cliques".into()];
+                v.extend(arg("max-size", *k));
+                v
+            }
+            AppSpec::MaximalCliques(k) => {
+                let mut v = vec!["--app".into(), "maximal-cliques".into()];
+                v.extend(arg("max-size", *k));
+                v
+            }
+            AppSpec::Fsm { support, max_edges } => {
+                let mut v = vec!["--app".into(), "fsm".into()];
+                v.extend(arg("support", *support));
+                if let Some(me) = max_edges {
+                    v.extend(arg("max-size", *me));
+                }
+                v
+            }
+        }
+    }
+
+    /// Whether `cmd_run` strips vertex labels for this app by default
+    /// (motifs and cliques are purely structural). Kept here so the
+    /// coordinator path and the in-process path can never disagree.
+    pub fn strips_labels(&self) -> bool {
+        !matches!(self, AppSpec::Fsm { .. })
+    }
+
+    /// Instantiate the application.
+    pub fn build(&self) -> Box<dyn GraphMiningApp> {
+        match self {
+            AppSpec::Motifs(k) => Box::new(Motifs::new(*k)),
+            AppSpec::Cliques(k) => Box::new(Cliques::new(*k)),
+            AppSpec::MaximalCliques(k) => Box::new(MaximalCliques::new(*k)),
+            AppSpec::Fsm { support, max_edges } => {
+                let mut fsm = Fsm::new(*support);
+                if let Some(me) = max_edges {
+                    fsm = fsm.with_max_edges(*me);
+                }
+                Box::new(fsm)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        let raw: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        Args::parse(raw, &[]).unwrap()
+    }
+
+    #[test]
+    fn spec_roundtrips_through_argv() {
+        for spec in [
+            AppSpec::Motifs(3),
+            AppSpec::Cliques(4),
+            AppSpec::MaximalCliques(5),
+            AppSpec::Fsm { support: 300, max_edges: None },
+            AppSpec::Fsm { support: 7, max_edges: Some(2) },
+        ] {
+            let argv = spec.to_args();
+            let refs: Vec<&str> = argv.iter().map(String::as_str).collect();
+            let back = AppSpec::from_args(&parse(&refs)).unwrap();
+            assert_eq!(back, spec, "argv {argv:?}");
+        }
+    }
+
+    #[test]
+    fn from_args_uses_cmd_run_defaults() {
+        assert_eq!(AppSpec::from_args(&parse(&["--app", "motifs"])).unwrap(), AppSpec::Motifs(3));
+        assert_eq!(AppSpec::from_args(&parse(&["--app", "cliques"])).unwrap(), AppSpec::Cliques(4));
+        assert_eq!(
+            AppSpec::from_args(&parse(&["--app", "maximal-cliques"])).unwrap(),
+            AppSpec::MaximalCliques(5)
+        );
+        assert_eq!(
+            AppSpec::from_args(&parse(&["--app", "fsm"])).unwrap(),
+            AppSpec::Fsm { support: 300, max_edges: None }
+        );
+    }
+
+    #[test]
+    fn from_args_rejects_unknown_or_missing_app() {
+        assert!(AppSpec::from_args(&parse(&["--app", "nope"])).is_err());
+        assert!(AppSpec::from_args(&parse(&[])).is_err());
+    }
+
+    #[test]
+    fn label_stripping_matches_cmd_run() {
+        assert!(AppSpec::Motifs(3).strips_labels());
+        assert!(AppSpec::Cliques(4).strips_labels());
+        assert!(AppSpec::MaximalCliques(5).strips_labels());
+        assert!(!AppSpec::Fsm { support: 1, max_edges: None }.strips_labels());
+    }
+}

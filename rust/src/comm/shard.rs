@@ -1,0 +1,183 @@
+//! The shard worker process: one TCP connection, a lockstep loop of
+//! `Step` frames in and `ShardOut` frames out.
+//!
+//! A shard is the distributed engine's unit of placement: shard `K` of
+//! `N` owns worker ids `K*T .. (K+1)*T` (with `T = threads_per_server`)
+//! and builds the **full** global chunk ledger every step — the same
+//! `ChunkQueues::new(total_units, block, N*T, partition, false)` the
+//! in-process engine builds — then runs only its own `T` workers over
+//! it. With stealing disabled a worker drains exactly its own queue, so
+//! the shard computes precisely the in-process run's share for those
+//! worker ids and nothing else: no index is processed twice across
+//! shards, none is dropped, and every per-worker counter matches the
+//! single-process reference bit-for-bit (`rust/tests/distributed.rs`).
+//!
+//! Extraction plans are rebuilt locally from the broadcast ODAG store —
+//! plan construction is deterministic, so shipping the store (which the
+//! paper's broadcast does anyway) is enough. Worker state (aggregator
+//! caches, scratch embeddings) persists across steps exactly as the
+//! in-process engine's per-worker state does.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::agg::{self, AggVal};
+use crate::api::GraphMiningApp;
+use crate::bail;
+use crate::embedding;
+use crate::engine::{worker, ChunkQueues, Config, Frontier};
+use crate::graph::LabeledGraph;
+use crate::odag::ExtractionPlan;
+use crate::output::{CountingSink, OutputSink};
+use crate::pattern::Pattern;
+use crate::util::err::{Context, Result};
+
+use super::frame::{recv_frame, send_frame, FrameKind, WireCounter};
+use super::wire::{self, FinalOut, ShardOut, StepMsg, WireFrontier};
+
+/// Connect to the coordinator with a short retry window (the coordinator
+/// binds its listener before spawning shards, but process startup can
+/// still race the accept loop under load).
+fn connect_with_retry(addr: &str) -> Result<TcpStream> {
+    let mut last_err = None;
+    for _ in 0..50 {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+    match last_err {
+        Some(e) => Err(e).with_context(|| format!("connect to coordinator {addr}")),
+        None => bail!("connect to coordinator {addr}: no attempt made"),
+    }
+}
+
+/// Run shard `shard_id` of `cfg.servers` against the coordinator at
+/// `connect`, to completion. Blocks until the coordinator sends
+/// `Finish`; returns once the `FinalOut` reply is on the wire.
+pub fn run_shard(
+    connect: &str,
+    shard_id: usize,
+    cfg: &Config,
+    g: &LabeledGraph,
+    app: &dyn GraphMiningApp,
+) -> Result<()> {
+    if cfg.steal {
+        // A thief would claim chunks owned by workers that live in
+        // *other processes* — double-processing their share. The
+        // coordinator CLI forces this off; double-check here.
+        bail!("distributed shards require steal=false");
+    }
+    if shard_id >= cfg.servers {
+        bail!("shard id {shard_id} out of range for {} shards", cfg.servers);
+    }
+    let t_per = cfg.threads_per_server;
+    let mut stream = connect_with_retry(connect)?;
+    stream.set_nodelay(true).context("set TCP_NODELAY")?;
+    let wire_counter = WireCounter::new();
+    send_frame(&mut stream, FrameKind::Hello, &wire::put_hello(shard_id), &wire_counter)?;
+
+    let mut states: Vec<worker::WorkerState> =
+        (0..t_per).map(|_| worker::WorkerState::new(cfg.two_level_agg)).collect();
+    let sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
+
+    loop {
+        let (kind, payload) = recv_frame(&mut stream, &wire_counter)?;
+        match kind {
+            FrameKind::Step => {
+                let msg = StepMsg::deserialize(&payload).context("decode Step frame")?;
+                let out = run_one_step(shard_id, cfg, g, app, &mut states, sink.as_ref(), &msg);
+                send_frame(&mut stream, FrameKind::ShardOut, &out.serialize(), &wire_counter)?;
+            }
+            FrameKind::Finish => {
+                let mut out_parts = Vec::with_capacity(t_per);
+                let mut mapped = 0u64;
+                let mut canonize_calls = 0u64;
+                let mut quick_patterns = 0u64;
+                for s in &mut states {
+                    out_parts.push(s.output_agg.flush());
+                    mapped += s.pattern_agg.stats.mapped + s.output_agg.stats.mapped;
+                    canonize_calls +=
+                        s.pattern_agg.stats.canonize_calls + s.output_agg.stats.canonize_calls;
+                    quick_patterns +=
+                        s.pattern_agg.stats.quick_patterns + s.output_agg.stats.quick_patterns;
+                }
+                let fin = FinalOut {
+                    output_part: agg::merge_global(out_parts),
+                    outputs: sink.count(),
+                    mapped,
+                    canonize_calls,
+                    quick_patterns,
+                };
+                send_frame(&mut stream, FrameKind::FinalOut, &fin.serialize(), &wire_counter)?;
+                return Ok(());
+            }
+            other => bail!("protocol violation: shard got unexpected {other:?} frame"),
+        }
+    }
+}
+
+/// Execute one superstep's share: rebuild the frontier representation
+/// from the wire form, build the full global ledger, and run this
+/// shard's workers with their **global** worker ids
+/// `shard_id*T .. (shard_id+1)*T`.
+fn run_one_step(
+    shard_id: usize,
+    cfg: &Config,
+    g: &LabeledGraph,
+    app: &dyn GraphMiningApp,
+    states: &mut [worker::WorkerState],
+    sink: &dyn OutputSink,
+    msg: &StepMsg,
+) -> ShardOut {
+    let w = cfg.workers();
+    let (frontier, init_words): (Frontier, Option<Vec<u32>>) = match &msg.frontier {
+        WireFrontier::Init => {
+            (Frontier::Init, Some(embedding::initial_candidates(g, app.mode())))
+        }
+        WireFrontier::List(list) => (Frontier::List(list.clone()), None),
+        WireFrontier::Odag(store) => {
+            let plan = ExtractionPlan::build(store);
+            (Frontier::Odag(store.clone(), plan), None)
+        }
+    };
+    let total_units: u64 = match &frontier {
+        Frontier::Init => init_words.as_ref().map_or(0, |v| v.len() as u64),
+        Frontier::List(v) => v.len() as u64,
+        Frontier::Odag(_, plan) => plan.total(),
+    };
+    let queues = ChunkQueues::new(total_units, cfg.block, w, cfg.partition, false);
+    let step = msg.step as usize;
+    let prev_p: &HashMap<Pattern, AggVal> = &msg.prev_pattern_aggs;
+    let prev_i: &HashMap<i64, AggVal> = &msg.prev_int_aggs;
+    let base = shard_id * cfg.threads_per_server;
+
+    let outs: Vec<worker::WorkerOut> = std::thread::scope(|scope| {
+        let frontier = &frontier;
+        let queues = &queues;
+        let init = init_words.as_deref();
+        let handles: Vec<_> = states
+            .iter_mut()
+            .enumerate()
+            .map(|(t, state)| {
+                scope.spawn(move || {
+                    worker::run_step(
+                        base + t, cfg, g, app, frontier, init, queues, prev_p, prev_i,
+                        state, sink, step,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            // lint:allow(no-unwrap) — join only errs if the child panicked; propagate it.
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect()
+    });
+    ShardOut::from_worker_outs(cfg.use_odag, outs)
+}

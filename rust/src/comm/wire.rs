@@ -1,0 +1,671 @@
+//! Payload codecs for every frame of the coordinator↔shard protocol.
+//!
+//! All composite payloads serialize **deterministically**: maps are
+//! written in sorted key order, ODAG stores in sorted pattern order, and
+//! domain values as sorted vertex lists — a merged value produces
+//! identical bytes no matter which side of the wire (or which merge
+//! order) built it, which is what lets the conformance suite compare
+//! distributed and local runs bit-for-bit.
+//!
+//! Every decoder returns [`CodecError`] on hostile bytes — truncated
+//! buffers, bit-flipped tags, oversized count prefixes — and sizes no
+//! allocation from an unvalidated count (`Reader::get_count` bounds
+//! each one by the bytes actually remaining).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::agg::{AggVal, DomainSupport};
+use crate::engine::worker::WorkerOut;
+use crate::odag::OdagStore;
+use crate::pattern::Pattern;
+use crate::stats::PhaseTimes;
+use crate::util::codec::{CodecError, Reader, Writer};
+
+// ---------------------------------------------------------------- AggVal
+
+/// Tag 0 = `Long` (i64 as two's-complement u64), tag 1 = `Domain`.
+pub fn put_agg_val(w: &mut Writer, v: &AggVal) {
+    match v {
+        AggVal::Long(x) => {
+            w.put_u8(0);
+            w.put_u64(*x as u64);
+        }
+        AggVal::Domain(d) => {
+            w.put_u8(1);
+            d.serialize(w);
+        }
+    }
+}
+
+pub fn get_agg_val(r: &mut Reader) -> Result<AggVal, CodecError> {
+    match r.get_tag(2, "agg value")? {
+        0 => Ok(AggVal::Long(r.get_u64()? as i64)),
+        _ => Ok(AggVal::Domain(DomainSupport::deserialize(r)?)),
+    }
+}
+
+// ------------------------------------------------------- aggregation maps
+
+/// Pattern-keyed map in sorted key order (deterministic bytes).
+pub fn put_pattern_map(w: &mut Writer, m: &HashMap<Pattern, AggVal>) {
+    let mut keys: Vec<&Pattern> = m.keys().collect();
+    keys.sort_unstable();
+    w.put_u32(keys.len() as u32);
+    for k in keys {
+        k.serialize(w);
+        put_agg_val(w, &m[k]);
+    }
+}
+
+pub fn get_pattern_map(r: &mut Reader) -> Result<HashMap<Pattern, AggVal>, CodecError> {
+    // Every entry costs at least a 2-byte pattern header + a 1-byte
+    // value tag; a count the remaining bytes cannot hold is corrupt.
+    let n = r.get_count(r.remaining() as u64 / 3)?;
+    let mut m = HashMap::with_capacity(n);
+    for _ in 0..n {
+        let k = Pattern::deserialize(r)?;
+        let v = get_agg_val(r)?;
+        m.insert(k, v);
+    }
+    Ok(m)
+}
+
+/// Integer-keyed map in sorted key order.
+pub fn put_int_map(w: &mut Writer, m: &HashMap<i64, AggVal>) {
+    let mut keys: Vec<i64> = m.keys().copied().collect();
+    keys.sort_unstable();
+    w.put_u32(keys.len() as u32);
+    for k in keys {
+        w.put_u64(k as u64);
+        put_agg_val(w, &m[&k]);
+    }
+}
+
+pub fn get_int_map(r: &mut Reader) -> Result<HashMap<i64, AggVal>, CodecError> {
+    // At least 8 key bytes + 1 value tag byte per entry.
+    let n = r.get_count(r.remaining() as u64 / 9)?;
+    let mut m = HashMap::with_capacity(n);
+    for _ in 0..n {
+        let k = r.get_u64()? as i64;
+        let v = get_agg_val(r)?;
+        m.insert(k, v);
+    }
+    Ok(m)
+}
+
+// ------------------------------------------------------- embedding lists
+
+pub fn put_embedding_list(w: &mut Writer, list: &[Vec<u32>]) {
+    w.put_u32(list.len() as u32);
+    for e in list {
+        w.put_u32_slice(e);
+    }
+}
+
+pub fn get_embedding_list(r: &mut Reader) -> Result<Vec<Vec<u32>>, CodecError> {
+    // Every embedding costs at least its own 4-byte length prefix.
+    let n = r.get_count(r.remaining() as u64 / 4)?;
+    let mut list = Vec::with_capacity(n);
+    for _ in 0..n {
+        list.push(r.get_u32_vec()?);
+    }
+    Ok(list)
+}
+
+// ------------------------------------------------------------- frontier
+
+/// The frontier as shipped to shards. The coordinator never sends an
+/// [`crate::engine::Frontier`] directly: shards rebuild the extraction
+/// plan locally (plan construction is deterministic, so every shard and
+/// the in-process reference derive the identical plan), and the Init
+/// frontier is recomputed from the graph on each side.
+pub enum WireFrontier {
+    Init,
+    List(Vec<Vec<u32>>),
+    Odag(OdagStore),
+}
+
+pub fn put_frontier(w: &mut Writer, f: &WireFrontier) {
+    match f {
+        WireFrontier::Init => w.put_u8(0),
+        WireFrontier::List(list) => {
+            w.put_u8(1);
+            put_embedding_list(w, list);
+        }
+        WireFrontier::Odag(store) => {
+            w.put_u8(2);
+            store.serialize(w);
+        }
+    }
+}
+
+pub fn get_frontier(r: &mut Reader) -> Result<WireFrontier, CodecError> {
+    match r.get_tag(3, "frontier kind")? {
+        0 => Ok(WireFrontier::Init),
+        1 => Ok(WireFrontier::List(get_embedding_list(r)?)),
+        _ => Ok(WireFrontier::Odag(OdagStore::deserialize(r)?)),
+    }
+}
+
+// -------------------------------------------------------------- StepMsg
+
+/// Coordinator → shard, one per superstep: everything a shard needs to
+/// run its share and nothing else (graph and config ship once, at spawn).
+pub struct StepMsg {
+    pub step: u64,
+    pub frontier: WireFrontier,
+    /// Previous step's merged pattern aggregates (read side of BSP).
+    pub prev_pattern_aggs: HashMap<Pattern, AggVal>,
+    pub prev_int_aggs: HashMap<i64, AggVal>,
+}
+
+impl StepMsg {
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u64(self.step);
+        put_frontier(&mut w, &self.frontier);
+        put_pattern_map(&mut w, &self.prev_pattern_aggs);
+        put_int_map(&mut w, &self.prev_int_aggs);
+        w.into_bytes()
+    }
+
+    pub fn deserialize(bytes: &[u8]) -> Result<StepMsg, CodecError> {
+        let mut r = Reader::new(bytes);
+        Ok(StepMsg {
+            step: r.get_u64()?,
+            frontier: get_frontier(&mut r)?,
+            prev_pattern_aggs: get_pattern_map(&mut r)?,
+            prev_int_aggs: get_int_map(&mut r)?,
+        })
+    }
+}
+
+// ------------------------------------------------------------- ShardOut
+
+/// One shard's barrier contribution: its `threads_per_server` worker
+/// outputs pre-merged shard-side (every merge below is commutative and
+/// associative, so shard-level pre-merge followed by the coordinator's
+/// cross-shard merge is value-identical to the in-process engine's flat
+/// merge over all workers — the conformance suite pins this).
+///
+/// Durations cross the wire as nanosecond counters ([`PhaseTimes::nanos`]
+/// layout for phases); `shuffle_*` is the simulated §4.3 model computed
+/// worker-side — measured socket bytes are counted by the coordinator's
+/// own [`super::frame::WireCounter`], never shipped (a shard reporting
+/// its socket bytes would double-count the same frames).
+pub struct ShardOut {
+    pub frontier_list: Vec<Vec<u32>>,
+    pub frontier_odag: OdagStore,
+    pub frontier_added: u64,
+    pub list_bytes: u64,
+    pub pattern_part: HashMap<Pattern, AggVal>,
+    pub int_part: HashMap<i64, AggVal>,
+    pub candidates: u64,
+    pub processed: u64,
+    pub steals: u64,
+    pub stolen_units: u64,
+    pub pattern_rescans: u64,
+    pub root_descents: u64,
+    pub shuffle_messages: u64,
+    pub shuffle_bytes: u64,
+    pub phase_nanos: [u64; 8],
+    pub busy_max_nanos: u64,
+    pub busy_sum_nanos: u64,
+}
+
+impl ShardOut {
+    /// Shard-side barrier: fold this shard's worker outputs exactly the
+    /// way `Cluster::run_with_sink` folds all workers' outputs.
+    pub fn from_worker_outs(use_odag: bool, outs: Vec<WorkerOut>) -> ShardOut {
+        let mut frontier_list = Vec::new();
+        let mut frontier_odag = OdagStore::new();
+        let mut frontier_added = 0u64;
+        let mut list_bytes = 0u64;
+        let mut pattern_part: HashMap<Pattern, AggVal> = HashMap::new();
+        let mut int_part: HashMap<i64, AggVal> = HashMap::new();
+        let mut candidates = 0u64;
+        let mut processed = 0u64;
+        let mut steals = 0u64;
+        let mut stolen_units = 0u64;
+        let mut pattern_rescans = 0u64;
+        let mut root_descents = 0u64;
+        let mut shuffle_messages = 0u64;
+        let mut shuffle_bytes = 0u64;
+        let mut phases = PhaseTimes::default();
+        let mut busy_max = Duration::ZERO;
+        let mut busy_sum = Duration::ZERO;
+        for out in outs {
+            candidates += out.candidates;
+            processed += out.processed;
+            frontier_added += out.frontier_added;
+            list_bytes += out.list_bytes;
+            steals += out.steals;
+            stolen_units += out.stolen_units;
+            pattern_rescans += out.pattern_rescans;
+            root_descents += out.root_descents;
+            shuffle_messages += out.shuffle_comm.messages;
+            shuffle_bytes += out.shuffle_comm.bytes;
+            phases.merge(&out.phases);
+            busy_max = busy_max.max(out.busy);
+            busy_sum += out.busy;
+            crate::agg::merge_into(&mut pattern_part, out.pattern_part);
+            crate::agg::merge_into(&mut int_part, out.int_part);
+            if use_odag {
+                frontier_odag.merge_owned(out.frontier_odag);
+            } else {
+                frontier_list.extend(out.frontier_list);
+            }
+        }
+        ShardOut {
+            frontier_list,
+            frontier_odag,
+            frontier_added,
+            list_bytes,
+            pattern_part,
+            int_part,
+            candidates,
+            processed,
+            steals,
+            stolen_units,
+            pattern_rescans,
+            root_descents,
+            shuffle_messages,
+            shuffle_bytes,
+            phase_nanos: phases.nanos(),
+            busy_max_nanos: busy_max.as_nanos() as u64,
+            busy_sum_nanos: busy_sum.as_nanos() as u64,
+        }
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        put_embedding_list(&mut w, &self.frontier_list);
+        self.frontier_odag.serialize(&mut w);
+        w.put_u64(self.frontier_added);
+        w.put_u64(self.list_bytes);
+        put_pattern_map(&mut w, &self.pattern_part);
+        put_int_map(&mut w, &self.int_part);
+        for v in [
+            self.candidates,
+            self.processed,
+            self.steals,
+            self.stolen_units,
+            self.pattern_rescans,
+            self.root_descents,
+            self.shuffle_messages,
+            self.shuffle_bytes,
+        ] {
+            w.put_u64(v);
+        }
+        for n in self.phase_nanos {
+            w.put_u64(n);
+        }
+        w.put_u64(self.busy_max_nanos);
+        w.put_u64(self.busy_sum_nanos);
+        w.into_bytes()
+    }
+
+    pub fn deserialize(bytes: &[u8]) -> Result<ShardOut, CodecError> {
+        let mut r = Reader::new(bytes);
+        let frontier_list = get_embedding_list(&mut r)?;
+        let frontier_odag = OdagStore::deserialize(&mut r)?;
+        let frontier_added = r.get_u64()?;
+        let list_bytes = r.get_u64()?;
+        let pattern_part = get_pattern_map(&mut r)?;
+        let int_part = get_int_map(&mut r)?;
+        let mut scalars = [0u64; 8];
+        for s in &mut scalars {
+            *s = r.get_u64()?;
+        }
+        let mut phase_nanos = [0u64; 8];
+        for n in &mut phase_nanos {
+            *n = r.get_u64()?;
+        }
+        let busy_max_nanos = r.get_u64()?;
+        let busy_sum_nanos = r.get_u64()?;
+        let [candidates, processed, steals, stolen_units, pattern_rescans, root_descents, shuffle_messages, shuffle_bytes] =
+            scalars;
+        Ok(ShardOut {
+            frontier_list,
+            frontier_odag,
+            frontier_added,
+            list_bytes,
+            pattern_part,
+            int_part,
+            candidates,
+            processed,
+            steals,
+            stolen_units,
+            pattern_rescans,
+            root_descents,
+            shuffle_messages,
+            shuffle_bytes,
+            phase_nanos,
+            busy_max_nanos,
+            busy_sum_nanos,
+        })
+    }
+}
+
+// ------------------------------------------------------------- FinalOut
+
+/// Shard → coordinator after Finish: the flushed output aggregation, the
+/// shard's sink count, and its aggregation statistics.
+pub struct FinalOut {
+    pub output_part: HashMap<Pattern, AggVal>,
+    /// Values the shard's workers wrote through `output()` during steps.
+    pub outputs: u64,
+    pub mapped: u64,
+    pub canonize_calls: u64,
+    pub quick_patterns: u64,
+}
+
+impl FinalOut {
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        put_pattern_map(&mut w, &self.output_part);
+        w.put_u64(self.outputs);
+        w.put_u64(self.mapped);
+        w.put_u64(self.canonize_calls);
+        w.put_u64(self.quick_patterns);
+        w.into_bytes()
+    }
+
+    pub fn deserialize(bytes: &[u8]) -> Result<FinalOut, CodecError> {
+        let mut r = Reader::new(bytes);
+        Ok(FinalOut {
+            output_part: get_pattern_map(&mut r)?,
+            outputs: r.get_u64()?,
+            mapped: r.get_u64()?,
+            canonize_calls: r.get_u64()?,
+            quick_patterns: r.get_u64()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------- Hello
+
+pub fn put_hello(shard_id: usize) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u32(shard_id as u32);
+    w.into_bytes()
+}
+
+pub fn get_hello(bytes: &[u8]) -> Result<usize, CodecError> {
+    Ok(Reader::new(bytes).get_u32()? as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_pattern(rng: &mut Rng) -> Pattern {
+        let l0 = rng.gen_range(3) as u32;
+        let l1 = rng.gen_range(3) as u32;
+        Pattern::new(vec![l0, l1], vec![(0, 1, rng.gen_range(2) as u32)])
+    }
+
+    fn sample_pattern_map(rng: &mut Rng, domains: bool) -> HashMap<Pattern, AggVal> {
+        let mut m = HashMap::new();
+        for _ in 0..rng.gen_range(6) {
+            let p = sample_pattern(rng);
+            let v = if domains && rng.chance(0.5) {
+                let mut d = DomainSupport::new(2);
+                d.add(0, rng.gen_range(100) as u32);
+                d.add(1, rng.gen_range(100) as u32);
+                AggVal::Domain(d)
+            } else {
+                AggVal::Long(rng.gen_range(1000) as i64 - 500)
+            };
+            m.insert(p, v);
+        }
+        m
+    }
+
+    #[test]
+    fn agg_val_roundtrips_both_kinds() {
+        for v in [AggVal::Long(-42), AggVal::Long(i64::MAX), AggVal::Long(i64::MIN)] {
+            let mut w = Writer::new();
+            put_agg_val(&mut w, &v);
+            let bytes = w.into_bytes();
+            assert_eq!(get_agg_val(&mut Reader::new(&bytes)).unwrap(), v);
+        }
+        let mut d = DomainSupport::new(2);
+        d.add(0, 7);
+        d.add(1, 9);
+        d.add(1, 3);
+        let v = AggVal::Domain(d);
+        let mut w = Writer::new();
+        put_agg_val(&mut w, &v);
+        let bytes = w.into_bytes();
+        assert_eq!(get_agg_val(&mut Reader::new(&bytes)).unwrap(), v);
+    }
+
+    #[test]
+    fn agg_val_bad_tag_is_codec_error() {
+        let mut r = Reader::new(&[9, 0, 0, 0, 0, 0, 0, 0, 0]);
+        assert!(matches!(get_agg_val(&mut r), Err(CodecError::BadTag { tag: 9, .. })));
+    }
+
+    #[test]
+    fn maps_roundtrip_with_deterministic_bytes() {
+        let mut rng = Rng::new(7);
+        for seed in 0..20 {
+            let m = sample_pattern_map(&mut rng, seed % 2 == 0);
+            let mut w = Writer::new();
+            put_pattern_map(&mut w, &m);
+            let bytes = w.into_bytes();
+            let back = get_pattern_map(&mut Reader::new(&bytes)).unwrap();
+            assert_eq!(back, m);
+            // Determinism: re-serializing the roundtripped map (different
+            // HashMap iteration order) yields identical bytes.
+            let mut w2 = Writer::new();
+            put_pattern_map(&mut w2, &back);
+            assert_eq!(w2.into_bytes(), bytes);
+        }
+        let mut im = HashMap::new();
+        im.insert(-3i64, AggVal::Long(10));
+        im.insert(500, AggVal::Long(-1));
+        let mut w = Writer::new();
+        put_int_map(&mut w, &im);
+        let bytes = w.into_bytes();
+        assert_eq!(get_int_map(&mut Reader::new(&bytes)).unwrap(), im);
+    }
+
+    #[test]
+    fn embedding_list_roundtrip() {
+        let list = vec![vec![1u32, 2, 3], vec![], vec![9, 9]];
+        let mut w = Writer::new();
+        put_embedding_list(&mut w, &list);
+        let bytes = w.into_bytes();
+        assert_eq!(get_embedding_list(&mut Reader::new(&bytes)).unwrap(), list);
+    }
+
+    #[test]
+    fn frontier_roundtrips_all_variants() {
+        let mut w = Writer::new();
+        put_frontier(&mut w, &WireFrontier::Init);
+        let b = w.into_bytes();
+        assert!(matches!(get_frontier(&mut Reader::new(&b)).unwrap(), WireFrontier::Init));
+
+        let list = vec![vec![4u32, 5]];
+        let mut w = Writer::new();
+        put_frontier(&mut w, &WireFrontier::List(list.clone()));
+        let b = w.into_bytes();
+        match get_frontier(&mut Reader::new(&b)).unwrap() {
+            WireFrontier::List(got) => assert_eq!(got, list),
+            _ => panic!("wrong variant"),
+        }
+
+        let mut store = OdagStore::new();
+        let p = Pattern::new(vec![0, 0], vec![(0, 1, 0)]);
+        store.add(&p, &[1, 2]);
+        store.add(&p, &[2, 3]);
+        let mut w = Writer::new();
+        put_frontier(&mut w, &WireFrontier::Odag(store.clone()));
+        let b = w.into_bytes();
+        match get_frontier(&mut Reader::new(&b)).unwrap() {
+            WireFrontier::Odag(got) => {
+                assert_eq!(got.num_patterns(), 1);
+                assert_eq!(got.byte_size(), store.byte_size());
+            }
+            _ => panic!("wrong variant"),
+        }
+
+        let mut r = Reader::new(&[7]);
+        assert!(matches!(get_frontier(&mut r), Err(CodecError::BadTag { tag: 7, .. })));
+    }
+
+    fn sample_shard_out(seed: u64) -> ShardOut {
+        let mut rng = Rng::new(seed);
+        let p = Pattern::new(vec![0, 1], vec![(0, 1, 0)]);
+        let mut store = OdagStore::new();
+        store.add(&p, &[1, 2]);
+        let mut int_part = HashMap::new();
+        int_part.insert(3, AggVal::Long(rng.gen_range(50) as i64));
+        ShardOut {
+            frontier_list: vec![vec![1, 2], vec![3, 4]],
+            frontier_odag: store,
+            frontier_added: rng.gen_range(100),
+            list_bytes: rng.gen_range(1000),
+            pattern_part: sample_pattern_map(&mut rng, true),
+            int_part,
+            candidates: rng.gen_range(1 << 30),
+            processed: rng.gen_range(1 << 30),
+            steals: rng.gen_range(10),
+            stolen_units: rng.gen_range(100),
+            pattern_rescans: rng.gen_range(100),
+            root_descents: rng.gen_range(10),
+            shuffle_messages: rng.gen_range(1 << 20),
+            shuffle_bytes: rng.gen_range(1 << 20),
+            phase_nanos: [1, 2, 3, 4, 5, 6, 7, 8],
+            busy_max_nanos: rng.gen_range(1 << 40),
+            busy_sum_nanos: rng.gen_range(1 << 40),
+        }
+    }
+
+    #[test]
+    fn shard_out_roundtrip() {
+        for seed in [1u64, 2, 3] {
+            let s = sample_shard_out(seed);
+            let bytes = s.serialize();
+            let back = ShardOut::deserialize(&bytes).unwrap();
+            assert_eq!(back.serialize(), bytes, "deterministic re-serialization");
+            assert_eq!(back.frontier_list, s.frontier_list);
+            assert_eq!(back.pattern_part, s.pattern_part);
+            assert_eq!(back.int_part, s.int_part);
+            assert_eq!(back.candidates, s.candidates);
+            assert_eq!(back.processed, s.processed);
+            assert_eq!(back.phase_nanos, s.phase_nanos);
+            assert_eq!(back.busy_max_nanos, s.busy_max_nanos);
+            assert_eq!(back.busy_sum_nanos, s.busy_sum_nanos);
+            assert_eq!(back.shuffle_messages, s.shuffle_messages);
+            assert_eq!(back.shuffle_bytes, s.shuffle_bytes);
+            assert_eq!(back.frontier_added, s.frontier_added);
+            assert_eq!(back.list_bytes, s.list_bytes);
+            assert_eq!(back.steals, s.steals);
+            assert_eq!(back.stolen_units, s.stolen_units);
+            assert_eq!(back.pattern_rescans, s.pattern_rescans);
+            assert_eq!(back.root_descents, s.root_descents);
+        }
+    }
+
+    #[test]
+    fn shard_out_hostile_bytes_error_never_panic() {
+        let bytes = sample_shard_out(11).serialize();
+        // Every truncation point.
+        for cut in 0..bytes.len() {
+            assert!(ShardOut::deserialize(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // Every single-bit flip either decodes (benign scalar flip) or
+        // errors; it must never panic or over-allocate.
+        for byte in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut evil = bytes.clone();
+                evil[byte] ^= 1 << bit;
+                let _ = ShardOut::deserialize(&evil);
+            }
+        }
+        // An oversized count prefix is rejected before allocation.
+        let mut evil = bytes.clone();
+        evil[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            ShardOut::deserialize(&evil),
+            Err(CodecError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn step_msg_roundtrip_and_hostile() {
+        let mut rng = Rng::new(3);
+        let msg = StepMsg {
+            step: 4,
+            frontier: WireFrontier::List(vec![vec![1, 2, 3]]),
+            prev_pattern_aggs: sample_pattern_map(&mut rng, true),
+            prev_int_aggs: HashMap::from([(7, AggVal::Long(5))]),
+        };
+        let bytes = msg.serialize();
+        let back = StepMsg::deserialize(&bytes).unwrap();
+        assert_eq!(back.step, 4);
+        assert_eq!(back.prev_pattern_aggs, msg.prev_pattern_aggs);
+        assert_eq!(back.prev_int_aggs, msg.prev_int_aggs);
+        assert_eq!(back.serialize(), bytes);
+        for cut in 0..bytes.len() {
+            assert!(StepMsg::deserialize(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn final_out_roundtrip_and_hostile() {
+        let mut rng = Rng::new(9);
+        let f = FinalOut {
+            output_part: sample_pattern_map(&mut rng, false),
+            outputs: 77,
+            mapped: 1000,
+            canonize_calls: 12,
+            quick_patterns: 5,
+        };
+        let bytes = f.serialize();
+        let back = FinalOut::deserialize(&bytes).unwrap();
+        assert_eq!(back.output_part, f.output_part);
+        assert_eq!(
+            (back.outputs, back.mapped, back.canonize_calls, back.quick_patterns),
+            (77, 1000, 12, 5)
+        );
+        for cut in 0..bytes.len() {
+            assert!(FinalOut::deserialize(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        assert_eq!(get_hello(&put_hello(3)).unwrap(), 3);
+        assert!(get_hello(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn from_worker_outs_premerges_like_the_barrier() {
+        let p = Pattern::new(vec![0, 0], vec![(0, 1, 0)]);
+        let mut a = WorkerOut::default();
+        a.candidates = 3;
+        a.processed = 2;
+        a.busy = Duration::from_nanos(50);
+        a.pattern_part.insert(p.clone(), AggVal::Long(2));
+        a.frontier_odag.add(&p, &[1, 2]);
+        let mut b = WorkerOut::default();
+        b.candidates = 4;
+        b.processed = 1;
+        b.busy = Duration::from_nanos(80);
+        b.pattern_part.insert(p.clone(), AggVal::Long(5));
+        b.frontier_odag.add(&p, &[2, 3]);
+        let s = ShardOut::from_worker_outs(true, vec![a, b]);
+        assert_eq!(s.candidates, 7);
+        assert_eq!(s.processed, 3);
+        assert_eq!(s.busy_max_nanos, 80);
+        assert_eq!(s.busy_sum_nanos, 130);
+        assert_eq!(s.pattern_part[&p].as_long(), 7);
+        assert_eq!(s.frontier_odag.num_patterns(), 1);
+    }
+}

@@ -321,7 +321,10 @@ pub fn tree_reduce<T: Send>(
 /// the entry bytes the broadcast will ship — one measured pass instead
 /// of the two sequential coordinator loops it replaces. Returns the
 /// updated history, the byte total, and the thread-CPU spent.
-fn fold_broadcast<K: Clone + Eq + Hash>(
+/// `pub(crate)` so the distributed coordinator
+/// ([`crate::comm::coordinator`]) folds its history with the identical
+/// code path — the byte totals feed the same broadcast accounting.
+pub(crate) fn fold_broadcast<K: Clone + Eq + Hash>(
     mut history: HashMap<K, AggVal>,
     step: &HashMap<K, AggVal>,
     key_bytes: fn(&K) -> usize,

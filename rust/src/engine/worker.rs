@@ -393,19 +393,20 @@ pub fn run_step(
                 // frontier is an ODAG; this arm only runs for ODAG frontiers.
                 let cur = odag_cursor.as_mut().expect("odag frontier opened a cursor");
                 let mut read_clock = Instant::now();
-                cur.drain(claim.lo, claim.hi, |pat, words, verts, quick| {
+                // Spurious sequences — leaves whose quick pattern differs
+                // from this ODAG's pattern — are dropped inside the
+                // cursor: such an embedding lives in (and is extracted
+                // from) its own pattern's ODAG, so processing it here
+                // would double-count it. `drain_matching` rejects most of
+                // them by structural hash before materializing a pattern,
+                // and full-compares on hash ties; equivalence with the
+                // explicit `quick == *pat` filter is pinned by
+                // `drain_matching_equals_full_compare_filtering`.
+                cur.drain_matching(claim.lo, claim.hi, |_pat, words, verts, quick| {
                     pipe.phases.add(Phase::Read, read_clock.elapsed());
                     pipe.parent.words.clear();
                     pipe.parent.words.extend_from_slice(words);
-                    // Drop spurious sequences whose quick pattern differs
-                    // from this ODAG's pattern: such an embedding lives
-                    // in (and is extracted from) its own pattern's ODAG —
-                    // without this check it would be processed twice. The
-                    // carried pattern is the check input; nothing is
-                    // recomputed.
-                    if quick == *pat {
-                        pipe.process_parent(quick, Some(verts), true);
-                    }
+                    pipe.process_parent(quick, Some(verts), true);
                     read_clock = Instant::now();
                 });
                 pipe.phases.add(Phase::Read, read_clock.elapsed());

@@ -11,7 +11,9 @@
 //!   embedding canonicality ([`embedding`]), ODAG compressed frontier
 //!   storage ([`odag`]), two-level pattern aggregation ([`agg`]), the
 //!   three paper applications ([`apps`]) and the TLV / TLP / centralized
-//!   baselines ([`baselines`]).
+//!   baselines ([`baselines`]). The same superstep also runs across real
+//!   OS processes over TCP ([`comm`]), pinned bit-identical to the
+//!   in-process engine by a differential conformance suite.
 //! * **L2/L1 (python/, build-time only)** — the structural census
 //!   (motif-3 counts + degree moments) as a JAX model around a Pallas
 //!   masked-matmul-reduce kernel, AOT-lowered to HLO text in
@@ -40,6 +42,7 @@ pub mod analysis;
 pub mod api;
 pub mod apps;
 pub mod baselines;
+pub mod comm;
 pub mod embedding;
 pub mod engine;
 pub mod graph;

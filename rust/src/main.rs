@@ -14,15 +14,14 @@ use std::sync::Arc;
 use arabesque::bail;
 use arabesque::util::err::{Context, Result};
 
-use arabesque::apps::{Cliques, Fsm, MaximalCliques, Motifs};
 use arabesque::baselines::{tlp::TlpCluster, tlv::TlvCluster};
+use arabesque::comm::{self, AppSpec};
 use arabesque::engine::{Cluster, Config, Partition, RunResult};
 use arabesque::graph::{gen, loader, LabeledGraph};
 use arabesque::output::{CountingSink, FileSink, OutputSink};
 use arabesque::runtime::{CensusExecutor, Motif3Counts};
 use arabesque::util::cli::Args;
 use arabesque::util::{human_bytes, human_count, human_secs};
-use arabesque::GraphMiningApp;
 
 const USAGE: &str = "\
 arabesque <command> [options]
@@ -32,6 +31,7 @@ commands:
   census   run the AOT PJRT census and cross-check against enumeration
   gen      generate a synthetic dataset and write it to disk
   info     print dataset statistics
+  shard    (internal) one shard of a distributed run; spawned by --shards
 
 run options:
   --app <fsm|motifs|cliques|maximal-cliques>   (required)
@@ -43,6 +43,8 @@ run options:
   --threads <n>          threads per server    (default 4)
   --block <n>            load-balance chunk    (default 64)
   --engine <tle|tlv|tlp> paradigm              (default tle)
+  --shards <n>           run across n OS processes over real TCP
+                         (tle only; implies --no-steal, sets servers=n)
   --output <path>        write outputs to a file
   --no-odag              store frontiers as plain embedding lists
   --one-level            disable two-level pattern aggregation
@@ -71,6 +73,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
     }
     match args.positional[0].as_str() {
         "run" => cmd_run(&args),
+        "shard" => cmd_shard(&args),
         "census" => cmd_census(&args),
         "gen" => cmd_gen(&args),
         "info" => cmd_info(&args),
@@ -99,16 +102,15 @@ fn make_sink(args: &Args) -> Result<Arc<dyn OutputSink>> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let mut g = load_graph(args)?;
+    let spec = AppSpec::from_args(args)?;
     // Motif mining assumes an unlabeled input graph (paper §2), and
     // Cliques are purely structural; strip labels unless asked not to.
-    let app_name_peek = args.get("app").unwrap_or("");
-    if matches!(app_name_peek, "motifs" | "cliques" | "maximal-cliques")
-        && !args.flag("keep-labels")
-    {
+    if spec.strips_labels() && !args.flag("keep-labels") {
         g = g.unlabeled();
     }
     let servers = args.get_usize("servers", 1)?;
     let threads = args.get_usize("threads", 4)?;
+    let shards = args.get_usize("shards", 0)?;
     let skew = args.get_usize("skew", 0)?;
     if skew > 100 {
         bail!("--skew must be 0..=100, got {skew}");
@@ -121,32 +123,29 @@ fn cmd_run(args: &Args) -> Result<()> {
     if skew > 0 {
         cfg = cfg.with_partition(Partition::Skewed(skew as u8));
     }
-    let support = args.get_usize("support", 300)?;
-    let app_name = args.get("app").context("--app is required")?;
-
-    let app: Box<dyn GraphMiningApp> = match app_name {
-        "fsm" => {
-            let mut fsm = Fsm::new(support);
-            if let Some(ms) = args.get("max-size") {
-                fsm = fsm.with_max_edges(ms.parse()?);
-            }
-            Box::new(fsm)
-        }
-        "motifs" => Box::new(Motifs::new(args.get_usize("max-size", 3)?)),
-        "cliques" => Box::new(Cliques::new(args.get_usize("max-size", 4)?)),
-        "maximal-cliques" => Box::new(MaximalCliques::new(args.get_usize("max-size", 5)?)),
-        other => bail!("unknown app {other:?}"),
-    };
+    let app = spec.build();
 
     println!("graph: {g:?}");
     match args.get_or("engine", "tle") {
         "tle" => {
             let sink = make_sink(args)?;
-            let cluster = Cluster::new(cfg);
-            let r = cluster.run_with_sink(&g, app.as_ref(), sink);
+            let r = if shards > 0 {
+                // Real multi-process execution: one OS process per shard,
+                // bit-identical to `--servers shards --no-steal` in-process
+                // (the conformance suite's invariant).
+                cfg.servers = shards;
+                cfg.steal = false;
+                let exe = std::env::current_exe().context("locate current executable")?;
+                comm::run_distributed(&exe, &g, &spec, &cfg, sink)?
+            } else {
+                Cluster::new(cfg).run_with_sink(&g, app.as_ref(), sink)
+            };
             print_run(&r, args.flag("stats"));
         }
         "tlv" => {
+            if shards > 0 {
+                bail!("--shards is only supported by the tle engine");
+            }
             let r = TlvCluster::new(servers * threads).run(&g, app.as_ref());
             println!(
                 "TLV: wall={} processed={} messages={} outputs={}",
@@ -157,10 +156,13 @@ fn cmd_run(args: &Args) -> Result<()> {
             );
         }
         "tlp" => {
-            if app_name != "fsm" {
-                bail!("the TLP baseline implements FSM only");
+            if shards > 0 {
+                bail!("--shards is only supported by the tle engine");
             }
-            let max_edges = args.get_usize("max-size", 3)?;
+            let (support, max_edges) = match spec {
+                AppSpec::Fsm { support, max_edges } => (support, max_edges.unwrap_or(3)),
+                _ => bail!("the TLP baseline implements FSM only"),
+            };
             let r = TlpCluster::new(servers * threads).run_fsm(&g, support, max_edges);
             println!(
                 "TLP: wall={} frequent={} messages={} patterns/level={:?}",
@@ -173,6 +175,31 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => bail!("unknown engine {other:?}"),
     }
     Ok(())
+}
+
+/// The internal shard entrypoint: spawned by the coordinator, never by
+/// hand. The graph arrives pre-prepared (labels already stripped when
+/// the app calls for it), so no `unlabeled()` here; stealing is forced
+/// off because chunk ownership spans processes.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let shard_id = args.require_usize("shard-id")?;
+    let shards = args.require_usize("shards")?;
+    let threads = args.require_usize("threads")?;
+    let connect = args.require("connect")?;
+    let graph_path = args.require("graph")?;
+    let skew = args.get_usize("skew", 0)?;
+    let g = loader::load_arabesque(Path::new(graph_path))
+        .with_context(|| format!("load shard graph {graph_path}"))?;
+    let mut cfg = Config::new(shards, threads)
+        .with_odag(!args.flag("no-odag"))
+        .with_two_level(!args.flag("one-level"))
+        .with_steal(false)
+        .with_block(args.get_u64("block", 64)?);
+    if skew > 0 {
+        cfg = cfg.with_partition(Partition::Skewed(skew as u8));
+    }
+    let app = AppSpec::from_args(args)?.build();
+    comm::run_shard(connect, shard_id, &cfg, &g, app.as_ref())
 }
 
 fn print_run(r: &RunResult, per_step: bool) {

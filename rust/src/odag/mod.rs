@@ -163,10 +163,14 @@ impl Odag {
     }
 
     pub fn deserialize(r: &mut Reader) -> Result<Odag, CodecError> {
-        let k = r.get_u32()? as usize;
+        // Count guards: every array costs at least 4 bytes (its length
+        // prefix) and every entry at least 8 (id + conn count), so any
+        // count beyond what the remaining bytes could hold is corrupt —
+        // rejected before sizing an allocation by it.
+        let k = r.get_count(r.remaining() as u64 / 4)?;
         let mut arrays = Vec::with_capacity(k);
         for _ in 0..k {
-            let n = r.get_u32()? as usize;
+            let n = r.get_count(r.remaining() as u64 / 8)?;
             let mut ids = Vec::with_capacity(n);
             let mut conns = Vec::with_capacity(n);
             for _ in 0..n {
@@ -576,6 +580,57 @@ impl<'a> Cursor<'a> {
         })
     }
 
+    /// Like [`Cursor::next`], but hand out only leaves whose carried
+    /// quick pattern equals `pat` — the non-spurious extractions of an
+    /// ODAG stored under `pat`. `pat_hash` must be
+    /// `pat.structural_hash()` (callers cache it; the plan caches it
+    /// per pattern).
+    ///
+    /// This is the structural-hash fast path: the carried
+    /// [`QuickStack::structural_hash`] is compared first, and a
+    /// mismatch — which *proves* the patterns differ — skips the leaf
+    /// without materializing its pattern (the clone in [`Cursor::next`]
+    /// is the dominant per-leaf cost on spurious-heavy ODAGs). A hash
+    /// match still full-compares before yielding, so colliding spurious
+    /// leaves are dropped exactly as the equality check would —
+    /// `drain_matching_equals_full_compare_filtering` pins
+    /// hash-filtered ≡ full-compare.
+    pub fn next_matching(&mut self, hi: u64, pat: &Pattern, pat_hash: u64) -> Option<Leaf<'_>> {
+        debug_assert_eq!(pat_hash, pat.structural_hash());
+        loop {
+            if !self.started {
+                self.seek(self.base);
+            } else if self.emitted {
+                self.pop_leaf();
+                self.advance_to(self.resume_at);
+            }
+            if !self.at_leaf || self.pending >= hi {
+                return None;
+            }
+            self.resume_at = self.pending + 1;
+            if self.quick.structural_hash() != pat_hash {
+                // Provably spurious: skip without materializing.
+                self.pop_leaf();
+                self.advance_to(self.resume_at);
+                continue;
+            }
+            let quick = self.quick.pattern();
+            if quick != *pat {
+                // Hash collision with a different pattern: still spurious.
+                self.pop_leaf();
+                self.advance_to(self.resume_at);
+                continue;
+            }
+            self.emitted = true;
+            return Some(Leaf {
+                index: self.pending,
+                words: &self.words,
+                vertices: self.quick.vertices(),
+                quick,
+            });
+        }
+    }
+
     /// Drop all descent state and re-arm the root frame.
     fn reset_descend(&mut self) {
         self.frames.clear();
@@ -740,6 +795,34 @@ impl OdagStore {
     pub fn total_paths(&self) -> u64 {
         self.by_pattern.values().map(Odag::total_paths).sum()
     }
+
+    /// Wire form: `u32` pattern count, then each pattern (sorted order,
+    /// so a given store always produces identical bytes — the
+    /// conformance suite compares shard payloads byte-for-byte)
+    /// followed by its ODAG body.
+    pub fn serialize(&self, w: &mut Writer) {
+        let mut pats: Vec<&Pattern> = self.by_pattern.keys().collect();
+        pats.sort_unstable();
+        w.put_u32(pats.len() as u32);
+        for p in pats {
+            p.serialize(w);
+            self.by_pattern[p].serialize(w);
+        }
+    }
+
+    /// Decode [`OdagStore::serialize`] bytes. Hostile counts are
+    /// rejected before allocation (every entry needs at least a pattern
+    /// header plus an ODAG `k` prefix).
+    pub fn deserialize(r: &mut Reader) -> Result<OdagStore, CodecError> {
+        let n = r.get_count(r.remaining() as u64 / 6)?;
+        let mut by_pattern = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let p = Pattern::deserialize(r)?;
+            let o = Odag::deserialize(r)?;
+            by_pattern.insert(p, o);
+        }
+        Ok(OdagStore { by_pattern })
+    }
 }
 
 /// A superstep's extraction plan over an [`OdagStore`], built **once at
@@ -768,6 +851,10 @@ pub struct ExtractionPlan {
     base: Vec<u64>,
     /// `costs[i]` = cached [`Odag::costs`] of `pats[i]`'s ODAG.
     costs: Vec<Vec<Vec<u64>>>,
+    /// `hashes[i]` = cached [`Pattern::structural_hash`] of `pats[i]`,
+    /// read once per extracted leaf by the spurious-check fast path
+    /// ([`Cursor::next_matching`]).
+    hashes: Vec<u64>,
     /// Total global path indices (spurious-inclusive).
     total: u64,
 }
@@ -849,7 +936,8 @@ impl ExtractionPlan {
             base.push(total);
             total += c.first().map_or(0, |row| row.iter().sum::<u64>());
         }
-        (ExtractionPlan { pats, base, costs, total }, critical, total_cpu)
+        let hashes = pats.iter().map(Pattern::structural_hash).collect();
+        (ExtractionPlan { pats, base, costs, hashes, total }, critical, total_cpu)
     }
 
     /// Total global path indices (the frontier's extraction unit count).
@@ -951,6 +1039,33 @@ impl PlanCursor<'_> {
         hi: u64,
         mut f: F,
     ) {
+        self.drain_with(lo, hi, false, &mut f);
+    }
+
+    /// Like [`PlanCursor::drain`], but yield only **non-spurious**
+    /// leaves — those whose carried quick pattern equals the ODAG's
+    /// pattern — using the structural-hash fast path
+    /// ([`Cursor::next_matching`]) to reject mismatches before
+    /// materializing their patterns. This is the engine's ODAG
+    /// extraction entry point; the filter is exactly the
+    /// `quick == *pat` compare [`PlanCursor::drain`] callers would
+    /// apply, pinned by `drain_matching_equals_full_compare_filtering`.
+    pub fn drain_matching<F: FnMut(&Pattern, &[u32], &[u32], Pattern)>(
+        &mut self,
+        lo: u64,
+        hi: u64,
+        mut f: F,
+    ) {
+        self.drain_with(lo, hi, true, &mut f);
+    }
+
+    fn drain_with(
+        &mut self,
+        lo: u64,
+        hi: u64,
+        matching: bool,
+        f: &mut dyn FnMut(&Pattern, &[u32], &[u32], Pattern),
+    ) {
         if lo >= hi {
             return;
         }
@@ -991,7 +1106,11 @@ impl PlanCursor<'_> {
                 self.descents += 1;
             }
             let pat = &plan.pats[i];
-            while let Some(leaf) = cur.next(s_hi) {
+            while let Some(leaf) = if matching {
+                cur.next_matching(s_hi, pat, plan.hashes[i])
+            } else {
+                cur.next(s_hi)
+            } {
                 f(pat, leaf.words, leaf.vertices, leaf.quick);
             }
             self.pos = s_hi;
@@ -1475,6 +1594,84 @@ mod tests {
             "descents {} > runs {runs}",
             cur.root_descents()
         );
+    }
+
+    #[test]
+    fn drain_matching_equals_full_compare_filtering() {
+        // The structural-hash fast path must be *pure filtering*: for
+        // every chunking, `drain_matching` yields exactly the leaves a
+        // full `drain` + `quick == *pat` compare keeps, in the same
+        // order, with identical carried data. The parity-split store
+        // assigns embeddings to patterns regardless of structure, so
+        // spurious cross-pattern extractions abound — asserted below so
+        // the fast path is actually exercised.
+        let g = fig5_graph();
+        let p1 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        let p2 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        let mut store = OdagStore::new();
+        for e in canonical_size3(&g) {
+            let pat = if e[0] % 2 == 0 { &p1 } else { &p2 };
+            store.add(pat, &e);
+        }
+        let plan = ExtractionPlan::build(&store);
+        let total = plan.total();
+        for chunk in [1u64, 3, 7, total] {
+            let mut all = 0usize;
+            let mut want: Vec<(Pattern, Vec<u32>, Vec<u32>, Pattern)> = Vec::new();
+            let mut got: Vec<(Pattern, Vec<u32>, Vec<u32>, Pattern)> = Vec::new();
+            let mut ref_cur = plan.cursor(&store, &g, Mode::VertexInduced);
+            let mut fast_cur = plan.cursor(&store, &g, Mode::VertexInduced);
+            let mut lo = 0;
+            while lo < total {
+                let hi = (lo + chunk).min(total);
+                ref_cur.drain(lo, hi, |p, w, v, q| {
+                    all += 1;
+                    if q == *p {
+                        want.push((p.clone(), w.to_vec(), v.to_vec(), q));
+                    }
+                });
+                fast_cur.drain_matching(lo, hi, |p, w, v, q| {
+                    got.push((p.clone(), w.to_vec(), v.to_vec(), q));
+                });
+                lo = hi;
+            }
+            assert_eq!(got, want, "chunk={chunk}");
+            assert!(
+                all > want.len(),
+                "chunk={chunk}: no spurious leaves — the fast path went unexercised"
+            );
+            assert!(!want.is_empty(), "chunk={chunk}: nothing survived the filter");
+        }
+    }
+
+    #[test]
+    fn store_serialization_roundtrip_is_deterministic() {
+        let g = fig5_graph();
+        let p1 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        let p2 = Pattern::new(vec![0, 0, 0], vec![(0, 1, 0), (1, 2, 0), (0, 2, 0)]);
+        let mut store = OdagStore::new();
+        for e in canonical_size3(&g) {
+            let pat = if e[0] % 2 == 0 { &p1 } else { &p2 };
+            store.add(pat, &e);
+        }
+        let mut w = Writer::new();
+        store.serialize(&mut w);
+        let bytes = w.into_bytes();
+        let back = OdagStore::deserialize(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(back.by_pattern.len(), store.by_pattern.len());
+        for (p, o) in &store.by_pattern {
+            assert_eq!(back.by_pattern.get(p), Some(o));
+        }
+        // Sorted-pattern framing: same store, same bytes — regardless of
+        // HashMap iteration order (the roundtripped copy re-serializes
+        // identically).
+        let mut w2 = Writer::new();
+        back.serialize(&mut w2);
+        assert_eq!(w2.into_bytes(), bytes);
+        // Truncated bytes error instead of panicking.
+        for cut in [0, 1, 5, bytes.len() - 1] {
+            assert!(OdagStore::deserialize(&mut Reader::new(&bytes[..cut])).is_err());
+        }
     }
 
     #[test]

@@ -82,10 +82,102 @@ impl Pattern {
         Pattern::new(vlabels, edges)
     }
 
-    /// Serialized byte size (for message accounting).
+    /// Serialized byte size (for message accounting). Exactly the byte
+    /// count [`Pattern::serialize`] produces.
     pub fn byte_size(&self) -> usize {
         2 + 4 * self.vlabels.len() + 6 * self.edges.len()
     }
+
+    /// Wire form: `u8` vertex count, `u8` edge count, per-vertex `u32`
+    /// label, per-edge `(u8, u8, u32)`. Patterns are tiny (positions
+    /// are `u8`), so both counts fit one byte.
+    pub fn serialize(&self, w: &mut crate::util::codec::Writer) {
+        debug_assert!(self.vlabels.len() <= u8::MAX as usize);
+        debug_assert!(self.edges.len() <= u8::MAX as usize);
+        w.put_u8(self.vlabels.len() as u8);
+        w.put_u8(self.edges.len() as u8);
+        for &l in &self.vlabels {
+            w.put_u32(l);
+        }
+        for &(a, b, l) in &self.edges {
+            w.put_u8(a);
+            w.put_u8(b);
+            w.put_u32(l);
+        }
+    }
+
+    /// Decode [`Pattern::serialize`] bytes. Edge endpoints outside the
+    /// vertex range are rejected ([`CodecError::Oversized`]) — hostile
+    /// bytes must never build a structurally invalid pattern — and the
+    /// result is re-normalized through [`Pattern::new`], so even
+    /// unsorted adversarial input decodes to a well-formed value.
+    pub fn deserialize(
+        r: &mut crate::util::codec::Reader,
+    ) -> Result<Pattern, crate::util::codec::CodecError> {
+        let nv = r.get_u8()? as usize;
+        let ne = r.get_u8()? as usize;
+        let mut vlabels = Vec::with_capacity(nv);
+        for _ in 0..nv {
+            vlabels.push(r.get_u32()?);
+        }
+        let mut edges = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            let at = r.pos();
+            let a = r.get_u8()?;
+            let b = r.get_u8()?;
+            let l = r.get_u32()?;
+            if a.max(b) as usize >= nv {
+                return Err(crate::util::codec::CodecError::Oversized {
+                    at,
+                    len: a.max(b) as u64,
+                    max: nv.saturating_sub(1) as u64,
+                });
+            }
+            edges.push((a, b, l));
+        }
+        Ok(Pattern::new(vlabels, edges))
+    }
+
+    /// Structural hash: a commutative sum of per-element mixed terms
+    /// (one per `(position, vertex label)`, one per normalized edge).
+    ///
+    /// Equal patterns always hash equal, so a hash *mismatch* proves two
+    /// patterns differ — the ODAG extraction fast path uses this to
+    /// reject spurious sequences before materializing their patterns
+    /// ([`QuickStack::structural_hash`] maintains the same sum
+    /// incrementally down the descent). A hash *match* proves nothing:
+    /// collisions are possible, so fast-path users must still
+    /// full-compare on equality. Not isomorphism-invariant — it hashes
+    /// the quick-pattern form, positions included, exactly like `==`.
+    pub fn structural_hash(&self) -> u64 {
+        let mut h = 0u64;
+        for (i, &l) in self.vlabels.iter().enumerate() {
+            h = h.wrapping_add(vertex_term(i, l));
+        }
+        for &(a, b, l) in &self.edges {
+            h = h.wrapping_add(edge_term(a, b, l));
+        }
+        h
+    }
+}
+
+/// splitmix64-style finalizer: the per-element mixer behind
+/// [`Pattern::structural_hash`]. Strong diffusion matters because the
+/// terms are combined with a plain wrapping sum (to be commutative and
+/// invertible for the incremental stack), so all mixing happens here.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+fn vertex_term(pos: usize, label: Label) -> u64 {
+    mix64(0x5651__4515 ^ ((pos as u64) << 33) ^ (label as u64))
+}
+
+fn edge_term(a: u8, b: u8, label: Label) -> u64 {
+    mix64(0xe3_d6e3_d6 ^ ((a as u64) << 48) ^ ((b as u64) << 40) ^ ((label as u64) << 1))
 }
 
 impl fmt::Display for Pattern {
@@ -242,6 +334,10 @@ pub struct QuickStack {
     epos: Vec<u32>,
     /// Pre-push lengths of (vlabels, vertices, epos), one per frame.
     marks: Vec<(u32, u32, u32)>,
+    /// Running [`Pattern::structural_hash`] of the carried prefix: a
+    /// commutative wrapping sum, so push adds each new element's term
+    /// and pop subtracts it — no rescan in either direction.
+    hash: u64,
 }
 
 impl QuickStack {
@@ -264,7 +360,8 @@ impl QuickStack {
             self.vertices.len() as u32,
             self.epos.len() as u32,
         ));
-        let QuickStack { vlabels, edges, vertices, epos, .. } = self;
+        let vl0 = self.vlabels.len();
+        let QuickStack { vlabels, edges, vertices, epos, hash, .. } = self;
         quick_extend_parts(
             g,
             vlabels,
@@ -276,11 +373,15 @@ impl QuickStack {
                 Err(pos) => {
                     edges.insert(pos, (a, b, l));
                     epos.push(pos as u32);
+                    *hash = hash.wrapping_add(edge_term(a, b, l));
                 }
             },
             word,
             mode,
         );
+        for (i, &l) in vlabels.iter().enumerate().skip(vl0) {
+            *hash = hash.wrapping_add(vertex_term(i, l));
+        }
     }
 
     /// Undo the most recent push (backtrack one descent step): truncate
@@ -293,8 +394,12 @@ impl QuickStack {
         let (vl, vt, ep) = self.marks.pop().expect("pop on empty QuickStack");
         while self.epos.len() > ep as usize {
             if let Some(p) = self.epos.pop() {
-                self.edges.remove(p as usize);
+                let (a, b, l) = self.edges.remove(p as usize);
+                self.hash = self.hash.wrapping_sub(edge_term(a, b, l));
             }
+        }
+        for (i, &l) in self.vlabels.iter().enumerate().skip(vl as usize) {
+            self.hash = self.hash.wrapping_sub(vertex_term(i, l));
         }
         self.vlabels.truncate(vl as usize);
         self.vertices.truncate(vt as usize);
@@ -307,6 +412,17 @@ impl QuickStack {
         self.vertices.clear();
         self.epos.clear();
         self.marks.clear();
+        self.hash = 0;
+    }
+
+    /// The carried prefix's [`Pattern::structural_hash`], maintained
+    /// incrementally — reading it costs nothing. A mismatch against an
+    /// expected pattern's hash proves the carried pattern differs
+    /// without materializing it; a match still requires the full
+    /// compare (hashes can collide). Pinned equal to
+    /// `self.pattern().structural_hash()` by the push/pop walk tests.
+    pub fn structural_hash(&self) -> u64 {
+        self.hash
     }
 
     /// The prefix's vertices in visit order (`Embedding::vertices` of
@@ -442,6 +558,11 @@ mod tests {
                 let e = Embedding::new(prefix.clone());
                 assert_eq!(stack.pattern(), quick_pattern(g, &e, mode), "{prefix:?}");
                 assert_eq!(stack.vertices(), e.vertices(g, mode), "{prefix:?}");
+                assert_eq!(
+                    stack.structural_hash(),
+                    stack.pattern().structural_hash(),
+                    "incremental hash must track the carried pattern: {prefix:?}"
+                );
                 if depth_left == 0 {
                     return;
                 }
@@ -480,6 +601,7 @@ mod tests {
                 assert!(carried.edges.windows(2).all(|w| w[0] < w[1]), "{:?}", carried.edges);
                 let renorm = Pattern::new(carried.vlabels.clone(), carried.edges.clone());
                 assert_eq!(carried, renorm, "carried list must equal its own normalization");
+                assert_eq!(s.structural_hash(), carried.structural_hash());
             };
             for w in crate::embedding::initial_candidates(&g, mode).into_iter().take(8) {
                 stack.push(&g, w, mode);
@@ -508,6 +630,29 @@ mod tests {
     #[should_panic(expected = "pop on empty QuickStack")]
     fn quick_stack_underflow_panics() {
         QuickStack::new().pop();
+    }
+
+    #[test]
+    fn structural_hash_separates_and_respects_equality() {
+        // Equal patterns hash equal (the fast path's soundness side)…
+        let p = Pattern::new(vec![0, 1, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        let q = Pattern::new(vec![0, 1, 0], vec![(1, 2, 0), (0, 1, 0)]);
+        assert_eq!(p, q);
+        assert_eq!(p.structural_hash(), q.structural_hash());
+        // …and nearby distinct patterns separate: label, edge, and
+        // visit-position perturbations all move the hash. (Not a
+        // guarantee — collisions exist — but these pins catch a broken
+        // mixer or a term that ignores one of its inputs.)
+        let label = Pattern::new(vec![0, 1, 1], vec![(0, 1, 0), (1, 2, 0)]);
+        let edge = Pattern::new(vec![0, 1, 0], vec![(0, 1, 0), (0, 2, 0)]);
+        let elabel = Pattern::new(vec![0, 1, 0], vec![(0, 1, 0), (1, 2, 7)]);
+        let perm = Pattern::new(vec![1, 0, 0], vec![(0, 1, 0), (1, 2, 0)]);
+        for other in [&label, &edge, &elabel, &perm] {
+            assert_ne!(p.structural_hash(), other.structural_hash(), "{other}");
+        }
+        // The empty pattern hashes to the stack's reset value.
+        assert_eq!(Pattern::new(vec![], vec![]).structural_hash(), 0);
+        assert_eq!(QuickStack::new().structural_hash(), 0);
     }
 
     #[test]

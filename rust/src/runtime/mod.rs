@@ -1,7 +1,10 @@
 //! PJRT runtime: load and execute the AOT census artifacts from the
 //! Rust hot path (Python never runs here). This is the L2/L1 sidecar of
 //! the stack described in ARCHITECTURE.md — the mining engine itself
-//! ([`crate::engine`]) never depends on it.
+//! ([`crate::engine`]) never depends on it, and neither does the
+//! multi-process transport ([`crate::comm`]): a distributed run spawns
+//! shard processes of the same binary, each of which degrades to the
+//! enumeration oracle exactly like a local one.
 //!
 //! `make artifacts` lowers the L2 JAX census model (around the L1 Pallas
 //! kernel) to HLO *text* in `artifacts/`; with the `pjrt` cargo feature

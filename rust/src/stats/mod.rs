@@ -109,6 +109,17 @@ impl PhaseTimes {
         }
     }
 
+    /// Raw per-phase nanosecond counters, indexed like [`ALL_PHASES`] —
+    /// the wire representation `comm::wire` ships between processes.
+    pub fn nanos(&self) -> [u64; 8] {
+        self.nanos
+    }
+
+    /// Rebuild from the wire representation (inverse of [`Self::nanos`]).
+    pub fn from_nanos(nanos: [u64; 8]) -> Self {
+        PhaseTimes { nanos }
+    }
+
     /// Fractions per phase (sums to 1 unless empty).
     pub fn fractions(&self) -> Vec<(Phase, f64)> {
         let total: u64 = self.nanos.iter().sum();
@@ -126,14 +137,21 @@ impl PhaseTimes {
     }
 }
 
-/// Communication accounting across simulated server boundaries.
+/// Communication accounting across server boundaries. `messages` and
+/// `bytes` are the *simulated* model (what the paper's Fig 9 measures:
+/// serialized sizes that WOULD cross server boundaries); `wire_bytes`
+/// is what the TCP transport (`comm`) actually put on a socket —
+/// frame headers included — so the two can be compared per step. It
+/// stays 0 for in-process runs.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CommStats {
     /// Logical messages (one per aggregation entry / ODAG merge entry /
     /// broadcast recipient).
     pub messages: u64,
-    /// Serialized bytes crossing server boundaries.
+    /// Serialized bytes crossing server boundaries (simulated model).
     pub bytes: u64,
+    /// Measured bytes written to real sockets by `comm` frames.
+    pub wire_bytes: u64,
 }
 
 impl CommStats {
@@ -142,9 +160,15 @@ impl CommStats {
         self.bytes += bytes;
     }
 
+    /// Record bytes that actually crossed a socket (frame + payload).
+    pub fn add_wire(&mut self, bytes: u64) {
+        self.wire_bytes += bytes;
+    }
+
     pub fn merge(&mut self, other: &CommStats) {
         self.messages += other.messages;
         self.bytes += other.bytes;
+        self.wire_bytes += other.wire_bytes;
     }
 }
 
@@ -305,6 +329,29 @@ mod tests {
         c.add(5, 200);
         assert_eq!(c.messages, 15);
         assert_eq!(c.bytes, 1200);
+    }
+
+    #[test]
+    fn wire_bytes_are_separate_from_the_simulated_model() {
+        let mut c = CommStats::default();
+        c.add(10, 1000);
+        c.add_wire(64);
+        let mut d = CommStats::default();
+        d.add_wire(36);
+        c.merge(&d);
+        assert_eq!(c.wire_bytes, 100);
+        assert_eq!((c.messages, c.bytes), (10, 1000), "simulated model untouched");
+    }
+
+    #[test]
+    fn phase_nanos_roundtrip() {
+        let mut t = PhaseTimes::default();
+        t.add(Phase::Read, Duration::from_nanos(123));
+        t.add(Phase::Steal, Duration::from_nanos(7));
+        let back = PhaseTimes::from_nanos(t.nanos());
+        assert_eq!(back.get(Phase::Read), Duration::from_nanos(123));
+        assert_eq!(back.get(Phase::Steal), Duration::from_nanos(7));
+        assert_eq!(back.nanos(), t.nanos());
     }
 
     #[test]

@@ -72,6 +72,20 @@ impl Args {
         }
     }
 
+    /// A required option: error (naming the option) when absent. Used
+    /// by the internal `shard` command, whose options have no sensible
+    /// defaults — a shard without `--connect` or `--shard-id` is a bug
+    /// in the spawning coordinator, not a user mistake.
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).with_context(|| format!("--{name} is required"))
+    }
+
+    pub fn require_usize(&self, name: &str) -> Result<usize> {
+        self.require(name)?
+            .parse()
+            .with_context(|| format!("--{name} expects an integer"))
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -115,6 +129,18 @@ mod tests {
     fn bad_integer_is_error() {
         let a = parse(&["--servers", "lots"], &[]);
         assert!(a.get_usize("servers", 1).is_err());
+    }
+
+    #[test]
+    fn require_errors_on_absence_and_names_the_option() {
+        let a = parse(&["--connect", "127.0.0.1:9"], &[]);
+        assert_eq!(a.require("connect").unwrap(), "127.0.0.1:9");
+        let e = a.require("shard-id").unwrap_err();
+        assert!(e.to_string().contains("--shard-id"), "{e}");
+        let a = parse(&["--shard-id", "2"], &[]);
+        assert_eq!(a.require_usize("shard-id").unwrap(), 2);
+        let a = parse(&["--shard-id", "two"], &[]);
+        assert!(a.require_usize("shard-id").is_err());
     }
 
     #[test]

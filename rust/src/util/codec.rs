@@ -55,11 +55,39 @@ pub struct Reader<'a> {
     pos: usize,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+/// Decode failures. Every reader/deserializer in the crate returns one
+/// of these instead of panicking — hostile bytes (truncated frames,
+/// bit-flipped tags, absurd length prefixes) must surface as values the
+/// caller can handle, which is what keeps the `no-unwrap` lint rule
+/// honest on the wire paths (`comm::wire`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CodecError {
-    #[error("codec underrun: needed {needed} bytes at offset {at}, have {have}")]
+    /// Fewer bytes remain than the next read needs.
     Underrun { at: usize, needed: usize, have: usize },
+    /// A tag/discriminant byte holds a value no variant claims.
+    BadTag { at: usize, tag: u8, what: &'static str },
+    /// A length or count prefix exceeds the decoder's sanity bound —
+    /// the bytes are corrupt or adversarial, not merely short.
+    Oversized { at: usize, len: u64, max: u64 },
 }
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Underrun { at, needed, have } => {
+                write!(f, "codec underrun: needed {needed} bytes at offset {at}, have {have}")
+            }
+            CodecError::BadTag { at, tag, what } => {
+                write!(f, "codec bad tag: byte {tag:#04x} at offset {at} is no {what}")
+            }
+            CodecError::Oversized { at, len, max } => {
+                write!(f, "codec oversized: length {len} at offset {at} exceeds bound {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 impl<'a> Reader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
@@ -102,6 +130,34 @@ impl<'a> Reader<'a> {
             v.push(self.get_u32()?);
         }
         Ok(v)
+    }
+
+    /// Read a `u32` count prefix and reject it if it exceeds `max` —
+    /// the guard every wire decoder runs *before* allocating anything
+    /// sized by attacker-controlled bytes.
+    pub fn get_count(&mut self, max: u64) -> Result<usize, CodecError> {
+        let at = self.pos;
+        let n = u64::from(self.get_u32()?);
+        if n > max {
+            return Err(CodecError::Oversized { at, len: n, max });
+        }
+        Ok(n as usize)
+    }
+
+    /// Read one tag byte and fail with [`CodecError::BadTag`] unless it
+    /// is strictly below `variants` (tags are dense from 0).
+    pub fn get_tag(&mut self, variants: u8, what: &'static str) -> Result<u8, CodecError> {
+        let at = self.pos;
+        let t = self.get_u8()?;
+        if t >= variants {
+            return Err(CodecError::BadTag { at, tag: t, what });
+        }
+        Ok(t)
+    }
+
+    /// Current read offset (wire decoders report it in their errors).
+    pub fn pos(&self) -> usize {
+        self.pos
     }
 
     pub fn remaining(&self) -> usize {
@@ -153,5 +209,41 @@ mod tests {
         let bytes = w.into_bytes();
         let mut r = Reader::new(&bytes);
         assert_eq!(r.get_u32_vec().unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn count_guard_rejects_oversized_before_allocating() {
+        let mut w = Writer::new();
+        w.put_u32(1_000_000);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(
+            r.get_count(1024),
+            Err(CodecError::Oversized { at: 0, len: 1_000_000, max: 1024 })
+        );
+        // Within bound, the same prefix decodes.
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_count(2_000_000).unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn tag_guard_rejects_unknown_discriminants() {
+        let mut r = Reader::new(&[9]);
+        assert_eq!(
+            r.get_tag(3, "frame kind"),
+            Err(CodecError::BadTag { at: 0, tag: 9, what: "frame kind" })
+        );
+        let mut r = Reader::new(&[2]);
+        assert_eq!(r.get_tag(3, "frame kind").unwrap(), 2);
+    }
+
+    #[test]
+    fn errors_render_human_readable() {
+        let e = CodecError::Underrun { at: 3, needed: 4, have: 1 };
+        assert_eq!(e.to_string(), "codec underrun: needed 4 bytes at offset 3, have 1");
+        let e = CodecError::BadTag { at: 0, tag: 0xff, what: "agg value" };
+        assert!(e.to_string().contains("0xff"), "{e}");
+        let e = CodecError::Oversized { at: 8, len: 1 << 40, max: 1 << 20 };
+        assert!(e.to_string().contains("exceeds bound"), "{e}");
     }
 }

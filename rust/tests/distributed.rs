@@ -1,0 +1,182 @@
+//! Differential conformance suite: a multi-process distributed run over
+//! loopback TCP must be **bit-identical** to the in-process engine with
+//! the same `Config` — pattern counts, aggregation maps (including
+//! domain supports), per-step counters, and the simulated comm model.
+//!
+//! Every test here spawns real shard processes of the `arabesque`
+//! binary (`CARGO_BIN_EXE_arabesque`) and drives them through the
+//! coordinator, then compares against `Cluster::run_with_sink` field by
+//! field. The matrix covers the three paper apps × shard counts
+//! {1, 2, 3} × both frontier representations (ODAG / embedding list).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use arabesque::agg::AggVal;
+use arabesque::comm::{self, AppSpec};
+use arabesque::engine::{tree_reduce, Cluster, Config, RunResult};
+use arabesque::graph::gen;
+use arabesque::odag::OdagStore;
+use arabesque::output::{CountingSink, OutputSink};
+use arabesque::pattern::Pattern;
+use arabesque::util::codec::Writer;
+use arabesque::LabeledGraph;
+
+fn exe() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_arabesque"))
+}
+
+/// Assert a distributed run equals its in-process reference on every
+/// deterministic field (timing fields are measured, so excluded).
+fn assert_bit_identical(local: &RunResult, dist: &RunResult, what: &str) {
+    assert_eq!(local.steps.len(), dist.steps.len(), "{what}: step count");
+    for (l, d) in local.steps.iter().zip(&dist.steps) {
+        let s = l.step;
+        assert_eq!(l.candidates, d.candidates, "{what}: step {s} candidates");
+        assert_eq!(l.processed, d.processed, "{what}: step {s} processed");
+        assert_eq!(l.frontier, d.frontier, "{what}: step {s} frontier");
+        assert_eq!(l.frontier_bytes, d.frontier_bytes, "{what}: step {s} frontier_bytes");
+        assert_eq!(l.list_bytes, d.list_bytes, "{what}: step {s} list_bytes");
+        assert_eq!(l.steals, d.steals, "{what}: step {s} steals");
+        assert_eq!(l.stolen_units, d.stolen_units, "{what}: step {s} stolen_units");
+        assert_eq!(l.pattern_rescans, d.pattern_rescans, "{what}: step {s} rescans");
+        assert_eq!(l.root_descents, d.root_descents, "{what}: step {s} descents");
+        assert_eq!(l.comm.messages, d.comm.messages, "{what}: step {s} comm messages");
+        assert_eq!(l.comm.bytes, d.comm.bytes, "{what}: step {s} comm bytes");
+    }
+    assert_eq!(local.num_outputs, dist.num_outputs, "{what}: outputs");
+    assert_eq!(local.processed, dist.processed, "{what}: processed");
+    assert_eq!(local.candidates, dist.candidates, "{what}: candidates");
+    assert_eq!(local.steals, dist.steals, "{what}: steals");
+    assert_eq!(local.pattern_rescans, dist.pattern_rescans, "{what}: rescans");
+    assert_eq!(local.root_descents, dist.root_descents, "{what}: descents");
+    assert_eq!(local.comm.messages, dist.comm.messages, "{what}: comm messages");
+    assert_eq!(local.comm.bytes, dist.comm.bytes, "{what}: comm bytes");
+    assert_eq!(local.canonical_patterns, dist.canonical_patterns, "{what}: canonical");
+    assert_eq!(local.peak_frontier_bytes, dist.peak_frontier_bytes, "{what}: peak frontier");
+    assert_eq!(local.agg_stats.mapped, dist.agg_stats.mapped, "{what}: mapped");
+    assert_eq!(
+        local.agg_stats.canonize_calls,
+        dist.agg_stats.canonize_calls,
+        "{what}: canonize calls"
+    );
+    assert_eq!(
+        local.agg_stats.quick_patterns,
+        dist.agg_stats.quick_patterns,
+        "{what}: quick patterns"
+    );
+    assert_eq!(
+        local.aggregates.pattern_history,
+        dist.aggregates.pattern_history,
+        "{what}: pattern history"
+    );
+    assert_eq!(
+        local.aggregates.pattern_output,
+        dist.aggregates.pattern_output,
+        "{what}: pattern output"
+    );
+    assert_eq!(local.aggregates.int_history, dist.aggregates.int_history, "{what}: int history");
+}
+
+/// Run the full shard-count × frontier matrix for one app over `g`.
+fn conformance_matrix(spec: &AppSpec, g: &LabeledGraph, threads: usize) {
+    for shards in [1usize, 2, 3] {
+        for use_odag in [true, false] {
+            let what = format!("{spec:?} shards={shards} odag={use_odag}");
+            let cfg = Config::new(shards, threads).with_steal(false).with_odag(use_odag);
+
+            let app = spec.build();
+            let local_sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
+            let local = Cluster::new(cfg.clone()).run_with_sink(g, app.as_ref(), local_sink);
+            // The in-process engine never touches a socket.
+            assert_eq!(local.comm.wire_bytes, 0, "{what}: local wire bytes");
+
+            let dist_sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
+            let dist = comm::run_distributed(exe(), g, spec, &cfg, dist_sink)
+                .unwrap_or_else(|e| panic!("{what}: distributed run failed: {e:#}"));
+            // Real traffic crossed the loopback: frames are measured.
+            assert!(dist.comm.wire_bytes > 0, "{what}: measured wire bytes");
+
+            assert_bit_identical(&local, &dist, &what);
+        }
+    }
+}
+
+#[test]
+fn motifs_distributed_matches_local() {
+    let g = gen::erdos_renyi(40, 140, 1, 1, 7).unlabeled();
+    conformance_matrix(&AppSpec::Motifs(3), &g, 2);
+}
+
+#[test]
+fn cliques_distributed_matches_local() {
+    let g = gen::erdos_renyi(35, 100, 2, 1, 3).unlabeled();
+    conformance_matrix(&AppSpec::Cliques(4), &g, 2);
+}
+
+#[test]
+fn fsm_distributed_matches_local() {
+    // Labeled graph; low support so domain-valued aggregates actually
+    // cross the wire and merge across shards.
+    let g = gen::erdos_renyi(30, 90, 3, 2, 13);
+    conformance_matrix(&AppSpec::Fsm { support: 3, max_edges: Some(2) }, &g, 2);
+}
+
+#[test]
+fn distributed_rejects_stealing_configs() {
+    let g = gen::small("k5").unwrap().unlabeled();
+    let cfg = Config::new(2, 2); // steal defaults to true
+    let sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
+    let err = comm::run_distributed(exe(), &g, &AppSpec::Cliques(4), &cfg, sink)
+        .expect_err("steal=true must be rejected");
+    assert!(err.to_string().contains("steal"), "{err}");
+}
+
+/// Serialize a store/map pair to bytes — the conformance suite's notion
+/// of value identity (the wire codecs are deterministic: sorted keys,
+/// sorted patterns, sorted domains).
+fn fingerprint(store: &OdagStore, map: &std::collections::HashMap<Pattern, AggVal>) -> Vec<u8> {
+    let mut w = Writer::new();
+    store.serialize(&mut w);
+    comm::wire::put_pattern_map(&mut w, map);
+    w.into_bytes()
+}
+
+#[test]
+fn shard_merge_order_never_changes_the_merged_values() {
+    // Three shard-style parts with overlapping patterns and mixed
+    // Long/Domain values, merged in every arrival order: the merged
+    // ODAG store and aggregation map must fingerprint identically.
+    let pa = Pattern::new(vec![0, 0], vec![(0, 1, 0)]);
+    let pb = Pattern::new(vec![0, 1], vec![(0, 1, 0)]);
+    let mk = |seed: u32| {
+        let mut store = OdagStore::new();
+        store.add(&pa, &[seed, seed + 1]);
+        store.add(&pb, &[seed + 2, seed + 3]);
+        let mut m = std::collections::HashMap::new();
+        m.insert(pa.clone(), AggVal::Long(seed as i64));
+        let mut d = arabesque::agg::DomainSupport::new(2);
+        d.add(0, seed);
+        d.add(1, seed * 7 + 1);
+        m.insert(pb.clone(), AggVal::Domain(d));
+        (store, m)
+    };
+    let parts = [mk(1), mk(10), mk(20)];
+
+    let mut reference: Option<Vec<u8>> = None;
+    for order in [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]] {
+        for parallel in [false, true] {
+            let stores: Vec<OdagStore> = order.iter().map(|&i| parts[i].0.clone()).collect();
+            let maps = order.iter().map(|&i| parts[i].1.clone()).collect();
+            let (store, _, _) = tree_reduce(stores, OdagStore::merge_owned, parallel);
+            let (map, _, _) = tree_reduce(maps, arabesque::agg::merge_into, parallel);
+            let fp = fingerprint(&store.unwrap(), &map.unwrap());
+            match &reference {
+                None => reference = Some(fp),
+                Some(want) => {
+                    assert_eq!(&fp, want, "order {order:?} parallel={parallel} diverged")
+                }
+            }
+        }
+    }
+}

@@ -34,6 +34,12 @@ fn atomics_scope_fires_outside_allowlist_only() {
     assert_eq!(lines(&f, "atomics-scope"), vec![4, 6, 7]);
     // The identical source inside an allowlisted module is exempt.
     assert!(rules::atomics_scope("rust/src/engine/steal.rs", &lx).is_empty());
+    // The distributed frame layer (measured-bytes counter) is allowlisted;
+    // suffix matching must not bleed onto neighboring comm modules.
+    assert!(rules::atomics_scope("rust/src/comm/frame.rs", &lx).is_empty());
+    assert_eq!(lines(&rules::atomics_scope("rust/src/comm/wire.rs", &lx), "atomics-scope"), vec![
+        4, 6, 7
+    ]);
 }
 
 #[test]
@@ -95,6 +101,39 @@ fn merge_coverage_reports_dropped_fields_once() {
     let decoy = MergeSpec { impl_owner: "Unrelated", ..spec };
     let f = rules::merge_coverage(&decoy, &def, &acc);
     assert_eq!(lines(&f, "merge-coverage"), vec![5, 6, 7]);
+}
+
+#[test]
+fn merge_coverage_pins_the_shard_out_binding() {
+    // The production spec table must carry the distributed binding: a
+    // ShardOut field a shard ships but the coordinator never folds is
+    // exactly the dropped-at-barrier bug class, across processes.
+    assert!(
+        rules::MERGE_SPECS.iter().any(|s| s.strukt == "ShardOut"
+            && s.impl_owner == "Coordinator"
+            && s.fn_name == "merge_shard_outs"
+            && s.acc_file == "rust/src/comm/coordinator.rs"),
+        "MERGE_SPECS lost the ShardOut binding"
+    );
+
+    let def = lexer::lex(include_str!("lint_fixtures/shard_merge_def.rs"));
+    let acc = lexer::lex(include_str!("lint_fixtures/shard_merge_acc.rs"));
+    let spec = MergeSpec {
+        strukt: "WireOut",
+        def_file: "rust/tests/lint_fixtures/shard_merge_def.rs",
+        impl_owner: "Coordinator",
+        fn_name: "merge_shard_outs",
+        acc_file: "rust/tests/lint_fixtures/shard_merge_acc.rs",
+    };
+    let f = rules::merge_coverage(&spec, &def, &acc);
+    // `frontier_list`/`candidates`/`phase_nanos` are folded and
+    // `wire_only` is allowlisted; only `lost_in_transit` (line 8) fires.
+    assert_eq!(lines(&f, "merge-coverage"), vec![8]);
+    assert!(f[0].msg.contains("lost_in_transit"), "{}", f[0].msg);
+    // The decoy owner mentions every field — owner disambiguation must
+    // produce the decoy's (clean) result, not the real fold's gaps.
+    let decoy = MergeSpec { impl_owner: "Shard", ..spec };
+    assert!(rules::merge_coverage(&decoy, &def, &acc).is_empty());
 }
 
 #[test]

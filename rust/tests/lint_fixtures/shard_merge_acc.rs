@@ -1,0 +1,22 @@
+// Fixture: `merge-coverage` accumulate side — the Coordinator's
+// merge_shard_outs folds everything except `lost_in_transit`.
+
+impl Coordinator {
+    fn broadcast(&mut self) {}
+
+    fn merge_shard_outs(&self, outs: Vec<WireOut>) {
+        for out in outs {
+            self.st.candidates += out.candidates;
+            self.frontier.push(out.frontier_list);
+            self.phases.add(out.phase_nanos);
+        }
+    }
+}
+
+impl Shard {
+    // Decoy on the wrong owner: it happens to mention every field, so
+    // pointing the spec here must yield a clean (not inherited) result.
+    fn merge_shard_outs(&self, o: &WireOut) {
+        let _ = (o.frontier_list, o.candidates, o.phase_nanos, o.lost_in_transit, o.wire_only);
+    }
+}

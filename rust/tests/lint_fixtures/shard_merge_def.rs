@@ -1,0 +1,11 @@
+// Fixture: `merge-coverage` distributed binding — a ShardOut-style
+// wire struct whose coordinator fold must touch every field.
+
+pub struct WireOut {
+    pub frontier_list: u64,
+    pub candidates: u64,
+    pub phase_nanos: u64,
+    pub lost_in_transit: u64,
+    // lint:allow(merge-coverage) — measured coordinator-side, not folded.
+    pub wire_only: u64,
+}
