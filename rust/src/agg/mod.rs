@@ -82,7 +82,7 @@ impl AggVal {
 }
 
 /// Counters reported by the engine (Table 4 / Fig 11 inputs).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct AggStats {
     /// Embeddings mapped into pattern aggregation.
     pub mapped: u64,
@@ -189,6 +189,29 @@ impl PatternAggregator {
         canon::canonicalize(quick)
     }
 
+    /// Freeze every piece of cross-step state (quick/canonical maps, the
+    /// canonization cache, counters) into a value the distributed layer
+    /// can serialize into a barrier checkpoint (`comm::wire`).
+    pub fn snapshot(&self) -> AggSnapshot {
+        AggSnapshot {
+            quick: self.quick.clone(),
+            canonical: self.canonical.clone(),
+            canon_cache: self.canon_cache.clone(),
+            stats: self.stats,
+        }
+    }
+
+    /// Replace all cross-step state with `snap`, resuming exactly where
+    /// the snapshot was taken — including `canonize_calls`, so a
+    /// restored worker's counters match a never-failed one bit for bit.
+    /// `two_level` is configuration, not state; it is left untouched.
+    pub fn restore(&mut self, snap: AggSnapshot) {
+        self.quick = snap.quick;
+        self.canonical = snap.canonical;
+        self.canon_cache = snap.canon_cache;
+        self.stats = snap.stats;
+    }
+
     /// End-of-step flush: drain local state into a canonical-keyed map
     /// ready for the global merge. Two-level mode canonizes once per
     /// distinct quick pattern here (cache lookups are free).
@@ -214,6 +237,24 @@ impl PatternAggregator {
         }
         std::mem::take(&mut self.canonical)
     }
+}
+
+/// Everything a [`PatternAggregator`] carries across supersteps, frozen
+/// for a barrier checkpoint. Restoring this into a fresh aggregator of
+/// the same `two_level` mode makes it behaviorally indistinguishable
+/// from the one that was snapshotted — the property the distributed
+/// layer's replay-after-failure determinism rests on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AggSnapshot {
+    /// Unflushed quick-pattern partials (two-level mode only).
+    pub quick: HashMap<Pattern, AggVal>,
+    /// Canonical-keyed results accumulated since the last flush.
+    pub canonical: HashMap<Pattern, AggVal>,
+    /// quick pattern -> (canonical pattern, perm); without it a restored
+    /// worker would re-canonize and overcount `canonize_calls`.
+    pub canon_cache: HashMap<Pattern, (Pattern, Vec<u8>)>,
+    /// Counters as of the snapshot.
+    pub stats: AggStats,
 }
 
 /// Fold one aggregation map into another by key (the reducer's merge).
@@ -330,6 +371,36 @@ mod tests {
         agg.map(edge_pattern(0, 1), AggVal::Long(1));
         agg.flush();
         assert_eq!(agg.stats.canonize_calls, 1, "second step hits the cache");
+    }
+
+    #[test]
+    fn restored_aggregator_is_indistinguishable_from_the_original() {
+        // Drive an aggregator partway (flushed step + unflushed quick
+        // partials), snapshot, then finish it two ways: directly, and
+        // via a fresh aggregator restored from the snapshot. Both the
+        // flushed maps and every counter must agree — this is the
+        // replay-determinism contract the distributed checkpoint uses.
+        let mut a = PatternAggregator::new(true);
+        a.map(edge_pattern(0, 1), AggVal::Long(1));
+        a.map(edge_pattern(1, 0), AggVal::Long(2));
+        a.flush();
+        a.map(edge_pattern(0, 1), AggVal::Long(4));
+        a.map(edge_pattern(2, 2), AggVal::Long(8));
+        let snap = a.snapshot();
+
+        let mut b = PatternAggregator::new(true);
+        b.restore(snap);
+        for agg in [&mut a, &mut b] {
+            agg.map(edge_pattern(1, 0), AggVal::Long(16));
+        }
+        let out_a = a.flush();
+        let out_b = b.flush();
+        assert_eq!(out_a, out_b);
+        assert_eq!(a.stats.mapped, b.stats.mapped);
+        assert_eq!(a.stats.quick_patterns, b.stats.quick_patterns);
+        // The restored cache must prevent re-canonization: identical call
+        // counts even though `b` never canonized (0,1)/(1,0) itself.
+        assert_eq!(a.stats.canonize_calls, b.stats.canonize_calls);
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub fn lint_rust_source(root: &Path, rel: &str, src: &str) -> Vec<Finding> {
     let lx = lexer::lex(src);
     let mut out = Vec::new();
     out.extend(rules::no_unwrap(rel, &lx));
+    out.extend(rules::comm_deadline(rel, &lx));
     out.extend(rules::atomics_scope(rel, &lx));
     out.extend(rules::ordering_comment(rel, &lx));
     out.extend(rules::unsafe_comment(rel, &lx));

@@ -11,6 +11,7 @@
 //! | `ordering-comment` | every `Ordering::*` use carries an `ordering:` comment |
 //! | `unsafe-comment`   | every `unsafe` carries a `SAFETY` comment              |
 //! | `no-unwrap`        | no `unwrap()`/`expect()` in library code               |
+//! | `comm-deadline`    | socket ops in `comm/` go through `comm::io` deadlines  |
 //! | `doc-refs`         | `.md` references in comments/docs must exist           |
 //!
 //! Rules operate on [`lexer::Lexed`] token streams, never raw text, so
@@ -74,6 +75,56 @@ pub fn no_unwrap(file: &str, lx: &Lexed) -> Vec<Finding> {
             msg: format!(
                 "`.{}()` in library code — return an error, make the invariant \
                  impossible, or justify with lint:allow",
+                t[k].text
+            ),
+        });
+    }
+    out
+}
+
+/// `comm-deadline`: inside `comm/`, raw blocking socket operations
+/// (`read_exact`, `accept`, `connect`, `connect_timeout`) are findings
+/// unless they go through `comm::io`'s deadline wrappers — an
+/// `io::`-qualified path is exempt, as is `comm/io.rs` itself, where
+/// the raw calls are allowed to live. A bare socket call is a latent
+/// hang: a dead or wedged peer blocks it forever, which is exactly the
+/// failure mode the recovery layer exists to detect. Unit-test modules
+/// are exempt (their scripted loopback peers are part of the test).
+pub fn comm_deadline(file: &str, lx: &Lexed) -> Vec<Finding> {
+    if !file.contains("comm/") || file.ends_with("comm/io.rs") {
+        return Vec::new();
+    }
+    let spans = cfg_test_spans(lx);
+    let t = &lx.toks;
+    let mut out = Vec::new();
+    for k in 0..t.len() {
+        if t[k].kind != TokKind::Ident
+            || !matches!(
+                t[k].text.as_str(),
+                "read_exact" | "accept" | "connect" | "connect_timeout"
+            )
+        {
+            continue;
+        }
+        // Only call sites (`name(`) — parameters, field names, and
+        // string text never count.
+        if !t.get(k + 1).is_some_and(|n| n.text == "(") {
+            continue;
+        }
+        // `io::name(…)` is the deadline wrapper itself. The lexer
+        // splits `::` into two `:` puncts.
+        let via_io =
+            k >= 3 && t[k - 1].text == ":" && t[k - 2].text == ":" && t[k - 3].text == "io";
+        if via_io || in_spans(&spans, t[k].line) || lx.allowed_at(t[k].line, "comm-deadline") {
+            continue;
+        }
+        out.push(Finding {
+            rule: "comm-deadline",
+            file: file.to_string(),
+            line: t[k].line,
+            msg: format!(
+                "raw `{}` in comm/ outside comm::io — socket operations must carry a \
+                 deadline (use the comm::io wrappers, or justify with lint:allow)",
                 t[k].text
             ),
         });

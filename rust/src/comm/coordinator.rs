@@ -14,17 +14,35 @@
 //! bit-identical too; `CommStats::wire_bytes` adds what this process
 //! actually put on (and took off) its sockets, measured per step.
 //!
+//! **Fault tolerance** (pinned by `rust/tests/recovery.rs`): the
+//! coordinator is also the recovery authority. Every socket operation
+//! carries a deadline (`comm::io`), so a crashed, wedged, or garbling
+//! shard surfaces as a typed `CommError` instead of a hang. Each
+//! `ShardOut` carries the shard's barrier checkpoint (an opaque
+//! `wire::ShardSnapshot`), which the coordinator stores verbatim. On a
+//! shard failure it kills the incarnation, respawns the same shard id
+//! (bounded by [`RecoveryOptions::max_shard_retries`], spaced by
+//! exponential backoff), replays the stored checkpoint in a `Restore`
+//! frame, and re-sends the failed superstep to that shard alone. The
+//! checkpoint is exactly the shard's cross-step private state, so the
+//! replayed superstep recomputes byte-identical results — recovery is
+//! invisible to every deterministic `RunResult` field (only wall times
+//! and measured `wire_bytes` differ). A fault repeated past the retry
+//! budget fails fast with a typed `comm-retries-exhausted` error.
+//!
 //! The coordinator holds no workers: its per-step job is serialize,
-//! broadcast, collect, merge, decide termination. At the end it gathers
-//! each shard's flushed output aggregation and sink count, runs
-//! `app.report` locally, and assembles the same `RunResult` the
-//! in-process engine returns.
+//! broadcast, collect, merge, checkpoint, decide termination. At the
+//! end it gathers each shard's flushed output aggregation and sink
+//! count, runs `app.report` locally, and assembles the same `RunResult`
+//! the in-process engine returns.
 
 use std::collections::HashMap;
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
+// lint:allow(atomics-scope) — imports the temp-file name sequence below.
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use crate::agg::{self, AggStats, AggVal};
@@ -37,11 +55,58 @@ use crate::output::OutputSink;
 use crate::pattern::Pattern;
 use crate::stats::{CommStats, Phase, PhaseTimes, StepStats};
 use crate::util::codec::Writer;
-use crate::util::err::{Context, Result};
+use crate::util::err::{Context, Error, Result};
 
-use super::frame::{expect_frame, send_frame, FrameKind, WireCounter};
-use super::wire::{self, put_embedding_list, put_int_map, put_pattern_map, FinalOut, ShardOut};
+use super::fault::FaultPlan;
+use super::frame::{FrameKind, WireCounter};
+use super::io::{self, DeadlineStream};
+use super::wire::{
+    self, put_embedding_list, put_int_map, put_pattern_map, FinalOut, ShardOut, ShardSnapshot,
+};
 use super::AppSpec;
+
+/// Failure-detection deadlines and recovery budgets for a distributed
+/// run. The defaults suit interactive runs; the recovery test suite
+/// shrinks them to keep fault drills fast.
+#[derive(Debug, Clone)]
+pub struct RecoveryOptions {
+    /// Deadline for any single frame exchange with a shard during the
+    /// superstep loop. A shard that produces no frame within this
+    /// window is declared failed and recovered.
+    pub step_timeout: Duration,
+    /// Deadline for a (re)spawned shard process to connect.
+    pub handshake_timeout: Duration,
+    /// How many times one shard id may be respawned before the run
+    /// fails fast with a `comm-retries-exhausted` error.
+    pub max_shard_retries: u32,
+    /// First respawn delay; doubles per retry of the same shard
+    /// (`backoff_base × 2^(retries-1)`).
+    pub backoff_base: Duration,
+    /// Deterministic faults to inject (`--inject`), forwarded to shard
+    /// processes through their argv.
+    pub faults: FaultPlan,
+}
+
+impl Default for RecoveryOptions {
+    fn default() -> Self {
+        RecoveryOptions {
+            step_timeout: Duration::from_secs(60),
+            handshake_timeout: Duration::from_secs(10),
+            max_shard_retries: 3,
+            backoff_base: Duration::from_millis(100),
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
+/// How long a shard tolerates coordinator silence (forwarded as
+/// `--peer-timeout-ms`). While a shard waits for its next `Step`, the
+/// coordinator may be timing out and recovering *other* shards — up to
+/// a full `step_timeout` per retry round — so the shard-side deadline
+/// must dominate the coordinator's whole recovery budget.
+fn shard_peer_timeout(opts: &RecoveryOptions) -> Duration {
+    opts.step_timeout * (opts.max_shard_retries + 2)
+}
 
 /// The coordinator's frontier: the engine's [`crate::engine::Frontier`]
 /// without an extraction plan — shards rebuild plans locally, and the
@@ -90,27 +155,109 @@ fn encode_step(
     w.into_bytes()
 }
 
-/// Shard child processes, killed on drop so a coordinator error never
-/// leaks orphan processes.
-struct ShardProcs {
-    children: Vec<Child>,
-}
-
-impl ShardProcs {
-    /// Reap every child, failing if any exited unsuccessfully.
-    fn join(mut self) -> Result<()> {
-        let mut children = std::mem::take(&mut self.children);
-        for (k, child) in children.iter_mut().enumerate() {
-            let status = child.wait().with_context(|| format!("wait for shard {k}"))?;
-            if !status.success() {
-                bail!("shard {k} exited with {status}");
-            }
-        }
-        Ok(())
+/// Reject a hostile or confused `Hello`: the announced id must be in
+/// range and not already claimed by a live connection.
+fn validate_hello_id(id: usize, shards: usize, taken: &[bool]) -> Result<()> {
+    if id >= shards {
+        bail!("shard announced out-of-range id {id} (expected < {shards})");
     }
+    if taken[id] {
+        bail!("two shards announced id {id}");
+    }
+    Ok(())
 }
 
-impl Drop for ShardProcs {
+/// Accept one shard connection and read its `Hello`, all under
+/// deadlines — a peer that connects but never identifies itself cannot
+/// wedge the coordinator. Returns the announced id and the wrapped
+/// stream (its per-frame deadline already set to `step_timeout`).
+fn accept_hello(
+    listener: &TcpListener,
+    opts: &RecoveryOptions,
+    wire: &WireCounter,
+    what: &str,
+) -> Result<(usize, DeadlineStream)> {
+    let stream = io::accept(listener, opts.handshake_timeout, what)?;
+    stream.set_nodelay(true).context("set TCP_NODELAY")?;
+    let mut ds = DeadlineStream::new(stream, opts.step_timeout);
+    let hello = ds
+        .expect_frame(FrameKind::Hello, wire)
+        .with_context(|| format!("{what}: await Hello"))?;
+    let id = wire::get_hello(&hello).context("decode Hello frame")?;
+    Ok((id, ds))
+}
+
+/// Build one shard's argv from the run configuration and launch it.
+/// `faults` is the plan for *this incarnation* — a respawn gets the
+/// plan stripped of already-fired one-shot entries.
+fn spawn_shard(
+    exe: &Path,
+    cfg: &Config,
+    spec: &AppSpec,
+    addr: &str,
+    graph_path: &Path,
+    peer_timeout: Duration,
+    faults: &FaultPlan,
+    k: usize,
+) -> Result<Child> {
+    let mut cmd = Command::new(exe);
+    cmd.arg("shard")
+        .arg("--shard-id")
+        .arg(k.to_string())
+        .arg("--shards")
+        .arg(cfg.servers.to_string())
+        .arg("--threads")
+        .arg(cfg.threads_per_server.to_string())
+        .arg("--block")
+        .arg(cfg.block.to_string())
+        .arg("--connect")
+        .arg(addr)
+        .arg("--graph")
+        .arg(graph_path)
+        .arg("--peer-timeout-ms")
+        .arg(peer_timeout.as_millis().to_string());
+    if !cfg.use_odag {
+        cmd.arg("--no-odag");
+    }
+    if !cfg.two_level_agg {
+        cmd.arg("--one-level");
+    }
+    if let Partition::Skewed(pct) = cfg.partition {
+        cmd.arg("--skew").arg(pct.to_string());
+    }
+    if !faults.is_empty() {
+        cmd.arg("--inject").arg(faults.to_arg());
+    }
+    cmd.args(spec.to_args());
+    cmd.stdin(Stdio::null());
+    cmd.spawn().with_context(|| format!("spawn shard {k} from {exe:?}"))
+}
+
+/// Owns the run's listener, shard processes, connections, barrier
+/// checkpoints, and recovery ledger. Dropping it kills every child, so
+/// a coordinator error never leaks orphan processes.
+struct Coordinator<'a> {
+    exe: &'a Path,
+    cfg: &'a Config,
+    spec: &'a AppSpec,
+    opts: &'a RecoveryOptions,
+    addr: String,
+    graph_path: &'a Path,
+    listener: TcpListener,
+    children: Vec<Child>,
+    streams: Vec<DeadlineStream>,
+    wire: WireCounter,
+    /// Per shard: the serialized `ShardSnapshot` from its latest merged
+    /// `ShardOut` (initially the empty snapshot, so a shard that dies
+    /// in superstep 1 restores through the same path as any other).
+    checkpoints: Vec<Vec<u8>>,
+    /// Per shard: respawns consumed against `max_shard_retries`.
+    retries: Vec<u32>,
+    shard_restarts: u64,
+    replayed_steps: u64,
+}
+
+impl Drop for Coordinator<'_> {
     fn drop(&mut self) {
         for child in &mut self.children {
             let _ = child.kill();
@@ -119,44 +266,181 @@ impl Drop for ShardProcs {
     }
 }
 
-/// Owns the accepted shard connections and the measured-bytes counter.
-struct Coordinator {
-    streams: Vec<TcpStream>,
-    wire: WireCounter,
-}
-
-impl Coordinator {
-    fn broadcast(&mut self, kind: FrameKind, payload: &[u8]) -> Result<()> {
-        for (k, s) in self.streams.iter_mut().enumerate() {
-            send_frame(s, kind, payload, &self.wire)
-                .with_context(|| format!("send {kind:?} to shard {k}"))?;
+impl<'a> Coordinator<'a> {
+    /// Spawn all shards, accept their connections, and slot them by the
+    /// shard id in their `Hello` — arrival order is whatever the OS
+    /// scheduler makes it.
+    fn launch(
+        exe: &'a Path,
+        cfg: &'a Config,
+        spec: &'a AppSpec,
+        opts: &'a RecoveryOptions,
+        listener: TcpListener,
+        addr: String,
+        graph_path: &'a Path,
+    ) -> Result<Coordinator<'a>> {
+        let shards = cfg.servers;
+        let peer_timeout = shard_peer_timeout(opts);
+        let mut children = Vec::with_capacity(shards);
+        for k in 0..shards {
+            children.push(spawn_shard(
+                exe, cfg, spec, &addr, graph_path, peer_timeout, &opts.faults, k,
+            )?);
         }
-        Ok(())
+        let mut coord = Coordinator {
+            exe,
+            cfg,
+            spec,
+            opts,
+            addr,
+            graph_path,
+            listener,
+            children,
+            streams: Vec::new(),
+            wire: WireCounter::new(),
+            checkpoints: vec![ShardSnapshot::initial(cfg.threads_per_server).serialize(); shards],
+            retries: vec![0; shards],
+            shard_restarts: 0,
+            replayed_steps: 0,
+        };
+        let mut slots: Vec<Option<DeadlineStream>> = (0..shards).map(|_| None).collect();
+        for _ in 0..shards {
+            let (id, ds) = accept_hello(&coord.listener, coord.opts, &coord.wire, "accept shard")?;
+            let taken: Vec<bool> = slots.iter().map(Option::is_some).collect();
+            validate_hello_id(id, shards, &taken)?;
+            slots[id] = Some(ds);
+        }
+        coord.streams = slots
+            .into_iter()
+            .enumerate()
+            .map(|(k, s)| s.with_context(|| format!("shard {k} never connected")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(coord)
     }
 
-    /// Receive one frame of `want` kind from every shard, in shard-id
-    /// order — which makes downstream list concatenation deterministic
-    /// (shard k's embeddings precede shard k+1's, and within a shard
-    /// they are already in worker-id order).
-    fn collect(&mut self, want: FrameKind) -> Result<Vec<Vec<u8>>> {
-        let mut out = Vec::with_capacity(self.streams.len());
-        for (k, s) in self.streams.iter_mut().enumerate() {
-            out.push(
-                expect_frame(s, want, &self.wire)
-                    .with_context(|| format!("receive {want:?} from shard {k}"))?,
+    /// One full lockstep round: send `payload` to every shard, then
+    /// collect and decode one `want` frame from each, **recovering any
+    /// shard that fails at any point** (send error, deadline, dead
+    /// peer, undecodable reply). Broadcast-then-collect is preserved so
+    /// healthy shards always compute in parallel; after a recovery only
+    /// the respawned shard re-receives the payload — a replay of this
+    /// round for that shard alone.
+    ///
+    /// `count_replay` marks rounds that are supersteps (for the
+    /// `replayed_steps` ledger; the Finish round is not a superstep).
+    fn exchange<T>(
+        &mut self,
+        send_kind: FrameKind,
+        payload: &[u8],
+        want: FrameKind,
+        decode: impl Fn(&[u8]) -> Result<T>,
+        count_replay: bool,
+    ) -> Result<Vec<T>> {
+        let n = self.streams.len();
+        let mut done: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut sent = vec![false; n];
+        let mut replay_counted = false;
+        while done.iter().any(Option::is_none) {
+            for k in 0..n {
+                if done[k].is_none() && !sent[k] {
+                    match self.streams[k].send_frame(send_kind, payload, &self.wire, "send") {
+                        Ok(()) => sent[k] = true,
+                        Err(e) => {
+                            let err =
+                                Error::from(e).wrap(format!("send {send_kind:?} to shard {k}"));
+                            self.recover(k, &err)?;
+                            if count_replay && !replay_counted {
+                                replay_counted = true;
+                                self.replayed_steps += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            for k in 0..n {
+                if done[k].is_none() && sent[k] {
+                    let got = self.streams[k]
+                        .expect_frame(want, &self.wire)
+                        .map_err(Error::from)
+                        .and_then(|p| decode(&p))
+                        .with_context(|| format!("receive {want:?} from shard {k}"));
+                    match got {
+                        Ok(v) => done[k] = Some(v),
+                        Err(e) => {
+                            self.recover(k, &e)?;
+                            sent[k] = false;
+                            if count_replay && !replay_counted {
+                                replay_counted = true;
+                                self.replayed_steps += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(done.into_iter().flatten().collect())
+    }
+
+    /// Replace a failed shard: diagnose the process, charge the retry
+    /// budget, kill the old incarnation, back off, respawn the same
+    /// shard id, re-handshake, and replay its barrier checkpoint with a
+    /// `Restore` frame. On success `streams[k]` is the new incarnation,
+    /// restored and waiting for the round's payload.
+    fn recover(&mut self, k: usize, err: &Error) -> Result<()> {
+        // A crashed child and a wedged one both surface as socket
+        // errors; try_wait tells them apart for the diagnostics.
+        let diagnosis = match self.children[k].try_wait() {
+            Ok(Some(status)) => format!("process exited with {status}"),
+            Ok(None) => "process still running (wedged)".to_string(),
+            Err(e) => format!("process state unknown ({e})"),
+        };
+        self.retries[k] += 1;
+        if self.retries[k] > self.opts.max_shard_retries {
+            bail!(
+                "comm-retries-exhausted: shard {k} failed {} times, over --max-shard-retries {} \
+                 (last failure: {err}; {diagnosis})",
+                self.retries[k],
+                self.opts.max_shard_retries
             );
         }
-        Ok(out)
+        self.shard_restarts += 1;
+        let _ = self.children[k].kill();
+        let _ = self.children[k].wait();
+        // Exponential backoff: failures from environmental pressure
+        // (fork storms, port exhaustion) get breathing room to clear.
+        let backoff = self.opts.backoff_base * (1u32 << (self.retries[k] - 1).min(16));
+        std::thread::sleep(backoff);
+        self.children[k] = spawn_shard(
+            self.exe,
+            self.cfg,
+            self.spec,
+            &self.addr,
+            self.graph_path,
+            shard_peer_timeout(self.opts),
+            &self.opts.faults.for_respawn(k),
+            k,
+        )?;
+        let what = format!("accept respawned shard {k}");
+        let (id, mut ds) = accept_hello(&self.listener, self.opts, &self.wire, &what)?;
+        if id != k {
+            bail!("respawned shard announced id {id}, expected {k}");
+        }
+        ds.send_frame(FrameKind::Restore, &self.checkpoints[k], &self.wire, "send Restore")
+            .with_context(|| format!("restore respawned shard {k}"))?;
+        self.streams[k] = ds;
+        Ok(())
     }
 
     /// The cross-shard barrier: exactly `Cluster::run_with_sink`'s
     /// accumulation loop, field for field, over [`ShardOut`]s instead of
     /// `WorkerOut`s (the `merge-coverage` lint binds every `ShardOut`
-    /// field to this function). Returns the merged ODAG store, both
-    /// step aggregate maps, and the concatenated list frontier.
+    /// field to this function). Stores each shard's barrier checkpoint
+    /// for recovery and counts it into `CommStats::checkpoint_bytes`.
+    /// Returns the merged ODAG store, both step aggregate maps, and the
+    /// concatenated list frontier.
     #[allow(clippy::type_complexity)]
     fn merge_shard_outs(
-        &self,
+        &mut self,
         cfg: &Config,
         st: &mut StepStats,
         outs: Vec<ShardOut>,
@@ -168,7 +452,7 @@ impl Coordinator {
         let mut odag_parts: Vec<OdagStore> = Vec::with_capacity(n);
         let mut list_parts: Vec<Vec<Vec<u32>>> = Vec::with_capacity(n);
         let mut list_total = 0usize;
-        for out in outs {
+        for (i, out) in outs.into_iter().enumerate() {
             st.candidates += out.candidates;
             st.processed += out.processed;
             st.frontier += out.frontier_added;
@@ -186,7 +470,13 @@ impl Coordinator {
                 messages: out.shuffle_messages,
                 bytes: out.shuffle_bytes,
                 wire_bytes: 0,
+                checkpoint_bytes: 0,
             });
+            // The barrier checkpoint: counted (deterministically — one
+            // valid ShardOut per shard per step, replays excluded) and
+            // stored verbatim for a possible Restore.
+            st.comm.add_checkpoint(out.snapshot.len() as u64);
+            self.checkpoints[i] = out.snapshot;
             *processed_total += out.processed;
             agg_parts.push(out.pattern_part);
             int_parts.push(out.int_part);
@@ -217,23 +507,46 @@ impl Coordinator {
             merged_list,
         )
     }
+
+    /// Reap every child, failing if any exited unsuccessfully.
+    fn join(mut self) -> Result<()> {
+        let mut children = std::mem::take(&mut self.children);
+        for (k, child) in children.iter_mut().enumerate() {
+            let status = child.wait().with_context(|| format!("wait for shard {k}"))?;
+            if !status.success() {
+                bail!("shard {k} exited with {status}");
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Spawn `cfg.servers` shard processes of `exe`, run the application to
-/// completion across them, and return the same [`RunResult`] the
-/// in-process engine produces (timing fields measured here; all counts,
-/// maps, and simulated comm totals bit-identical — the conformance
-/// suite's invariant).
-///
-/// `exe` is this binary's path: `std::env::current_exe()` from the CLI,
-/// `env!("CARGO_BIN_EXE_arabesque")` from integration tests. The graph
-/// ships to shards through a temp file; config and app ship as argv.
+/// completion across them with default recovery options, and return the
+/// same [`RunResult`] the in-process engine produces.
 pub fn run_distributed(
     exe: &Path,
     g: &LabeledGraph,
     spec: &AppSpec,
     cfg: &Config,
     sink: Arc<dyn OutputSink>,
+) -> Result<RunResult> {
+    run_distributed_with(exe, g, spec, cfg, sink, &RecoveryOptions::default())
+}
+
+/// [`run_distributed`] with explicit failure-detection deadlines,
+/// retry budgets, and fault injection.
+///
+/// `exe` is this binary's path: `std::env::current_exe()` from the CLI,
+/// `env!("CARGO_BIN_EXE_arabesque")` from integration tests. The graph
+/// ships to shards through a temp file; config and app ship as argv.
+pub fn run_distributed_with(
+    exe: &Path,
+    g: &LabeledGraph,
+    spec: &AppSpec,
+    cfg: &Config,
+    sink: Arc<dyn OutputSink>,
+    opts: &RecoveryOptions,
 ) -> Result<RunResult> {
     if cfg.steal {
         bail!("distributed execution requires steal=false (cross-process queues cannot be stolen from)");
@@ -246,16 +559,15 @@ pub fn run_distributed(
     // file), and shards can connect the moment they start.
     let listener = TcpListener::bind("127.0.0.1:0").context("bind coordinator listener")?;
     let addr = listener.local_addr().context("coordinator local addr")?;
-    let graph_path = std::env::temp_dir()
-        .join(format!("arab_dist_{}_{}.graph", std::process::id(), addr.port()));
+    let graph_path = unique_graph_path(addr.port());
     loader::save_arabesque(g, &graph_path)?;
     let _cleanup = TempFile(graph_path.clone());
 
-    let procs = spawn_shards(exe, cfg, spec, &addr.to_string(), &graph_path)?;
-    let mut coord = accept_shards(&listener, shards)?;
+    let mut coord =
+        Coordinator::launch(exe, cfg, spec, opts, listener, addr.to_string(), &graph_path)?;
 
     // ---- the superstep loop: the engine's, with the compute phase
-    // ---- replaced by a broadcast/collect over the shard sockets.
+    // ---- replaced by a recoverable exchange over the shard sockets.
     let mut frontier = CoordFrontier::Init;
     let mut prev_pattern_aggs: HashMap<Pattern, AggVal> = HashMap::new();
     let mut prev_int_aggs: HashMap<i64, AggVal> = HashMap::new();
@@ -279,13 +591,14 @@ pub fn run_distributed(
         let wire0 = coord.wire.total();
 
         let payload = encode_step(step as u64, &frontier, &prev_pattern_aggs, &prev_int_aggs);
-        coord.broadcast(FrameKind::Step, &payload)?;
+        let shard_outs: Vec<ShardOut> = coord.exchange(
+            FrameKind::Step,
+            &payload,
+            FrameKind::ShardOut,
+            |b| ShardOut::deserialize(b).context("decode ShardOut frame"),
+            true,
+        )?;
         drop(payload);
-        let shard_outs: Vec<ShardOut> = coord
-            .collect(FrameKind::ShardOut)?
-            .iter()
-            .map(|b| ShardOut::deserialize(b).context("decode ShardOut frame"))
-            .collect::<Result<_>>()?;
 
         // ---- barrier: identical accumulation, reductions, broadcast
         // ---- accounting, and history folds as the in-process engine.
@@ -348,14 +661,17 @@ pub fn run_distributed(
         step += 1;
     }
 
-    // ---- end of computation: collect output aggregation + counters.
+    // ---- end of computation: collect output aggregation + counters
+    // ---- (same recoverable exchange — a shard dying at Finish time is
+    // ---- restored and asked to Finish again).
     let wire_finish0 = coord.wire.total();
-    coord.broadcast(FrameKind::Finish, &[])?;
-    let finals: Vec<FinalOut> = coord
-        .collect(FrameKind::FinalOut)?
-        .iter()
-        .map(|b| FinalOut::deserialize(b).context("decode FinalOut frame"))
-        .collect::<Result<_>>()?;
+    let finals: Vec<FinalOut> = coord.exchange(
+        FrameKind::Finish,
+        &[],
+        FrameKind::FinalOut,
+        |b| FinalOut::deserialize(b).context("decode FinalOut frame"),
+        false,
+    )?;
     let mut agg_stats = AggStats::default();
     let mut shard_outputs = 0u64;
     let mut out_parts = Vec::with_capacity(shards);
@@ -369,7 +685,9 @@ pub fn run_distributed(
     comm_total.add_wire(coord.wire.total() - wire_finish0);
     let pattern_output = agg::merge_global(out_parts);
 
-    procs.join()?;
+    let shard_restarts = coord.shard_restarts;
+    let replayed_steps = coord.replayed_steps;
+    coord.join()?;
 
     let aggregates = RunAggregates { pattern_history, pattern_output, int_history };
     app.report(g, &aggregates, sink.as_ref());
@@ -389,6 +707,8 @@ pub fn run_distributed(
         stolen_units: stolen_units_total,
         pattern_rescans: pattern_rescans_total,
         root_descents: root_descents_total,
+        shard_restarts,
+        replayed_steps,
         comm: comm_total,
         phases: phases_total,
         agg_stats,
@@ -396,6 +716,29 @@ pub fn run_distributed(
         peak_frontier_bytes,
         aggregates,
     })
+}
+
+/// Monotonic per-process sequence for coordinator temp files — two
+/// coordinators alive in one process (parallel integration tests) could
+/// otherwise race, and PID+port alone cannot rule that out across a
+/// port's reuse.
+// lint:allow(atomics-scope) — a private filename counter; no data is
+// published through it.
+static TEMP_FILE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A temp graph path no other live coordinator can collide with: PID
+/// (cross-process), listener port (cross-run), sequence (cross-thread
+/// within this process).
+fn unique_graph_path(port: u16) -> PathBuf {
+    // ordering: the counter only needs uniqueness, not ordering against
+    // any other memory. lint:allow(atomics-scope)
+    let seq = TEMP_FILE_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "arab_dist_{}_{}_{}.graph",
+        std::process::id(),
+        port,
+        seq
+    ))
 }
 
 /// Delete-on-drop guard for the temp graph file.
@@ -407,69 +750,101 @@ impl Drop for TempFile {
     }
 }
 
-/// Build each shard's argv from the run configuration and launch it.
-fn spawn_shards(
-    exe: &Path,
-    cfg: &Config,
-    spec: &AppSpec,
-    addr: &str,
-    graph_path: &Path,
-) -> Result<ShardProcs> {
-    let mut children = Vec::with_capacity(cfg.servers);
-    for k in 0..cfg.servers {
-        let mut cmd = Command::new(exe);
-        cmd.arg("shard")
-            .arg("--shard-id")
-            .arg(k.to_string())
-            .arg("--shards")
-            .arg(cfg.servers.to_string())
-            .arg("--threads")
-            .arg(cfg.threads_per_server.to_string())
-            .arg("--block")
-            .arg(cfg.block.to_string())
-            .arg("--connect")
-            .arg(addr)
-            .arg("--graph")
-            .arg(graph_path);
-        if !cfg.use_odag {
-            cmd.arg("--no-odag");
-        }
-        if !cfg.two_level_agg {
-            cmd.arg("--one-level");
-        }
-        if let Partition::Skewed(pct) = cfg.partition {
-            cmd.arg("--skew").arg(pct.to_string());
-        }
-        cmd.args(spec.to_args());
-        cmd.stdin(Stdio::null());
-        let child = cmd.spawn().with_context(|| format!("spawn shard {k} from {exe:?}"))?;
-        children.push(child);
-    }
-    Ok(ShardProcs { children })
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::TcpStream;
 
-/// Accept one connection per shard and slot it by the shard id in its
-/// `Hello` — arrival order is whatever the OS scheduler makes it.
-fn accept_shards(listener: &TcpListener, shards: usize) -> Result<Coordinator> {
-    let wire = WireCounter::new();
-    let mut slots: Vec<Option<TcpStream>> = (0..shards).map(|_| None).collect();
-    for _ in 0..shards {
-        let (mut stream, _) = listener.accept().context("accept shard connection")?;
-        stream.set_nodelay(true).context("set TCP_NODELAY")?;
-        let hello = expect_frame(&mut stream, FrameKind::Hello, &wire)?;
-        let id = wire::get_hello(&hello).context("decode Hello frame")?;
-        if id >= shards {
-            bail!("shard announced out-of-range id {id} (expected < {shards})");
+    /// Wall-clock bound proving "typed error, not a hang" — every case
+    /// below uses sub-second deadlines.
+    const NO_HANG: Duration = Duration::from_secs(15);
+
+    fn fast_opts() -> RecoveryOptions {
+        RecoveryOptions {
+            step_timeout: Duration::from_millis(400),
+            handshake_timeout: Duration::from_millis(500),
+            max_shard_retries: 1,
+            backoff_base: Duration::from_millis(10),
+            faults: FaultPlan::default(),
         }
-        if slots[id].is_some() {
-            bail!("two shards announced id {id}");
-        }
-        slots[id] = Some(stream);
     }
-    let streams = slots
-        .into_iter()
-        .enumerate()
-        .map(|(k, s)| s.with_context(|| format!("shard {k} never connected")))
-        .collect::<Result<Vec<_>>>()?;
-    Ok(Coordinator { streams, wire })
+
+    /// Script a hostile shard against `accept_hello`: the client runs
+    /// against a live coordinator listener; the typed error the
+    /// coordinator surfaces is returned.
+    fn hostile_hello(client: impl FnOnce(TcpStream) + Send + 'static) -> Error {
+        let t0 = Instant::now();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = std::thread::spawn(move || {
+            let s = TcpStream::connect(addr).unwrap();
+            client(s);
+        });
+        let wire = WireCounter::new();
+        let err = accept_hello(&listener, &fast_opts(), &wire, "test accept").unwrap_err();
+        peer.join().unwrap();
+        assert!(t0.elapsed() < NO_HANG);
+        err
+    }
+
+    #[test]
+    fn silent_peer_times_out_with_typed_error() {
+        let err = hostile_hello(|s| {
+            // Connect, say nothing past the coordinator's deadline.
+            std::thread::sleep(Duration::from_millis(900));
+            drop(s);
+        });
+        assert!(err.to_string().contains("comm-timeout:"), "{err}");
+    }
+
+    #[test]
+    fn wrong_frame_kind_is_a_protocol_error() {
+        let err = hostile_hello(|mut s| {
+            let wire = WireCounter::new();
+            super::super::frame::send_frame(&mut s, FrameKind::Finish, &[], &wire).unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+            drop(s);
+        });
+        assert!(err.to_string().contains("comm-protocol:"), "{err}");
+    }
+
+    #[test]
+    fn peer_dying_mid_frame_is_peer_died() {
+        let err = hostile_hello(|mut s| {
+            // Three bytes of a five-byte header, then gone.
+            s.write_all(&[9, 0, 0]).unwrap();
+            drop(s);
+        });
+        assert!(err.to_string().contains("comm-peer-died:"), "{err}");
+    }
+
+    #[test]
+    fn oversized_frame_header_is_a_protocol_error() {
+        let err = hostile_hello(|mut s| {
+            let mut header = [0u8; 5];
+            header[..4].copy_from_slice(&(super::super::frame::MAX_FRAME + 1).to_le_bytes());
+            s.write_all(&header).unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+            drop(s);
+        });
+        assert!(err.to_string().contains("comm-protocol:"), "{err}");
+    }
+
+    #[test]
+    fn hello_id_validation_rejects_out_of_range_and_duplicates() {
+        assert!(validate_hello_id(0, 2, &[false, false]).is_ok());
+        assert!(validate_hello_id(1, 2, &[true, false]).is_ok());
+        let e = validate_hello_id(2, 2, &[false, false]).unwrap_err();
+        assert!(e.to_string().contains("out-of-range"), "{e}");
+        let e = validate_hello_id(0, 2, &[true, false]).unwrap_err();
+        assert!(e.to_string().contains("two shards"), "{e}");
+    }
+
+    #[test]
+    fn temp_graph_paths_are_unique_per_call() {
+        let a = unique_graph_path(1234);
+        let b = unique_graph_path(1234);
+        assert_ne!(a, b, "same port, same PID — the sequence must differ");
+    }
 }

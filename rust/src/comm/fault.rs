@@ -1,0 +1,214 @@
+//! Deterministic fault injection for the distributed transport.
+//!
+//! A [`FaultPlan`] names exactly which shard fails, at which superstep,
+//! and how — so every recovery path in `comm::coordinator` is driven by
+//! reproducible tests and benches instead of luck. Plans travel as a
+//! compact CLI string (`--inject kill:shard=1,step=2`), both from the
+//! user into `run` mode and from the coordinator into respawned shard
+//! processes.
+//!
+//! Grammar (entries `;`-separated, assignments `,`-separated):
+//!
+//! ```text
+//! plan  := entry (';' entry)*
+//! entry := kind ':' 'shard=' N ',' 'step=' N [',' 'repeat']
+//! kind  := 'kill' | 'stall' | 'corrupt-frame'
+//! ```
+//!
+//! Without `repeat`, a fault fires only in a shard's *first* incarnation
+//! — the respawned process receives a plan stripped of one-shot entries
+//! ([`FaultPlan::for_respawn`]) and completes the replay. With `repeat`,
+//! every incarnation re-fires it, which is how the tests prove that
+//! `--max-shard-retries` turns a persistent fault into a typed fail-fast
+//! error instead of a respawn loop.
+
+use crate::bail;
+use crate::util::err::{Error, Result};
+
+/// How an injected fault manifests, mirroring the three real failure
+/// classes the coordinator must distinguish: a crashed process, a wedged
+/// one, and one emitting garbage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Exit immediately without replying (coordinator sees a dead peer).
+    Kill,
+    /// Stop responding but stay alive (coordinator sees a deadline
+    /// expire with the child still running).
+    Stall,
+    /// Reply with a well-framed `ShardOut` whose payload is garbage,
+    /// then exit (coordinator sees a decode failure).
+    CorruptFrame,
+}
+
+impl FaultKind {
+    fn name(self) -> &'static str {
+        match self {
+            FaultKind::Kill => "kill",
+            FaultKind::Stall => "stall",
+            FaultKind::CorruptFrame => "corrupt-frame",
+        }
+    }
+}
+
+/// One injected fault: `kind` fires when `shard` receives the `Step`
+/// frame for superstep `step`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub shard: usize,
+    pub step: u64,
+    /// Re-fire in respawned incarnations too (see module docs).
+    pub repeat: bool,
+}
+
+/// A set of injected faults; empty means a fault-free run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Parse the `--inject` grammar (see module docs).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for entry in s.split(';').filter(|e| !e.trim().is_empty()) {
+            let entry = entry.trim();
+            let (kind_s, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| Error::msg(format!("fault entry `{entry}` has no `kind:` prefix")))?;
+            let kind = match kind_s.trim() {
+                "kill" => FaultKind::Kill,
+                "stall" => FaultKind::Stall,
+                "corrupt-frame" => FaultKind::CorruptFrame,
+                other => bail!("unknown fault kind `{other}` (kill | stall | corrupt-frame)"),
+            };
+            let mut shard: Option<usize> = None;
+            let mut step: Option<u64> = None;
+            let mut repeat = false;
+            for part in rest.split(',') {
+                let part = part.trim();
+                if part == "repeat" {
+                    repeat = true;
+                } else if let Some(v) = part.strip_prefix("shard=") {
+                    shard = Some(v.parse().map_err(|_| {
+                        Error::msg(format!("fault entry `{entry}`: bad shard `{v}`"))
+                    })?);
+                } else if let Some(v) = part.strip_prefix("step=") {
+                    step = Some(v.parse().map_err(|_| {
+                        Error::msg(format!("fault entry `{entry}`: bad step `{v}`"))
+                    })?);
+                } else {
+                    bail!("fault entry `{entry}`: unknown part `{part}`");
+                }
+            }
+            let shard = shard
+                .ok_or_else(|| Error::msg(format!("fault entry `{entry}` needs shard=N")))?;
+            let step =
+                step.ok_or_else(|| Error::msg(format!("fault entry `{entry}` needs step=N")))?;
+            specs.push(FaultSpec { kind, shard, step, repeat });
+        }
+        Ok(FaultPlan { specs })
+    }
+
+    /// Render back into the `--inject` grammar (parse∘to_arg is
+    /// identity — the coordinator forwards plans to shard processes
+    /// through their argv).
+    pub fn to_arg(&self) -> String {
+        self.specs
+            .iter()
+            .map(|f| {
+                let mut s = format!("{}:shard={},step={}", f.kind.name(), f.shard, f.step);
+                if f.repeat {
+                    s.push_str(",repeat");
+                }
+                s
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// The plan a *respawned* incarnation of `shard` receives: only the
+    /// `repeat` faults aimed at it. One-shot faults already fired in the
+    /// first incarnation; other shards' faults are irrelevant to this
+    /// process.
+    pub fn for_respawn(&self, shard: usize) -> FaultPlan {
+        FaultPlan {
+            specs: self
+                .specs
+                .iter()
+                .filter(|f| f.repeat && f.shard == shard)
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// The fault (if any) that fires when `shard` begins superstep
+    /// `step` in this incarnation.
+    pub fn fire(&self, shard: usize, step: u64) -> Option<FaultKind> {
+        self.specs
+            .iter()
+            .find(|f| f.shard == shard && f.step == step)
+            .map(|f| f.kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_through_to_arg() {
+        for s in [
+            "kill:shard=1,step=2",
+            "stall:shard=0,step=1",
+            "corrupt-frame:shard=2,step=3,repeat",
+            "kill:shard=1,step=2,repeat;stall:shard=0,step=4",
+        ] {
+            let plan = FaultPlan::parse(s).unwrap();
+            assert_eq!(plan.to_arg(), s);
+            assert_eq!(FaultPlan::parse(&plan.to_arg()).unwrap(), plan);
+        }
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        for bad in [
+            "kill",                      // no assignments
+            "explode:shard=1,step=2",    // unknown kind
+            "kill:shard=1",              // missing step
+            "kill:step=2",               // missing shard
+            "kill:shard=x,step=2",       // bad number
+            "kill:shard=1,step=2,loud",  // unknown part
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn fire_matches_shard_and_step_exactly() {
+        let plan = FaultPlan::parse("kill:shard=1,step=2;stall:shard=0,step=3").unwrap();
+        assert_eq!(plan.fire(1, 2), Some(FaultKind::Kill));
+        assert_eq!(plan.fire(0, 3), Some(FaultKind::Stall));
+        assert_eq!(plan.fire(1, 3), None);
+        assert_eq!(plan.fire(0, 2), None);
+        assert_eq!(plan.fire(2, 2), None);
+    }
+
+    #[test]
+    fn respawn_plan_keeps_only_repeat_faults_for_that_shard() {
+        let plan = FaultPlan::parse(
+            "kill:shard=1,step=2;corrupt-frame:shard=1,step=3,repeat;kill:shard=0,step=1,repeat",
+        )
+        .unwrap();
+        let respawn = plan.for_respawn(1);
+        assert_eq!(respawn.specs.len(), 1);
+        assert_eq!(respawn.fire(1, 3), Some(FaultKind::CorruptFrame));
+        assert_eq!(respawn.fire(1, 2), None, "one-shot kill already fired");
+        assert!(plan.for_respawn(2).is_empty());
+    }
+}

@@ -54,18 +54,23 @@ pub enum FrameKind {
     /// Shard → coordinator, once at the end: output aggregation part,
     /// sink count, and aggregation statistics.
     FinalOut,
+    /// Coordinator → one respawned shard, before re-running a failed
+    /// superstep: the shard's last barrier checkpoint
+    /// (`wire::ShardSnapshot` bytes), restoring its cross-step state.
+    Restore,
 }
 
 impl FrameKind {
-    const COUNT: u8 = 5;
+    const COUNT: u8 = 6;
 
-    fn tag(self) -> u8 {
+    pub(super) fn tag(self) -> u8 {
         match self {
             FrameKind::Hello => 0,
             FrameKind::Step => 1,
             FrameKind::ShardOut => 2,
             FrameKind::Finish => 3,
             FrameKind::FinalOut => 4,
+            FrameKind::Restore => 5,
         }
     }
 
@@ -76,6 +81,7 @@ impl FrameKind {
             2 => Ok(FrameKind::ShardOut),
             3 => Ok(FrameKind::Finish),
             4 => Ok(FrameKind::FinalOut),
+            5 => Ok(FrameKind::Restore),
             _ => Err(CodecError::BadTag { at, tag: t, what: "frame kind" }),
         }
     }
@@ -93,7 +99,7 @@ impl WireCounter {
         Self::default()
     }
 
-    fn add(&self, bytes: u64) {
+    pub(super) fn add(&self, bytes: u64) {
         // ordering: pure statistics counter — no other memory is
         // published through it, so Relaxed suffices.
         self.0.fetch_add(bytes, Ordering::Relaxed);
@@ -148,9 +154,13 @@ pub fn send_frame(
 /// error. Nothing panics on hostile input.
 pub fn recv_frame(r: &mut impl Read, wire: &WireCounter) -> Result<(FrameKind, Vec<u8>)> {
     let mut header = [0u8; HEADER_BYTES as usize];
+    // lint:allow(comm-deadline) — generic `Read` path shared with the
+    // Cursor-driven hostile-bytes tests; production sockets reach it
+    // only through comm::io's deadline wrappers.
     r.read_exact(&mut header).context("read frame header")?;
     let (kind, len) = decode_header(header)?;
     let mut payload = vec![0u8; len];
+    // lint:allow(comm-deadline) — same generic Read path as above.
     r.read_exact(&mut payload).context("read frame payload")?;
     wire.add(HEADER_BYTES + len as u64);
     Ok((kind, payload))
@@ -191,6 +201,7 @@ mod tests {
             (FrameKind::ShardOut, &[0xAB; 100][..]),
             (FrameKind::Finish, &b""[..]),
             (FrameKind::FinalOut, &[7u8, 8, 9][..]),
+            (FrameKind::Restore, &[0xC0; 33][..]),
         ] {
             let (k, p, sent) = roundtrip(kind, payload);
             assert_eq!(k, kind);

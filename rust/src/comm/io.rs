@@ -1,0 +1,508 @@
+//! Deadline-aware socket I/O — the only sanctioned way `comm` touches a
+//! `TcpStream` or `TcpListener` (enforced by the `comm-deadline` lint
+//! rule in `analysis::rules`).
+//!
+//! PR 7's transport used blocking reads: a dead, wedged, or
+//! garbage-emitting peer hung the whole run on a `read_exact`. Here
+//! every operation runs against a deadline and failures come back as a
+//! typed [`CommError`]:
+//!
+//! * [`CommError::Timeout`] — the peer made no progress within the
+//!   deadline (it may still be alive: a stall, not a crash);
+//! * [`CommError::PeerDied`] — the connection is gone (EOF, reset,
+//!   refused);
+//! * [`CommError::Protocol`] — bytes arrived but violated the frame
+//!   protocol (bad header, oversized length, wrong kind, undecodable
+//!   payload).
+//!
+//! The distinction drives recovery in `comm::coordinator`: whatever the
+//! error, the coordinator respawns the shard, but `child.try_wait()`
+//! plus the error kind tell the operator (and the tests) *why*.
+//!
+//! A [`DeadlineStream`] arms **one deadline per frame operation**, not
+//! per syscall: receiving a frame's header and payload share a single
+//! deadline, so a peer trickling one byte per timeout window cannot
+//! stretch a frame receive forever. Byte accounting is identical to
+//! `comm::frame` — both sides of every frame add header + payload to
+//! the shared [`WireCounter`].
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::frame::{decode_header, FrameKind, WireCounter, HEADER_BYTES, MAX_FRAME};
+
+/// A failed socket operation, classified for recovery. `Display` output
+/// is prefixed `comm-timeout:` / `comm-peer-died:` / `comm-protocol:`
+/// so callers (and tests) can match on the class in rendered errors.
+#[derive(Debug)]
+pub enum CommError {
+    /// No progress within the deadline; the peer may still be alive.
+    Timeout { what: String, after: Duration },
+    /// The connection is gone: EOF, reset, or refused.
+    PeerDied { what: String },
+    /// Bytes arrived but violated the protocol.
+    Protocol { what: String },
+}
+
+impl CommError {
+    pub fn timeout(what: impl Into<String>, after: Duration) -> Self {
+        CommError::Timeout { what: what.into(), after }
+    }
+
+    pub fn peer_died(what: impl Into<String>) -> Self {
+        CommError::PeerDied { what: what.into() }
+    }
+
+    pub fn protocol(what: impl Into<String>) -> Self {
+        CommError::Protocol { what: what.into() }
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Timeout { what, after } => {
+                write!(f, "comm-timeout: {what}: no progress within {after:?}")
+            }
+            CommError::PeerDied { what } => write!(f, "comm-peer-died: {what}"),
+            CommError::Protocol { what } => write!(f, "comm-protocol: {what}"),
+        }
+    }
+}
+
+// The blanket `impl<E: std::error::Error> From<E> for util::err::Error`
+// lets `?` lift a CommError into the crate-wide error type with its
+// typed prefix intact.
+impl std::error::Error for CommError {}
+
+/// Classify an io error from a read/write on an established stream.
+fn classify(e: std::io::Error, what: &str) -> CommError {
+    match e.kind() {
+        // A zero-byte read maps to PeerDied before this is reached;
+        // everything the OS reports about a broken connection lands
+        // here.
+        ErrorKind::ConnectionReset
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::BrokenPipe
+        | ErrorKind::UnexpectedEof => CommError::peer_died(format!("{what}: {e}")),
+        _ => CommError::peer_died(format!("{what}: io error: {e}")),
+    }
+}
+
+/// A `TcpStream` whose frame operations each run under one deadline.
+pub struct DeadlineStream {
+    stream: TcpStream,
+    timeout: Duration,
+}
+
+impl DeadlineStream {
+    pub fn new(stream: TcpStream, timeout: Duration) -> DeadlineStream {
+        DeadlineStream { stream, timeout }
+    }
+
+    /// Read exactly `buf.len()` bytes before `deadline` expires.
+    fn read_exact_by(
+        &mut self,
+        buf: &mut [u8],
+        deadline: Instant,
+        what: &str,
+    ) -> Result<(), CommError> {
+        let mut filled = 0;
+        while filled < buf.len() {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(CommError::timeout(what, self.timeout));
+            }
+            // set_read_timeout rejects a zero Duration; remaining > 0 here.
+            self.stream
+                .set_read_timeout(Some(remaining))
+                .map_err(|e| classify(e, what))?;
+            match self.stream.read(&mut buf[filled..]) {
+                Ok(0) => {
+                    return Err(CommError::peer_died(format!(
+                        "{what}: connection closed after {filled}/{} bytes",
+                        buf.len()
+                    )))
+                }
+                Ok(n) => filled += n,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    // Timed-out read; the deadline check at the top of
+                    // the loop decides whether any budget remains.
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(classify(e, what)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Write all of `buf` before `deadline` expires.
+    fn write_all_by(
+        &mut self,
+        buf: &[u8],
+        deadline: Instant,
+        what: &str,
+    ) -> Result<(), CommError> {
+        let mut written = 0;
+        while written < buf.len() {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(CommError::timeout(what, self.timeout));
+            }
+            self.stream
+                .set_write_timeout(Some(remaining))
+                .map_err(|e| classify(e, what))?;
+            match self.stream.write(&buf[written..]) {
+                Ok(0) => {
+                    return Err(CommError::peer_died(format!("{what}: write returned 0")))
+                }
+                Ok(n) => written += n,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(classify(e, what)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Send one frame under a single deadline. Byte accounting matches
+    /// `frame::send_frame` exactly: header + payload into `wire`.
+    pub fn send_frame(
+        &mut self,
+        kind: FrameKind,
+        payload: &[u8],
+        wire: &WireCounter,
+        what: &str,
+    ) -> Result<(), CommError> {
+        if payload.len() as u64 > MAX_FRAME as u64 {
+            return Err(CommError::protocol(format!(
+                "{what}: refusing to send a {}-byte frame (max {MAX_FRAME})",
+                payload.len()
+            )));
+        }
+        let deadline = Instant::now() + self.timeout;
+        let mut header = [0u8; HEADER_BYTES as usize];
+        header[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        header[4] = kind.tag();
+        self.write_all_by(&header, deadline, what)?;
+        self.write_all_by(payload, deadline, what)?;
+        self.stream.flush().map_err(|e| classify(e, what))?;
+        wire.add(HEADER_BYTES + payload.len() as u64);
+        Ok(())
+    }
+
+    /// Receive one frame (header + payload) under a single deadline.
+    pub fn recv_frame(
+        &mut self,
+        wire: &WireCounter,
+    ) -> Result<(FrameKind, Vec<u8>), CommError> {
+        self.recv_frame_named("recv frame").map(|(k, p)| {
+            wire.add(HEADER_BYTES + p.len() as u64);
+            (k, p)
+        })
+    }
+
+    fn recv_frame_named(&mut self, what: &str) -> Result<(FrameKind, Vec<u8>), CommError> {
+        let deadline = Instant::now() + self.timeout;
+        let mut header = [0u8; HEADER_BYTES as usize];
+        self.read_exact_by(&mut header, deadline, what)?;
+        let (kind, len) = decode_header(header)
+            .map_err(|e| CommError::protocol(format!("{what}: bad frame header: {e}")))?;
+        let mut payload = vec![0u8; len];
+        self.read_exact_by(&mut payload, deadline, what)?;
+        Ok((kind, payload))
+    }
+
+    /// Receive one frame and fail unless it is of `want` kind — the
+    /// lockstep protocol knows what must arrive next at every point.
+    pub fn expect_frame(
+        &mut self,
+        want: FrameKind,
+        wire: &WireCounter,
+    ) -> Result<Vec<u8>, CommError> {
+        let (kind, payload) = self.recv_frame(wire)?;
+        if kind != want {
+            return Err(CommError::protocol(format!(
+                "expected {want:?} frame, got {kind:?}"
+            )));
+        }
+        Ok(payload)
+    }
+}
+
+/// Connect to `addr`, retrying refusals until the deadline — covers the
+/// startup race where a shard dials before the coordinator's listener
+/// (or a respawned shard dials a busy coordinator).
+pub fn connect(addr: &str, timeout: Duration) -> Result<TcpStream, CommError> {
+    let deadline = Instant::now() + timeout;
+    let mut last_err = String::from("no attempt made");
+    loop {
+        let addrs: Vec<_> = match addr.to_socket_addrs() {
+            Ok(it) => it.collect(),
+            Err(e) => {
+                return Err(CommError::protocol(format!("resolve {addr}: {e}")));
+            }
+        };
+        for sa in &addrs {
+            let budget = deadline
+                .saturating_duration_since(Instant::now())
+                .min(Duration::from_millis(250));
+            if budget.is_zero() {
+                break;
+            }
+            match TcpStream::connect_timeout(sa, budget) {
+                Ok(s) => return Ok(s),
+                Err(e) => last_err = e.to_string(),
+            }
+        }
+        if Instant::now() >= deadline {
+            return Err(CommError::timeout(
+                format!("connect to {addr} (last error: {last_err})"),
+                timeout,
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Accept one connection before the deadline. The listener is polled
+/// non-blocking (and restored to blocking on every exit path); the
+/// accepted stream is returned in blocking mode, ready to wrap in a
+/// [`DeadlineStream`].
+pub fn accept(
+    listener: &TcpListener,
+    timeout: Duration,
+    what: &str,
+) -> Result<TcpStream, CommError> {
+    let deadline = Instant::now() + timeout;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| CommError::protocol(format!("{what}: set_nonblocking: {e}")))?;
+    let result = loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let r = stream
+                    .set_nonblocking(false)
+                    .map_err(|e| CommError::protocol(format!("{what}: accepted stream: {e}")))
+                    .map(|_| stream);
+                break r;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    break Err(CommError::timeout(what, timeout));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => break Err(CommError::protocol(format!("{what}: accept: {e}"))),
+        }
+    };
+    let _ = listener.set_nonblocking(false);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::thread;
+
+    /// Generous wall-clock bound: every failing operation in these tests
+    /// uses a sub-second deadline, so finishing under this proves
+    /// "typed error, not a hang".
+    const NO_HANG: Duration = Duration::from_secs(10);
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dialer = thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (accepted, _) = listener.accept().unwrap();
+        (accepted, dialer.join().unwrap())
+    }
+
+    #[test]
+    fn dead_peer_is_peer_died_not_a_hang() {
+        let (ours, theirs) = pair();
+        drop(theirs);
+        let mut ds = DeadlineStream::new(ours, Duration::from_millis(500));
+        let t0 = Instant::now();
+        let err = ds.recv_frame(&WireCounter::new()).unwrap_err();
+        assert!(matches!(err, CommError::PeerDied { .. }), "{err}");
+        assert!(err.to_string().starts_with("comm-peer-died:"), "{err}");
+        assert!(t0.elapsed() < NO_HANG);
+    }
+
+    #[test]
+    fn stalled_peer_is_timeout_within_the_deadline() {
+        let (ours, theirs) = pair();
+        let mut ds = DeadlineStream::new(ours, Duration::from_millis(300));
+        let t0 = Instant::now();
+        let err = ds.recv_frame(&WireCounter::new()).unwrap_err();
+        assert!(matches!(err, CommError::Timeout { .. }), "{err}");
+        assert!(err.to_string().starts_with("comm-timeout:"), "{err}");
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= Duration::from_millis(250), "fired early: {elapsed:?}");
+        assert!(elapsed < NO_HANG);
+        drop(theirs);
+    }
+
+    #[test]
+    fn close_mid_payload_is_peer_died() {
+        // Header promises 100 payload bytes; the peer delivers 10 and
+        // dies — the mid-ShardOut close case.
+        let (ours, mut theirs) = pair();
+        let mut header = [0u8; HEADER_BYTES as usize];
+        header[..4].copy_from_slice(&100u32.to_le_bytes());
+        header[4] = 2; // ShardOut
+        theirs.write_all(&header).unwrap();
+        theirs.write_all(&[0xAB; 10]).unwrap();
+        drop(theirs);
+        let mut ds = DeadlineStream::new(ours, Duration::from_millis(500));
+        let t0 = Instant::now();
+        let err = ds.recv_frame(&WireCounter::new()).unwrap_err();
+        assert!(matches!(err, CommError::PeerDied { .. }), "{err}");
+        assert!(t0.elapsed() < NO_HANG);
+    }
+
+    #[test]
+    fn bad_header_is_protocol_error() {
+        let (ours, mut theirs) = pair();
+        // Unknown kind byte.
+        theirs.write_all(&[0, 0, 0, 0, 0xFF]).unwrap();
+        let mut ds = DeadlineStream::new(ours, Duration::from_millis(500));
+        let err = ds.recv_frame(&WireCounter::new()).unwrap_err();
+        assert!(matches!(err, CommError::Protocol { .. }), "{err}");
+        assert!(err.to_string().starts_with("comm-protocol:"), "{err}");
+        drop(theirs);
+    }
+
+    #[test]
+    fn oversized_header_is_protocol_error_before_allocation() {
+        let (ours, mut theirs) = pair();
+        let mut header = [0u8; HEADER_BYTES as usize];
+        header[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        header[4] = 2;
+        theirs.write_all(&header).unwrap();
+        let mut ds = DeadlineStream::new(ours, Duration::from_millis(500));
+        let err = ds.recv_frame(&WireCounter::new()).unwrap_err();
+        assert!(matches!(err, CommError::Protocol { .. }), "{err}");
+        drop(theirs);
+    }
+
+    #[test]
+    fn wrong_kind_is_protocol_error() {
+        let (ours, theirs) = pair();
+        let wire = WireCounter::new();
+        let mut sender = DeadlineStream::new(theirs, Duration::from_secs(2));
+        sender.send_frame(FrameKind::Finish, &[], &wire, "send").unwrap();
+        let mut ds = DeadlineStream::new(ours, Duration::from_secs(2));
+        let err = ds.expect_frame(FrameKind::ShardOut, &wire).unwrap_err();
+        assert!(matches!(err, CommError::Protocol { .. }), "{err}");
+    }
+
+    #[test]
+    fn frames_roundtrip_and_count_like_the_blocking_path() {
+        let (ours, theirs) = pair();
+        let wire = WireCounter::new();
+        let payload = vec![7u8; 1000];
+        let mut sender = DeadlineStream::new(theirs, Duration::from_secs(2));
+        sender.send_frame(FrameKind::ShardOut, &payload, &wire, "send").unwrap();
+        let sent = wire.total();
+        assert_eq!(sent, HEADER_BYTES + 1000);
+        let mut ds = DeadlineStream::new(ours, Duration::from_secs(2));
+        let (kind, got) = ds.recv_frame(&wire).unwrap();
+        assert_eq!(kind, FrameKind::ShardOut);
+        assert_eq!(got, payload);
+        assert_eq!(wire.total(), 2 * sent, "recv counts the same bytes");
+    }
+
+    #[test]
+    fn slow_but_live_peer_succeeds_within_the_deadline() {
+        // The whole frame shares one deadline, but a peer that keeps
+        // making progress inside it is fine.
+        let (ours, mut theirs) = pair();
+        let wire = WireCounter::new();
+        let feeder = thread::spawn(move || {
+            let mut header = [0u8; HEADER_BYTES as usize];
+            header[..4].copy_from_slice(&6u32.to_le_bytes());
+            header[4] = 1; // Step
+            theirs.write_all(&header).unwrap();
+            thread::sleep(Duration::from_millis(100));
+            theirs.write_all(&[1, 2, 3]).unwrap();
+            thread::sleep(Duration::from_millis(100));
+            theirs.write_all(&[4, 5, 6]).unwrap();
+        });
+        let mut ds = DeadlineStream::new(ours, Duration::from_secs(5));
+        let (kind, got) = ds.recv_frame(&wire).unwrap();
+        assert_eq!(kind, FrameKind::Step);
+        assert_eq!(got, vec![1, 2, 3, 4, 5, 6]);
+        feeder.join().unwrap();
+    }
+
+    #[test]
+    fn accept_times_out_with_no_connector() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let t0 = Instant::now();
+        let err = accept(&listener, Duration::from_millis(300), "accept test").unwrap_err();
+        assert!(matches!(err, CommError::Timeout { .. }), "{err}");
+        assert!(t0.elapsed() < NO_HANG);
+    }
+
+    #[test]
+    fn accept_returns_a_blocking_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dialer = thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            thread::sleep(Duration::from_millis(50));
+            s.write_all(&[9]).unwrap();
+            s
+        });
+        let accepted = accept(&listener, Duration::from_secs(5), "accept test").unwrap();
+        // A blocking-mode read waits for the delayed byte instead of
+        // failing WouldBlock (the nonblocking flag must not leak from
+        // the polled listener into the accepted stream).
+        let mut ds = DeadlineStream::new(accepted, Duration::from_secs(5));
+        let mut buf = [0u8; 1];
+        ds.read_exact_by(&mut buf, Instant::now() + Duration::from_secs(5), "read")
+            .unwrap();
+        assert_eq!(buf[0], 9);
+        drop(dialer.join().unwrap());
+    }
+
+    #[test]
+    fn connect_to_dead_port_times_out() {
+        // Bind-then-drop guarantees the port was just free; connecting
+        // must keep being refused until the deadline.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let t0 = Instant::now();
+        let err = connect(&addr.to_string(), Duration::from_millis(300)).unwrap_err();
+        assert!(matches!(err, CommError::Timeout { .. }), "{err}");
+        assert!(t0.elapsed() < NO_HANG);
+    }
+
+    #[test]
+    fn connect_reaches_a_live_listener() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let s = connect(&addr, Duration::from_secs(5)).unwrap();
+        drop(s);
+    }
+
+    #[test]
+    fn errors_render_with_stable_prefixes() {
+        let t = CommError::timeout("step 3 shard 1", Duration::from_secs(60));
+        assert!(t.to_string().starts_with("comm-timeout: step 3 shard 1"), "{t}");
+        let d = CommError::peer_died("shard 0");
+        assert_eq!(d.to_string(), "comm-peer-died: shard 0");
+        let p = CommError::protocol("bad hello");
+        assert_eq!(p.to_string(), "comm-protocol: bad hello");
+        // And the blanket conversion into the crate error keeps them.
+        let e: crate::util::err::Error = CommError::peer_died("x").into();
+        assert!(e.to_string().starts_with("comm-peer-died:"), "{e}");
+    }
+}

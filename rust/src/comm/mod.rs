@@ -15,14 +15,26 @@
 //! **bit-identical** to the single-process run with the same `Config`:
 //! same pattern counts, same aggregation maps, same per-step simulated
 //! comm totals. See `ARCHITECTURE.md` § "Distributed execution".
+//!
+//! The transport is fault-tolerant (pinned by `rust/tests/recovery.rs`):
+//! every socket operation carries a deadline ([`io`]), shards checkpoint
+//! their cross-step state at each barrier, and the coordinator respawns
+//! and replays failed shards ([`coordinator::RecoveryOptions`]) —
+//! without disturbing bit-identity. Failures are rehearsed
+//! deterministically via [`fault::FaultPlan`] (`--inject`). See
+//! `ARCHITECTURE.md` § "Fault tolerance".
 
 pub mod coordinator;
+pub mod fault;
 pub mod frame;
+pub mod io;
 pub mod shard;
 pub mod wire;
 
-pub use coordinator::run_distributed;
-pub use shard::run_shard;
+pub use coordinator::{run_distributed, run_distributed_with, RecoveryOptions};
+pub use fault::FaultPlan;
+pub use io::CommError;
+pub use shard::{run_shard, run_shard_with, ShardOptions};
 
 use crate::api::GraphMiningApp;
 use crate::apps::{Cliques, Fsm, MaximalCliques, Motifs};

@@ -17,9 +17,21 @@
 //! paper's broadcast does anyway) is enough. Worker state (aggregator
 //! caches, scratch embeddings) persists across steps exactly as the
 //! in-process engine's per-worker state does.
+//!
+//! **Fault tolerance (PR 8):** all socket traffic goes through
+//! `comm::io` deadlines, so a dying or wedged coordinator surfaces as a
+//! typed error instead of a hang. Every `ShardOut` carries a serialized
+//! [`wire::ShardSnapshot`] — the shard's cross-step private state
+//! (unflushed `output_agg`, `pattern_agg` with its canonization cache,
+//! the cumulative sink count) frozen at the barrier. If this process
+//! dies, the coordinator respawns the shard id and sends that snapshot
+//! back in a `Restore` frame before re-running the failed superstep;
+//! [`restore`](crate::agg::PatternAggregator::restore) makes the new
+//! incarnation bit-identical to one that never died. A [`FaultPlan`]
+//! (from `--inject`) can deterministically kill, stall, or corrupt this
+//! shard at a chosen step to prove all of that under test.
 
 use std::collections::HashMap;
-use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -34,38 +46,56 @@ use crate::output::{CountingSink, OutputSink};
 use crate::pattern::Pattern;
 use crate::util::err::{Context, Result};
 
-use super::frame::{recv_frame, send_frame, FrameKind, WireCounter};
-use super::wire::{self, FinalOut, ShardOut, StepMsg, WireFrontier};
+use super::fault::{FaultKind, FaultPlan};
+use super::frame::{FrameKind, WireCounter};
+use super::io::{self, DeadlineStream};
+use super::wire::{self, FinalOut, ShardOut, ShardSnapshot, StepMsg, WireFrontier, WorkerSnapshot};
 
-/// Connect to the coordinator with a short retry window (the coordinator
-/// binds its listener before spawning shards, but process startup can
-/// still race the accept loop under load).
-fn connect_with_retry(addr: &str) -> Result<TcpStream> {
-    let mut last_err = None;
-    for _ in 0..50 {
-        match TcpStream::connect(addr) {
-            Ok(s) => return Ok(s),
-            Err(e) => {
-                last_err = Some(e);
-                std::thread::sleep(Duration::from_millis(100));
-            }
-        }
-    }
-    match last_err {
-        Some(e) => Err(e).with_context(|| format!("connect to coordinator {addr}")),
-        None => bail!("connect to coordinator {addr}: no attempt made"),
+/// Budget for dialing the coordinator (its listener is bound before any
+/// shard is spawned, so this only covers process-startup races).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Shard-side runtime knobs, set by the coordinator through argv.
+pub struct ShardOptions {
+    /// How long a silent coordinator socket is tolerated before this
+    /// shard gives up. Must exceed the coordinator's worst case between
+    /// frames to this shard — merging, checkpointing, and recovering
+    /// *other* shards all happen while this one waits for its next
+    /// `Step` (the coordinator sizes it accordingly via
+    /// `--peer-timeout-ms`).
+    pub peer_timeout: Duration,
+    /// Deterministic faults to fire in this incarnation (`--inject`).
+    pub faults: FaultPlan,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        ShardOptions { peer_timeout: Duration::from_secs(300), faults: FaultPlan::default() }
     }
 }
 
 /// Run shard `shard_id` of `cfg.servers` against the coordinator at
-/// `connect`, to completion. Blocks until the coordinator sends
-/// `Finish`; returns once the `FinalOut` reply is on the wire.
+/// `connect`, to completion, with default options. Blocks until the
+/// coordinator sends `Finish`; returns once the `FinalOut` reply is on
+/// the wire.
 pub fn run_shard(
     connect: &str,
     shard_id: usize,
     cfg: &Config,
     g: &LabeledGraph,
     app: &dyn GraphMiningApp,
+) -> Result<()> {
+    run_shard_with(connect, shard_id, cfg, g, app, &ShardOptions::default())
+}
+
+/// [`run_shard`] with explicit deadline/fault options.
+pub fn run_shard_with(
+    connect: &str,
+    shard_id: usize,
+    cfg: &Config,
+    g: &LabeledGraph,
+    app: &dyn GraphMiningApp,
+    opts: &ShardOptions,
 ) -> Result<()> {
     if cfg.steal {
         // A thief would claim chunks owned by workers that live in
@@ -77,22 +107,55 @@ pub fn run_shard(
         bail!("shard id {shard_id} out of range for {} shards", cfg.servers);
     }
     let t_per = cfg.threads_per_server;
-    let mut stream = connect_with_retry(connect)?;
+    let stream = io::connect(connect, CONNECT_TIMEOUT)
+        .with_context(|| format!("connect to coordinator {connect}"))?;
     stream.set_nodelay(true).context("set TCP_NODELAY")?;
+    let mut ds = DeadlineStream::new(stream, opts.peer_timeout);
     let wire_counter = WireCounter::new();
-    send_frame(&mut stream, FrameKind::Hello, &wire::put_hello(shard_id), &wire_counter)?;
+    ds.send_frame(FrameKind::Hello, &wire::put_hello(shard_id), &wire_counter, "send Hello")?;
 
     let mut states: Vec<worker::WorkerState> =
         (0..t_per).map(|_| worker::WorkerState::new(cfg.two_level_agg)).collect();
     let sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
+    // Outputs produced by *previous incarnations* of this shard id,
+    // carried in through a Restore checkpoint. The local sink restarts
+    // at zero each incarnation; every reported count adds this base.
+    let mut restored_outputs = 0u64;
 
     loop {
-        let (kind, payload) = recv_frame(&mut stream, &wire_counter)?;
+        let (kind, payload) = ds
+            .recv_frame(&wire_counter)
+            .with_context(|| format!("shard {shard_id} awaiting coordinator"))?;
         match kind {
             FrameKind::Step => {
                 let msg = StepMsg::deserialize(&payload).context("decode Step frame")?;
-                let out = run_one_step(shard_id, cfg, g, app, &mut states, sink.as_ref(), &msg);
-                send_frame(&mut stream, FrameKind::ShardOut, &out.serialize(), &wire_counter)?;
+                if let Some(fault) = opts.faults.fire(shard_id, msg.step) {
+                    inject(fault, &mut ds, &wire_counter);
+                }
+                let mut out =
+                    run_one_step(shard_id, cfg, g, app, &mut states, sink.as_ref(), &msg);
+                out.snapshot = checkpoint(&states, sink.count() + restored_outputs);
+                ds.send_frame(
+                    FrameKind::ShardOut,
+                    &out.serialize(),
+                    &wire_counter,
+                    "send ShardOut",
+                )?;
+            }
+            FrameKind::Restore => {
+                let snap =
+                    ShardSnapshot::deserialize(&payload).context("decode Restore frame")?;
+                if snap.workers.len() != t_per {
+                    bail!(
+                        "restore checkpoint carries {} workers, this shard runs {t_per}",
+                        snap.workers.len()
+                    );
+                }
+                for (state, ws) in states.iter_mut().zip(snap.workers) {
+                    state.output_agg.restore(ws.output);
+                    state.pattern_agg.restore(ws.pattern);
+                }
+                restored_outputs = snap.outputs;
             }
             FrameKind::Finish => {
                 let mut out_parts = Vec::with_capacity(t_per);
@@ -109,15 +172,56 @@ pub fn run_shard(
                 }
                 let fin = FinalOut {
                     output_part: agg::merge_global(out_parts),
-                    outputs: sink.count(),
+                    outputs: sink.count() + restored_outputs,
                     mapped,
                     canonize_calls,
                     quick_patterns,
                 };
-                send_frame(&mut stream, FrameKind::FinalOut, &fin.serialize(), &wire_counter)?;
+                ds.send_frame(
+                    FrameKind::FinalOut,
+                    &fin.serialize(),
+                    &wire_counter,
+                    "send FinalOut",
+                )?;
                 return Ok(());
             }
             other => bail!("protocol violation: shard got unexpected {other:?} frame"),
+        }
+    }
+}
+
+/// Serialize this shard's cross-step private state at a barrier (see
+/// module docs). `outputs` is cumulative across incarnations.
+fn checkpoint(states: &[worker::WorkerState], outputs: u64) -> Vec<u8> {
+    let workers = states
+        .iter()
+        .map(|s| WorkerSnapshot {
+            output: s.output_agg.snapshot(),
+            pattern: s.pattern_agg.snapshot(),
+        })
+        .collect();
+    ShardSnapshot { workers, outputs }.serialize()
+}
+
+/// Manifest an injected fault (never returns — every kind ends the
+/// process). Exit codes are only diagnostics; the coordinator treats
+/// any death the same.
+fn inject(kind: FaultKind, ds: &mut DeadlineStream, wire: &WireCounter) -> ! {
+    match kind {
+        // Crash: the coordinator's read fails immediately (PeerDied).
+        FaultKind::Kill => std::process::exit(17),
+        // Wedge: stay alive but silent; the coordinator's per-step
+        // deadline expires (Timeout) and it kills this process itself.
+        FaultKind::Stall => {
+            std::thread::sleep(Duration::from_secs(3600));
+            std::process::exit(3)
+        }
+        // Garbage: a well-framed ShardOut whose payload cannot decode
+        // (0xFF… trips the embedding-list count guard), then exit —
+        // the coordinator sees a Protocol error.
+        FaultKind::CorruptFrame => {
+            let _ = ds.send_frame(FrameKind::ShardOut, &[0xFF; 64], wire, "inject corrupt");
+            std::process::exit(0)
         }
     }
 }
@@ -180,4 +284,80 @@ fn run_one_step(
             .collect()
     });
     ShardOut::from_worker_outs(cfg.use_odag, outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Instant;
+
+    /// Wall-clock bound proving "typed error, not a hang" — every case
+    /// below uses a sub-second shard deadline.
+    const NO_HANG: Duration = Duration::from_secs(15);
+
+    /// Script a hostile coordinator: accept the shard, consume its
+    /// Hello, then run `script` on the raw socket. Returns the error
+    /// the shard surfaced.
+    fn shard_against(script: impl FnOnce(TcpStream) + Send + 'static) -> crate::util::err::Error {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let coord = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let wire = WireCounter::new();
+            let mut ds = DeadlineStream::new(s.try_clone().unwrap(), Duration::from_secs(5));
+            let hello = ds.expect_frame(FrameKind::Hello, &wire).unwrap();
+            assert_eq!(wire::get_hello(&hello).unwrap(), 0);
+            script(s);
+        });
+        let g = gen::erdos_renyi(10, 20, 1, 1, 1).unlabeled();
+        let cfg = Config::new(1, 1).with_steal(false);
+        let opts = ShardOptions {
+            peer_timeout: Duration::from_millis(400),
+            faults: FaultPlan::default(),
+        };
+        let app = crate::apps::Motifs::new(3);
+        let err = run_shard_with(&addr, 0, &cfg, &g, &app, &opts).unwrap_err();
+        coord.join().unwrap();
+        err
+    }
+
+    #[test]
+    fn dying_coordinator_is_peer_died_not_a_hang() {
+        let t0 = Instant::now();
+        let err = shard_against(drop);
+        assert!(err.to_string().contains("comm-peer-died:"), "{err}");
+        assert!(t0.elapsed() < NO_HANG);
+    }
+
+    #[test]
+    fn stalled_coordinator_is_a_timeout_within_the_deadline() {
+        let t0 = Instant::now();
+        let err = shard_against(|s| {
+            // Hold the socket open, silent, past the shard's deadline.
+            std::thread::sleep(Duration::from_millis(900));
+            drop(s);
+        });
+        assert!(err.to_string().contains("comm-timeout:"), "{err}");
+        assert!(t0.elapsed() < NO_HANG);
+    }
+
+    #[test]
+    fn garbage_restore_frame_is_a_typed_error() {
+        use std::io::Write;
+        let t0 = Instant::now();
+        let err = shard_against(|mut s| {
+            // A well-framed Restore whose payload is undecodable.
+            let mut header = [0u8; super::super::frame::HEADER_BYTES as usize];
+            header[..4].copy_from_slice(&8u32.to_le_bytes());
+            header[4] = 5; // Restore
+            s.write_all(&header).unwrap();
+            s.write_all(&[0xFF; 8]).unwrap();
+            std::thread::sleep(Duration::from_millis(200));
+            drop(s);
+        });
+        assert!(err.to_string().contains("decode Restore frame"), "{err}");
+        assert!(t0.elapsed() < NO_HANG);
+    }
 }

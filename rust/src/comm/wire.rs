@@ -15,7 +15,7 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
-use crate::agg::{AggVal, DomainSupport};
+use crate::agg::{AggSnapshot, AggStats, AggVal, DomainSupport};
 use crate::engine::worker::WorkerOut;
 use crate::odag::OdagStore;
 use crate::pattern::Pattern;
@@ -212,6 +212,12 @@ pub struct ShardOut {
     pub phase_nanos: [u64; 8],
     pub busy_max_nanos: u64,
     pub busy_sum_nanos: u64,
+    /// Serialized [`ShardSnapshot`] of the shard's *cross-step* state as
+    /// of this barrier (unflushed aggregators, canonization caches, sink
+    /// count). Opaque to the coordinator: it stores the bytes verbatim
+    /// and re-ships them in a `Restore` frame if this shard must be
+    /// respawned — only a shard ever decodes them.
+    pub snapshot: Vec<u8>,
 }
 
 impl ShardOut {
@@ -275,6 +281,9 @@ impl ShardOut {
             phase_nanos: phases.nanos(),
             busy_max_nanos: busy_max.as_nanos() as u64,
             busy_sum_nanos: busy_sum.as_nanos() as u64,
+            // The shard attaches its checkpoint after the pre-merge
+            // (run_shard fills this in before sending).
+            snapshot: Vec::new(),
         }
     }
 
@@ -303,6 +312,7 @@ impl ShardOut {
         }
         w.put_u64(self.busy_max_nanos);
         w.put_u64(self.busy_sum_nanos);
+        w.put_bytes(&self.snapshot);
         w.into_bytes()
     }
 
@@ -324,6 +334,7 @@ impl ShardOut {
         }
         let busy_max_nanos = r.get_u64()?;
         let busy_sum_nanos = r.get_u64()?;
+        let snapshot = r.get_bytes()?;
         let [candidates, processed, steals, stolen_units, pattern_rescans, root_descents, shuffle_messages, shuffle_bytes] =
             scalars;
         Ok(ShardOut {
@@ -344,7 +355,116 @@ impl ShardOut {
             phase_nanos,
             busy_max_nanos,
             busy_sum_nanos,
+            snapshot,
         })
+    }
+}
+
+// ---------------------------------------------------------- checkpoints
+
+/// [`AggSnapshot`] codec: both maps and the canonization cache in sorted
+/// key order, so a snapshot of merged state serializes to identical
+/// bytes no matter which run produced it (the checkpoint inherits the
+/// module's determinism guarantee).
+pub fn put_agg_snapshot(w: &mut Writer, s: &AggSnapshot) {
+    put_pattern_map(w, &s.quick);
+    put_pattern_map(w, &s.canonical);
+    let mut keys: Vec<&Pattern> = s.canon_cache.keys().collect();
+    keys.sort_unstable();
+    w.put_u32(keys.len() as u32);
+    for k in keys {
+        let (canon_p, perm) = &s.canon_cache[k];
+        k.serialize(w);
+        canon_p.serialize(w);
+        w.put_bytes(perm);
+    }
+    w.put_u64(s.stats.mapped);
+    w.put_u64(s.stats.canonize_calls);
+    w.put_u64(s.stats.quick_patterns);
+}
+
+pub fn get_agg_snapshot(r: &mut Reader) -> Result<AggSnapshot, CodecError> {
+    let quick = get_pattern_map(r)?;
+    let canonical = get_pattern_map(r)?;
+    // Each cache entry costs two 2-byte pattern headers + a 4-byte perm
+    // length prefix at minimum.
+    let n = r.get_count(r.remaining() as u64 / 8)?;
+    let mut canon_cache = HashMap::with_capacity(n);
+    for _ in 0..n {
+        let k = Pattern::deserialize(r)?;
+        let canon_p = Pattern::deserialize(r)?;
+        let perm = r.get_bytes()?;
+        canon_cache.insert(k, (canon_p, perm));
+    }
+    let stats = AggStats {
+        mapped: r.get_u64()?,
+        canonize_calls: r.get_u64()?,
+        quick_patterns: r.get_u64()?,
+    };
+    Ok(AggSnapshot { quick, canonical, canon_cache, stats })
+}
+
+/// One worker's checkpointed aggregators (the two cross-step ones; the
+/// int aggregator drains every step and needs no checkpoint).
+pub struct WorkerSnapshot {
+    pub output: AggSnapshot,
+    pub pattern: AggSnapshot,
+}
+
+/// Everything a shard process carries *across* supersteps, frozen at a
+/// barrier: per-worker aggregator snapshots plus the shard's cumulative
+/// sink count. The frontier, merged aggregate histories, and run
+/// counters deliberately do NOT appear here — the coordinator already
+/// owns them post-barrier and re-ships the frontier in every `Step`
+/// frame, so a restored shard only needs its own private state back.
+pub struct ShardSnapshot {
+    pub workers: Vec<WorkerSnapshot>,
+    /// Values written through `output()` so far (cumulative — survives
+    /// chained failures because each snapshot folds the restored count
+    /// back in).
+    pub outputs: u64,
+}
+
+impl ShardSnapshot {
+    /// The pre-first-barrier checkpoint: fresh aggregators, zero
+    /// outputs. Shipping this through the same `Restore` path as any
+    /// later checkpoint is what makes step-1 failures uniform with
+    /// step-k failures.
+    pub fn initial(workers: usize) -> ShardSnapshot {
+        ShardSnapshot {
+            workers: (0..workers)
+                .map(|_| WorkerSnapshot {
+                    output: AggSnapshot::default(),
+                    pattern: AggSnapshot::default(),
+                })
+                .collect(),
+            outputs: 0,
+        }
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u32(self.workers.len() as u32);
+        for ws in &self.workers {
+            put_agg_snapshot(&mut w, &ws.output);
+            put_agg_snapshot(&mut w, &ws.pattern);
+        }
+        w.put_u64(self.outputs);
+        w.into_bytes()
+    }
+
+    pub fn deserialize(bytes: &[u8]) -> Result<ShardSnapshot, CodecError> {
+        let mut r = Reader::new(bytes);
+        // Each worker costs two agg snapshots of at least 3 count
+        // prefixes + 3 stat words each: 2 × (12 + 24) = 72 bytes.
+        let n = r.get_count(r.remaining() as u64 / 72)?;
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let output = get_agg_snapshot(&mut r)?;
+            let pattern = get_agg_snapshot(&mut r)?;
+            workers.push(WorkerSnapshot { output, pattern });
+        }
+        Ok(ShardSnapshot { workers, outputs: r.get_u64()? })
     }
 }
 
@@ -543,7 +663,37 @@ mod tests {
             phase_nanos: [1, 2, 3, 4, 5, 6, 7, 8],
             busy_max_nanos: rng.gen_range(1 << 40),
             busy_sum_nanos: rng.gen_range(1 << 40),
+            snapshot: sample_shard_snapshot(&mut rng).serialize(),
         }
+    }
+
+    fn sample_agg_snapshot(rng: &mut Rng) -> AggSnapshot {
+        let mut canon_cache = HashMap::new();
+        for _ in 0..rng.gen_range(4) {
+            let qp = sample_pattern(rng);
+            let (canon_p, perm) = crate::pattern::canon::canonicalize(&qp);
+            canon_cache.insert(qp, (canon_p, perm));
+        }
+        AggSnapshot {
+            quick: sample_pattern_map(rng, true),
+            canonical: sample_pattern_map(rng, false),
+            canon_cache,
+            stats: AggStats {
+                mapped: rng.gen_range(1 << 20),
+                canonize_calls: rng.gen_range(1 << 10),
+                quick_patterns: rng.gen_range(1 << 10),
+            },
+        }
+    }
+
+    fn sample_shard_snapshot(rng: &mut Rng) -> ShardSnapshot {
+        let workers = (0..2)
+            .map(|_| WorkerSnapshot {
+                output: sample_agg_snapshot(rng),
+                pattern: sample_agg_snapshot(rng),
+            })
+            .collect();
+        ShardSnapshot { workers, outputs: rng.gen_range(1 << 30) }
     }
 
     #[test]
@@ -569,7 +719,62 @@ mod tests {
             assert_eq!(back.stolen_units, s.stolen_units);
             assert_eq!(back.pattern_rescans, s.pattern_rescans);
             assert_eq!(back.root_descents, s.root_descents);
+            assert_eq!(back.snapshot, s.snapshot, "checkpoint bytes ride along verbatim");
         }
+    }
+
+    #[test]
+    fn shard_snapshot_roundtrip_is_deterministic() {
+        let mut rng = Rng::new(21);
+        for _ in 0..5 {
+            let snap = sample_shard_snapshot(&mut rng);
+            let bytes = snap.serialize();
+            let back = ShardSnapshot::deserialize(&bytes).unwrap();
+            assert_eq!(back.outputs, snap.outputs);
+            assert_eq!(back.workers.len(), snap.workers.len());
+            for (b, s) in back.workers.iter().zip(snap.workers.iter()) {
+                assert_eq!(b.output, s.output);
+                assert_eq!(b.pattern, s.pattern);
+            }
+            // Re-serializing the roundtripped snapshot (fresh HashMap
+            // iteration order) must yield identical bytes — the property
+            // that lets faulted and fault-free runs agree on
+            // checkpoint_bytes.
+            assert_eq!(back.serialize(), bytes);
+        }
+    }
+
+    #[test]
+    fn initial_snapshot_restores_to_fresh_aggregators() {
+        let snap = ShardSnapshot::initial(3);
+        let back = ShardSnapshot::deserialize(&snap.serialize()).unwrap();
+        assert_eq!(back.workers.len(), 3);
+        assert_eq!(back.outputs, 0);
+        for ws in &back.workers {
+            assert_eq!(ws.output, AggSnapshot::default());
+            assert_eq!(ws.pattern, AggSnapshot::default());
+        }
+    }
+
+    #[test]
+    fn shard_snapshot_hostile_bytes_error_never_panic() {
+        let bytes = sample_shard_snapshot(&mut Rng::new(5)).serialize();
+        for cut in 0..bytes.len() {
+            assert!(ShardSnapshot::deserialize(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        for byte in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut evil = bytes.clone();
+                evil[byte] ^= 1 << bit;
+                let _ = ShardSnapshot::deserialize(&evil);
+            }
+        }
+        let mut evil = bytes.clone();
+        evil[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            ShardSnapshot::deserialize(&evil),
+            Err(CodecError::Oversized { .. })
+        ));
     }
 
     #[test]

@@ -214,6 +214,14 @@ pub struct RunResult {
     /// Full ODAG-cursor root re-descents across the run
     /// (Σ per-step [`StepStats::root_descents`]).
     pub root_descents: u64,
+    /// Shard processes respawned after a failure (distributed runs
+    /// only; always 0 in-process). Nonzero restarts never change any
+    /// deterministic field above — replay restarts from the barrier
+    /// checkpoint (see `comm::coordinator`).
+    pub shard_restarts: u64,
+    /// Distinct supersteps that had to be replayed for a respawned
+    /// shard (≤ `shard_restarts`; 0 in-process).
+    pub replayed_steps: u64,
     pub comm: CommStats,
     pub phases: PhaseTimes,
     pub agg_stats: AggStats,
@@ -644,6 +652,9 @@ impl Cluster {
             stolen_units: stolen_units_total,
             pattern_rescans: pattern_rescans_total,
             root_descents: root_descents_total,
+            // In-process runs have no shard processes to lose.
+            shard_restarts: 0,
+            replayed_steps: 0,
             comm: comm_total,
             phases: phases_total,
             agg_stats,

@@ -45,6 +45,10 @@ run options:
   --engine <tle|tlv|tlp> paradigm              (default tle)
   --shards <n>           run across n OS processes over real TCP
                          (tle only; implies --no-steal, sets servers=n)
+  --step-timeout-ms <n>  per-superstep shard deadline (--shards only; default 60000)
+  --max-shard-retries <n> respawns per shard before failing fast (default 3)
+  --inject <plan>        deterministic fault injection (--shards only), e.g.
+                         kill:shard=1,step=2 | stall:... | corrupt-frame:...
   --output <path>        write outputs to a file
   --no-odag              store frontiers as plain embedding lists
   --one-level            disable two-level pattern aggregation
@@ -136,7 +140,16 @@ fn cmd_run(args: &Args) -> Result<()> {
                 cfg.servers = shards;
                 cfg.steal = false;
                 let exe = std::env::current_exe().context("locate current executable")?;
-                comm::run_distributed(&exe, &g, &spec, &cfg, sink)?
+                let opts = comm::RecoveryOptions {
+                    step_timeout: args.get_ms("step-timeout-ms", 60_000)?,
+                    max_shard_retries: args.get_u64("max-shard-retries", 3)? as u32,
+                    faults: match args.get("inject") {
+                        Some(plan) => comm::FaultPlan::parse(plan)?,
+                        None => comm::FaultPlan::default(),
+                    },
+                    ..Default::default()
+                };
+                comm::run_distributed_with(&exe, &g, &spec, &cfg, sink, &opts)?
             } else {
                 Cluster::new(cfg).run_with_sink(&g, app.as_ref(), sink)
             };
@@ -199,7 +212,14 @@ fn cmd_shard(args: &Args) -> Result<()> {
         cfg = cfg.with_partition(Partition::Skewed(skew as u8));
     }
     let app = AppSpec::from_args(args)?.build();
-    comm::run_shard(connect, shard_id, &cfg, &g, app.as_ref())
+    let opts = comm::ShardOptions {
+        peer_timeout: args.get_ms("peer-timeout-ms", 300_000)?,
+        faults: match args.get("inject") {
+            Some(plan) => comm::FaultPlan::parse(plan)?,
+            None => comm::FaultPlan::default(),
+        },
+    };
+    comm::run_shard_with(connect, shard_id, &cfg, &g, app.as_ref(), &opts)
 }
 
 fn print_run(r: &RunResult, per_step: bool) {
@@ -233,6 +253,16 @@ fn print_run(r: &RunResult, per_step: bool) {
             "extraction: pattern-rescans={} root-descents={}",
             human_count(r.pattern_rescans),
             human_count(r.root_descents),
+        );
+    }
+    if r.shard_restarts > 0 {
+        // Distributed runs only: recovery happened, and by the replay
+        // invariant it changed none of the lines above.
+        println!(
+            "recovery: shard-restarts={} replayed-steps={} checkpoint={}",
+            human_count(r.shard_restarts),
+            human_count(r.replayed_steps),
+            human_bytes(r.comm.checkpoint_bytes),
         );
     }
     let fr: Vec<String> = r

@@ -152,6 +152,12 @@ pub struct CommStats {
     pub bytes: u64,
     /// Measured bytes written to real sockets by `comm` frames.
     pub wire_bytes: u64,
+    /// Serialized barrier-checkpoint bytes the coordinator retained
+    /// (sum of every shard's per-step snapshot). Deterministic — each
+    /// valid `ShardOut` is counted exactly once even when a failed
+    /// superstep is replayed — so faulted and fault-free distributed
+    /// runs report the same value. 0 for in-process runs.
+    pub checkpoint_bytes: u64,
 }
 
 impl CommStats {
@@ -165,10 +171,16 @@ impl CommStats {
         self.wire_bytes += bytes;
     }
 
+    /// Record barrier-checkpoint bytes retained by the coordinator.
+    pub fn add_checkpoint(&mut self, bytes: u64) {
+        self.checkpoint_bytes += bytes;
+    }
+
     pub fn merge(&mut self, other: &CommStats) {
         self.messages += other.messages;
         self.bytes += other.bytes;
         self.wire_bytes += other.wire_bytes;
+        self.checkpoint_bytes += other.checkpoint_bytes;
     }
 }
 
@@ -341,6 +353,18 @@ mod tests {
         c.merge(&d);
         assert_eq!(c.wire_bytes, 100);
         assert_eq!((c.messages, c.bytes), (10, 1000), "simulated model untouched");
+    }
+
+    #[test]
+    fn checkpoint_bytes_accumulate_and_merge() {
+        let mut c = CommStats::default();
+        c.add_checkpoint(128);
+        c.add_checkpoint(64);
+        let mut d = CommStats::default();
+        d.add_checkpoint(8);
+        c.merge(&d);
+        assert_eq!(c.checkpoint_bytes, 200);
+        assert_eq!((c.messages, c.bytes, c.wire_bytes), (0, 0, 0), "other series untouched");
     }
 
     #[test]

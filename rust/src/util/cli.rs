@@ -4,6 +4,7 @@
 //! arguments, with typed getters that produce readable errors.
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use crate::bail;
 use crate::util::err::{Context, Result};
@@ -70,6 +71,12 @@ impl Args {
                 .parse()
                 .with_context(|| format!("--{name} expects an integer, got {v:?}")),
         }
+    }
+
+    /// A millisecond-denominated duration option (`--step-timeout-ms`
+    /// and friends).
+    pub fn get_ms(&self, name: &str, default_ms: u64) -> Result<Duration> {
+        Ok(Duration::from_millis(self.get_u64(name, default_ms)?))
     }
 
     /// A required option: error (naming the option) when absent. Used
@@ -141,6 +148,15 @@ mod tests {
         assert_eq!(a.require_usize("shard-id").unwrap(), 2);
         let a = parse(&["--shard-id", "two"], &[]);
         assert!(a.require_usize("shard-id").is_err());
+    }
+
+    #[test]
+    fn millisecond_durations_parse_with_defaults() {
+        let a = parse(&["--step-timeout-ms", "2500"], &[]);
+        assert_eq!(a.get_ms("step-timeout-ms", 60_000).unwrap(), Duration::from_millis(2500));
+        assert_eq!(a.get_ms("peer-timeout-ms", 300_000).unwrap(), Duration::from_secs(300));
+        let a = parse(&["--step-timeout-ms", "soon"], &[]);
+        assert!(a.get_ms("step-timeout-ms", 0).is_err());
     }
 
     #[test]

@@ -36,6 +36,12 @@ impl Writer {
         }
     }
 
+    /// Length-prefixed opaque byte block (permutations, nested payloads).
+    pub fn put_bytes(&mut self, vs: &[u8]) {
+        self.put_u32(vs.len() as u32);
+        self.buf.extend_from_slice(vs);
+    }
+
     pub fn len(&self) -> usize {
         self.buf.len()
     }
@@ -155,6 +161,14 @@ impl<'a> Reader<'a> {
         Ok(t)
     }
 
+    /// Read a block written by [`Writer::put_bytes`]. The length prefix
+    /// is bounded by the bytes actually remaining, so a hostile prefix
+    /// fails as [`CodecError::Oversized`] before any allocation.
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>, CodecError> {
+        let n = self.get_count(self.remaining() as u64)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
     /// Current read offset (wire decoders report it in their errors).
     pub fn pos(&self) -> usize {
         self.pos
@@ -209,6 +223,32 @@ mod tests {
         let bytes = w.into_bytes();
         let mut r = Reader::new(&bytes);
         assert_eq!(r.get_u32_vec().unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let mut w = Writer::new();
+        w.put_bytes(&[9, 8, 7]);
+        w.put_bytes(&[]);
+        w.put_u8(0xAA);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_bytes().unwrap(), vec![9, 8, 7]);
+        assert_eq!(r.get_bytes().unwrap(), Vec::<u8>::new());
+        assert_eq!(r.get_u8().unwrap(), 0xAA);
+        assert!(r.is_exhausted());
+    }
+
+    #[test]
+    fn bytes_length_prefix_is_bounded_by_remaining() {
+        // Prefix claims 100 bytes but only 2 follow: Oversized, no alloc.
+        let mut w = Writer::new();
+        w.put_u32(100);
+        w.put_u8(1);
+        w.put_u8(2);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(matches!(r.get_bytes(), Err(CodecError::Oversized { len: 100, .. })));
     }
 
     #[test]

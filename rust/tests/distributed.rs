@@ -88,14 +88,21 @@ fn conformance_matrix(spec: &AppSpec, g: &LabeledGraph, threads: usize) {
             let app = spec.build();
             let local_sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
             let local = Cluster::new(cfg.clone()).run_with_sink(g, app.as_ref(), local_sink);
-            // The in-process engine never touches a socket.
+            // The in-process engine never touches a socket and never
+            // checkpoints.
             assert_eq!(local.comm.wire_bytes, 0, "{what}: local wire bytes");
+            assert_eq!(local.comm.checkpoint_bytes, 0, "{what}: local checkpoint bytes");
 
             let dist_sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
             let dist = comm::run_distributed(exe(), g, spec, &cfg, dist_sink)
                 .unwrap_or_else(|e| panic!("{what}: distributed run failed: {e:#}"));
-            // Real traffic crossed the loopback: frames are measured.
+            // Real traffic crossed the loopback: frames are measured,
+            // barrier checkpoints were taken, and nothing needed to be
+            // recovered.
             assert!(dist.comm.wire_bytes > 0, "{what}: measured wire bytes");
+            assert!(dist.comm.checkpoint_bytes > 0, "{what}: checkpoint bytes");
+            assert_eq!(dist.shard_restarts, 0, "{what}: fault-free restarts");
+            assert_eq!(dist.replayed_steps, 0, "{what}: fault-free replays");
 
             assert_bit_identical(&local, &dist, &what);
         }

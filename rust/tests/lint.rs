@@ -25,6 +25,21 @@ fn no_unwrap_fires_allows_and_exempts_unit_tests() {
 }
 
 #[test]
+fn comm_deadline_fires_only_on_raw_socket_ops_in_comm() {
+    let lx = lexer::lex(include_str!("lint_fixtures/comm_deadline.rs"));
+    let f = rules::comm_deadline("rust/src/comm/fixture.rs", &lx);
+    // Lines 4–7: raw read_exact/accept/connect/connect_timeout call
+    // sites fire. The io::-qualified wrappers (8–9), the allowed
+    // read_exact (11), the bare ident (12), and the unit-test module
+    // (18) are all exempt.
+    assert_eq!(lines(&f, "comm-deadline"), vec![4, 5, 6, 7]);
+    // Outside comm/ the rule is silent, and comm/io.rs — where the raw
+    // calls are supposed to live — is exempt wholesale.
+    assert!(rules::comm_deadline("rust/src/engine/mod.rs", &lx).is_empty());
+    assert!(rules::comm_deadline("rust/src/comm/io.rs", &lx).is_empty());
+}
+
+#[test]
 fn atomics_scope_fires_outside_allowlist_only() {
     let lx = lexer::lex(include_str!("lint_fixtures/atomics_scope.rs"));
     let f = rules::atomics_scope("rust/src/apps/fixture.rs", &lx);

@@ -1,0 +1,20 @@
+//! comm-deadline fixture: raw socket operations in a comm/ module.
+
+fn scripted(stream: &mut std::net::TcpStream, listener: &std::net::TcpListener) {
+    stream.read_exact(&mut [0u8; 4]).ok();
+    listener.accept().ok();
+    std::net::TcpStream::connect("127.0.0.1:1").ok();
+    std::net::TcpStream::connect_timeout(&addr, t).ok();
+    io::connect("127.0.0.1:1", t).ok();
+    io::accept(listener, t, "x").ok();
+    // lint:allow(comm-deadline) — generic Read path for Cursor tests.
+    stream.read_exact(&mut [0u8; 4]).ok();
+    let connect = "an ident without a call is never a finding";
+}
+
+#[cfg(test)]
+mod tests {
+    fn scripted_peer(l: &std::net::TcpListener) {
+        l.accept().ok();
+    }
+}

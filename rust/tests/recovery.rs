@@ -1,0 +1,217 @@
+//! Fault-injection differential suite: a distributed run that loses a
+//! shard mid-superstep must recover — respawn the shard, restore its
+//! barrier checkpoint, replay the failed superstep — and still be
+//! **bit-identical** to the fault-free in-process reference on every
+//! deterministic `RunResult` field.
+//!
+//! Faults are injected deterministically via `FaultPlan` (the same
+//! `--inject` grammar the CLI exposes), so each case is reproducible:
+//! the matrix covers kill (process exit), stall (detected by the step
+//! deadline) and corrupt-frame (well-framed garbage payload) × fault
+//! step × shard counts {2, 3}. A repeating fault must exhaust the
+//! retry budget with a typed `comm-retries-exhausted` error — never a
+//! hang. `wire_bytes` is deliberately excluded from the comparison:
+//! retransmission during replay legitimately inflates it.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use arabesque::comm::{self, AppSpec, FaultPlan, RecoveryOptions};
+use arabesque::engine::{Cluster, Config, RunResult};
+use arabesque::graph::gen;
+use arabesque::output::{CountingSink, OutputSink};
+use arabesque::LabeledGraph;
+
+fn exe() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_arabesque"))
+}
+
+/// The workload under fault: small enough to replay in milliseconds,
+/// large enough that every shard owns work in both supersteps.
+fn graph() -> LabeledGraph {
+    gen::erdos_renyi(35, 110, 1, 1, 7).unlabeled()
+}
+
+fn config(shards: usize) -> Config {
+    Config::new(shards, 2).with_steal(false)
+}
+
+/// Recovery options scaled for tests: tight deadlines so a stalled
+/// shard is detected in seconds, short backoff so replay is immediate.
+fn opts(plan: &str) -> RecoveryOptions {
+    RecoveryOptions {
+        step_timeout: Duration::from_secs(3),
+        handshake_timeout: Duration::from_secs(10),
+        max_shard_retries: 3,
+        backoff_base: Duration::from_millis(20),
+        faults: FaultPlan::parse(plan).expect("test fault plan"),
+    }
+}
+
+fn run_local(cfg: &Config, g: &LabeledGraph, spec: &AppSpec) -> RunResult {
+    let app = spec.build();
+    let sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
+    Cluster::new(cfg.clone()).run_with_sink(g, app.as_ref(), sink)
+}
+
+fn run_dist(cfg: &Config, g: &LabeledGraph, spec: &AppSpec, o: &RecoveryOptions) -> RunResult {
+    let sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
+    comm::run_distributed_with(exe(), g, spec, cfg, sink, o)
+        .unwrap_or_else(|e| panic!("distributed run failed: {e:#}"))
+}
+
+/// Assert a recovered run equals its reference on every deterministic
+/// field (timing and raw wire bytes are measured, so excluded).
+fn assert_bit_identical(local: &RunResult, dist: &RunResult, what: &str) {
+    assert_eq!(local.steps.len(), dist.steps.len(), "{what}: step count");
+    for (l, d) in local.steps.iter().zip(&dist.steps) {
+        let s = l.step;
+        assert_eq!(l.candidates, d.candidates, "{what}: step {s} candidates");
+        assert_eq!(l.processed, d.processed, "{what}: step {s} processed");
+        assert_eq!(l.frontier, d.frontier, "{what}: step {s} frontier");
+        assert_eq!(l.frontier_bytes, d.frontier_bytes, "{what}: step {s} frontier_bytes");
+        assert_eq!(l.list_bytes, d.list_bytes, "{what}: step {s} list_bytes");
+        assert_eq!(l.steals, d.steals, "{what}: step {s} steals");
+        assert_eq!(l.stolen_units, d.stolen_units, "{what}: step {s} stolen_units");
+        assert_eq!(l.pattern_rescans, d.pattern_rescans, "{what}: step {s} rescans");
+        assert_eq!(l.root_descents, d.root_descents, "{what}: step {s} descents");
+        assert_eq!(l.comm.messages, d.comm.messages, "{what}: step {s} comm messages");
+        assert_eq!(l.comm.bytes, d.comm.bytes, "{what}: step {s} comm bytes");
+    }
+    assert_eq!(local.num_outputs, dist.num_outputs, "{what}: outputs");
+    assert_eq!(local.processed, dist.processed, "{what}: processed");
+    assert_eq!(local.candidates, dist.candidates, "{what}: candidates");
+    assert_eq!(local.steals, dist.steals, "{what}: steals");
+    assert_eq!(local.pattern_rescans, dist.pattern_rescans, "{what}: rescans");
+    assert_eq!(local.root_descents, dist.root_descents, "{what}: descents");
+    assert_eq!(local.comm.messages, dist.comm.messages, "{what}: comm messages");
+    assert_eq!(local.comm.bytes, dist.comm.bytes, "{what}: comm bytes");
+    assert_eq!(local.canonical_patterns, dist.canonical_patterns, "{what}: canonical");
+    assert_eq!(local.peak_frontier_bytes, dist.peak_frontier_bytes, "{what}: peak frontier");
+    assert_eq!(local.agg_stats.mapped, dist.agg_stats.mapped, "{what}: mapped");
+    assert_eq!(
+        local.agg_stats.canonize_calls,
+        dist.agg_stats.canonize_calls,
+        "{what}: canonize calls"
+    );
+    assert_eq!(
+        local.agg_stats.quick_patterns,
+        dist.agg_stats.quick_patterns,
+        "{what}: quick patterns"
+    );
+    assert_eq!(
+        local.aggregates.pattern_history,
+        dist.aggregates.pattern_history,
+        "{what}: pattern history"
+    );
+    assert_eq!(
+        local.aggregates.pattern_output,
+        dist.aggregates.pattern_output,
+        "{what}: pattern output"
+    );
+    assert_eq!(local.aggregates.int_history, dist.aggregates.int_history, "{what}: int history");
+}
+
+/// One matrix cell: inject `kind` into shard 1 at `step`, require a
+/// recorded recovery, and require the result bit-identical to the
+/// fault-free in-process reference.
+fn recovery_case(kind: &str, step: u64, shards: usize) {
+    let g = graph();
+    let spec = AppSpec::Motifs(3);
+    let cfg = config(shards);
+    let what = format!("{kind} at step {step}, shards={shards}");
+
+    let local = run_local(&cfg, &g, &spec);
+    let plan = format!("{kind}:shard=1,step={step}");
+    let dist = run_dist(&cfg, &g, &spec, &opts(&plan));
+
+    assert!(dist.shard_restarts > 0, "{what}: a shard must have been respawned");
+    assert!(dist.replayed_steps > 0, "{what}: a superstep must have been replayed");
+    assert_bit_identical(&local, &dist, &what);
+}
+
+#[test]
+fn killed_shard_is_respawned_and_replays_bit_identically() {
+    // Step 1 exercises the empty initial checkpoint (`Restore` before
+    // any barrier completed); step 2 restores real aggregation state.
+    for shards in [2usize, 3] {
+        for step in [1u64, 2] {
+            recovery_case("kill", step, shards);
+        }
+    }
+}
+
+#[test]
+fn stalled_shard_trips_the_step_deadline_and_replays_bit_identically() {
+    for shards in [2usize, 3] {
+        recovery_case("stall", 2, shards);
+    }
+}
+
+#[test]
+fn corrupt_frame_is_rejected_and_replays_bit_identically() {
+    for shards in [2usize, 3] {
+        recovery_case("corrupt-frame", 2, shards);
+    }
+}
+
+#[test]
+fn faulted_run_matches_fault_free_distributed_run() {
+    // Distributed-vs-distributed: beyond the in-process reference, the
+    // recovered run must also agree with a fault-free *distributed* run
+    // on checkpoint accounting (replays are never double-counted).
+    let g = graph();
+    let spec = AppSpec::Motifs(3);
+    let cfg = config(2);
+
+    let free = run_dist(&cfg, &g, &spec, &opts(""));
+    assert_eq!(free.shard_restarts, 0, "fault-free run must not restart shards");
+
+    let faulted = run_dist(&cfg, &g, &spec, &opts("kill:shard=1,step=2"));
+    assert!(faulted.shard_restarts > 0, "the injected kill must have fired");
+
+    assert_bit_identical(&free, &faulted, "fault-free vs faulted distributed");
+    assert!(free.comm.checkpoint_bytes > 0, "barrier checkpoints must be measured");
+    assert_eq!(
+        free.comm.checkpoint_bytes, faulted.comm.checkpoint_bytes,
+        "checkpoint accounting must be deterministic under faults"
+    );
+    // Replay retransmits frames, so raw wire traffic may only grow.
+    assert!(faulted.comm.wire_bytes >= free.comm.wire_bytes, "replay shrank wire bytes");
+}
+
+#[test]
+fn fault_free_runs_record_no_recovery() {
+    let g = graph();
+    let spec = AppSpec::Motifs(3);
+    let cfg = config(2);
+    let r = run_dist(&cfg, &g, &spec, &RecoveryOptions::default());
+    assert_eq!(r.shard_restarts, 0);
+    assert_eq!(r.replayed_steps, 0);
+    assert!(r.comm.checkpoint_bytes > 0, "checkpoints are taken even without faults");
+}
+
+#[test]
+fn repeated_fault_past_retry_budget_fails_fast_with_typed_error() {
+    // `repeat` makes every incarnation of shard 1 die at step 2, so no
+    // retry budget can save the run: it must fail with the typed
+    // exhaustion error well before any socket deadline could pile up.
+    let g = graph();
+    let spec = AppSpec::Motifs(3);
+    let cfg = config(2);
+    let mut o = opts("kill:shard=1,step=2,repeat");
+    o.max_shard_retries = 1;
+
+    let started = Instant::now();
+    let sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
+    let err = comm::run_distributed_with(exe(), &g, &spec, &cfg, sink, &o)
+        .expect_err("a repeating fault must exhaust the retry budget");
+    let msg = err.to_string();
+    assert!(msg.contains("comm-retries-exhausted"), "{msg}");
+    assert!(
+        started.elapsed() < Duration::from_secs(30),
+        "retry exhaustion took {:?} — fail fast, never hang",
+        started.elapsed()
+    );
+}
