@@ -1,0 +1,144 @@
+"""Pin python/tools/check_trace.py — the validator CI's "Trace smoke"
+step trusts — against handwritten good and broken documents. Each bad
+fixture flips exactly one property, so a checker regression that stops
+catching it fails here first, not silently in CI."""
+
+import importlib.util
+import json
+from pathlib import Path
+
+_TOOL = Path(__file__).resolve().parents[1] / "tools" / "check_trace.py"
+_spec = importlib.util.spec_from_file_location("check_trace", _TOOL)
+check_trace = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_trace)
+
+
+def _ev(ph, name, pid=0, tid=0, ts=0.0, **extra):
+    e = {"ph": ph, "name": name, "cat": "engine", "pid": pid, "tid": tid, "ts": ts}
+    e.update(extra)
+    return e
+
+
+def good_trace(recovery=False):
+    """Minimal document with the shape the Rust exporter emits."""
+    events = [
+        {"ph": "M", "name": "process_name", "args": {"name": "coordinator"}},
+        _ev("B", "Step", ts=1.0),
+        _ev("B", "Merge", ts=2.0),
+        _ev("E", "Merge", ts=3.0),
+        _ev("E", "Step", ts=4.0),
+        _ev("B", "Extract", tid=1, ts=1.5),
+        _ev("E", "Extract", tid=1, ts=2.5),
+    ]
+    if recovery:
+        for pid in (1, 2):
+            events += [_ev("B", "Step", pid=pid, ts=1.0), _ev("E", "Step", pid=pid, ts=2.0)]
+        for name in ("FailureDetected", "Respawn", "Replay", "Restore"):
+            events += [_ev("B", name, ts=5.0), _ev("E", name, ts=6.0)]
+    return {"traceEvents": events, "otherData": {"droppedSpans": 0, "wireChecks": 0}}
+
+
+def good_metrics():
+    return {
+        "counters": {"step1/processed": 10, "total/processed": 10, "trace/spans": 7},
+        "meta": {"schema": "arabesque-metrics-v1", "steps": 1},
+    }
+
+
+def test_good_trace_passes():
+    assert check_trace.validate_trace(good_trace()) == []
+
+
+def test_good_recovery_trace_passes():
+    assert check_trace.validate_trace(good_trace(recovery=True), expect_recovery=True) == []
+
+
+def test_unclosed_span_is_caught():
+    t = good_trace()
+    t["traceEvents"] = [e for e in t["traceEvents"] if not (e["ph"] == "E" and e["name"] == "Step")]
+    errs = check_trace.validate_trace(t)
+    assert any("unclosed" in e for e in errs), errs
+
+
+def test_mismatched_close_is_caught():
+    t = good_trace()
+    # Swap the two closers: Step now "closes" the inner Merge.
+    evs = t["traceEvents"]
+    i, j = 3, 4
+    assert (evs[i]["name"], evs[j]["name"]) == ("Merge", "Step")
+    evs[i], evs[j] = evs[j], evs[i]
+    errs = check_trace.validate_trace(t)
+    assert any("does not close innermost" in e for e in errs), errs
+
+
+def test_end_before_start_is_caught():
+    t = good_trace()
+    for e in t["traceEvents"]:
+        if e["ph"] == "E" and e["name"] == "Merge":
+            e["ts"] = 0.5  # its B opened at 2.0
+    errs = check_trace.validate_trace(t)
+    assert any("before start" in e for e in errs), errs
+
+
+def test_bad_phase_and_missing_fields_are_caught():
+    t = good_trace()
+    t["traceEvents"].append({"ph": "X", "name": "wat"})
+    t["traceEvents"].append({"ph": "B", "name": "Step", "pid": "zero", "tid": 0, "ts": 1})
+    errs = check_trace.validate_trace(t)
+    assert any("bad phase" in e for e in errs), errs
+    assert any("pid/tid must be integers" in e for e in errs), errs
+
+
+def test_missing_top_level_keys_are_caught():
+    assert check_trace.validate_trace({}) == ["missing 'traceEvents' array"]
+    errs = check_trace.validate_trace({"traceEvents": []})
+    assert any("droppedSpans" in e for e in errs), errs
+
+
+def test_recovery_expectation_requires_all_pids_and_spans():
+    # A clean trace that never recovered must FAIL under --expect-recovery.
+    errs = check_trace.validate_trace(good_trace(), expect_recovery=True)
+    assert any("no spans from pid 1" in e for e in errs), errs
+    assert any("'Respawn'" in e for e in errs), errs
+    # Dropping one recovery span kind from an otherwise-complete trace fails.
+    t = good_trace(recovery=True)
+    t["traceEvents"] = [e for e in t["traceEvents"] if e["name"] != "Replay"]
+    errs = check_trace.validate_trace(t, expect_recovery=True)
+    assert errs == ["expected recovery run: no 'Replay' span"]
+
+
+def test_good_metrics_pass():
+    assert check_trace.validate_metrics(good_metrics()) == []
+
+
+def test_metrics_schema_and_counters_enforced():
+    m = good_metrics()
+    m["meta"]["schema"] = "v0"
+    assert any("meta.schema" in e for e in check_trace.validate_metrics(m))
+    m = good_metrics()
+    del m["counters"]["total/processed"]
+    assert any("total/processed" in e for e in check_trace.validate_metrics(m))
+    m = good_metrics()
+    m["counters"] = {"total/processed": "ten"}
+    errs = check_trace.validate_metrics(m)
+    assert any("not a number" in e for e in errs), errs
+    assert check_trace.validate_metrics({"counters": {}}) != []
+
+
+def test_cli_exit_codes(tmp_path):
+    trace = tmp_path / "trace.json"
+    metrics = tmp_path / "metrics.json"
+    trace.write_text(json.dumps(good_trace(recovery=True)))
+    metrics.write_text(json.dumps(good_metrics()))
+    assert (
+        check_trace.main([str(trace), "--metrics", str(metrics), "--expect-recovery"]) == 0
+    )
+    # A truncated file is a load error, not a crash.
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"traceEvents": [')
+    assert check_trace.main([str(bad)]) == 1
+    # A valid-but-unrecovered trace fails only under --expect-recovery.
+    plain = tmp_path / "plain.json"
+    plain.write_text(json.dumps(good_trace()))
+    assert check_trace.main([str(plain)]) == 0
+    assert check_trace.main([str(plain), "--expect-recovery"]) == 1

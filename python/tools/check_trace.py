@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Validate the observability artifacts the arabesque CLI emits.
+
+Shape checker for the two documents `--trace` / `--metrics` write
+(rust/src/trace/export.rs), used two ways:
+
+* CI's "Trace smoke" step runs a kill-injected 2-shard run and pipes
+  both files through this script with ``--expect-recovery`` — a trace
+  that parses but lost a shard's spans, left a span unclosed, or hid
+  the recovery arc fails the build;
+* ``python/tests/test_trace_checker.py`` pins the checker itself
+  against handwritten good/bad documents, so a regression here cannot
+  silently wave broken traces through.
+
+Checks are structural, not semantic: balanced ``B``/``E`` nesting per
+(pid, tid) lane with LIFO name matching, monotone span endpoints,
+integer pids/tids, and — under ``--expect-recovery`` — spans from the
+coordinator and at least two shard processes plus the respawn/replay
+names the recovery path records. Stdlib only (the repo's zero-dependency
+rule extends to tooling).
+
+Usage:
+    check_trace.py TRACE.json [--metrics METRICS.json] [--expect-recovery]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+VALID_PHASES = {"B", "E", "M"}
+# Span names the coordinator records while recovering a killed shard
+# (rust/src/trace/mod.rs SpanKind); a kill-injected run missing any of
+# these rendered the failure invisibly, which is the bug the smoke
+# test exists to catch.
+RECOVERY_NAMES = {"FailureDetected", "Respawn", "Replay", "Restore"}
+
+
+def validate_trace(obj, expect_recovery=False):
+    """Return a list of error strings (empty = valid)."""
+    errors = []
+    if not isinstance(obj, dict):
+        return [f"top level must be an object, got {type(obj).__name__}"]
+    events = obj.get("traceEvents")
+    if not isinstance(events, list):
+        return ["missing 'traceEvents' array"]
+    other = obj.get("otherData")
+    if not isinstance(other, dict) or "droppedSpans" not in other:
+        errors.append("missing 'otherData.droppedSpans'")
+
+    stacks = {}  # (pid, tid) -> [(name, ts)]
+    names_seen = set()
+    pids_seen = set()
+    for i, e in enumerate(events):
+        where = f"event {i}"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        name = e.get("name")
+        if ph not in VALID_PHASES:
+            errors.append(f"{where}: bad phase {ph!r} (want B/E/M)")
+            continue
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: missing name")
+            continue
+        if ph == "M":
+            continue
+        pid, tid, ts = e.get("pid"), e.get("tid"), e.get("ts")
+        if not isinstance(pid, int) or not isinstance(tid, int):
+            errors.append(f"{where}: pid/tid must be integers")
+            continue
+        if not isinstance(ts, (int, float)):
+            errors.append(f"{where}: {name}: ts must be a number")
+            continue
+        pids_seen.add(pid)
+        names_seen.add(name)
+        lane = stacks.setdefault((pid, tid), [])
+        if ph == "B":
+            lane.append((name, ts))
+        else:  # E closes the innermost open B on its lane
+            if not lane:
+                errors.append(f"{where}: E {name!r} on ({pid},{tid}) with no open B")
+                continue
+            open_name, open_ts = lane.pop()
+            if open_name != name:
+                errors.append(
+                    f"{where}: E {name!r} does not close innermost B "
+                    f"{open_name!r} on ({pid},{tid})"
+                )
+            elif ts < open_ts:
+                errors.append(f"{where}: {name} ends at {ts} before start {open_ts}")
+    for (pid, tid), lane in sorted(stacks.items()):
+        if lane:
+            open_names = [n for n, _ in lane]
+            errors.append(f"unclosed spans on ({pid},{tid}): {open_names}")
+
+    if expect_recovery:
+        # pid 0 is the coordinator, pid K+1 shard K: a recovered 2-shard
+        # run must carry spans from all three processes on one timeline.
+        for pid in (0, 1, 2):
+            if pid not in pids_seen:
+                errors.append(f"expected recovery run: no spans from pid {pid}")
+        for name in sorted(RECOVERY_NAMES - names_seen):
+            errors.append(f"expected recovery run: no {name!r} span")
+    return errors
+
+
+def validate_metrics(obj):
+    """Return a list of error strings (empty = valid)."""
+    errors = []
+    if not isinstance(obj, dict):
+        return [f"top level must be an object, got {type(obj).__name__}"]
+    meta = obj.get("meta")
+    if not isinstance(meta, dict) or meta.get("schema") != "arabesque-metrics-v1":
+        errors.append("missing meta.schema == 'arabesque-metrics-v1'")
+    counters = obj.get("counters")
+    if not isinstance(counters, dict) or not counters:
+        return errors + ["missing non-empty 'counters' object"]
+    for key, val in counters.items():
+        if not isinstance(val, (int, float)):
+            errors.append(f"counter {key!r} is not a number")
+    if "total/processed" not in counters:
+        errors.append("missing 'total/processed' counter")
+    if not any(k.startswith("step1/") for k in counters):
+        errors.append("no per-step counters (expected a 'step1/...' key)")
+    return errors
+
+
+def _load(path, what):
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            return json.load(fh), []
+    except (OSError, json.JSONDecodeError) as exc:
+        return None, [f"{what} {path}: {exc}"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON written by --trace")
+    ap.add_argument("--metrics", help="metrics JSON written by --metrics")
+    ap.add_argument(
+        "--expect-recovery",
+        action="store_true",
+        help="require spans from pids 0/1/2 and the recovery span kinds",
+    )
+    args = ap.parse_args(argv)
+
+    errors = []
+    obj, load_errs = _load(args.trace, "trace")
+    errors += load_errs
+    if obj is not None:
+        errors += [f"trace: {e}" for e in validate_trace(obj, args.expect_recovery)]
+        n_events = len(obj.get("traceEvents", []))
+    else:
+        n_events = 0
+    if args.metrics:
+        mobj, load_errs = _load(args.metrics, "metrics")
+        errors += load_errs
+        if mobj is not None:
+            errors += [f"metrics: {e}" for e in validate_metrics(mobj)]
+
+    if errors:
+        for e in errors:
+            print(f"check_trace: {e}", file=sys.stderr)
+        return 1
+    print(f"check_trace: ok ({n_events} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

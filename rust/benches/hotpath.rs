@@ -15,6 +15,7 @@ use arabesque::engine::{ChunkQueues, Cluster, Config, Partition};
 use arabesque::graph::gen;
 use arabesque::odag::{ExtractionPlan, Odag, OdagStore};
 use arabesque::pattern::{self, canon};
+use arabesque::trace::{SpanKind, TraceBuf};
 use arabesque::util::human_count;
 
 /// Run `f` `iters` times, 5 trials; report median ns/op and ops/s.
@@ -290,6 +291,28 @@ fn main() {
             n += c.hi - c.lo;
         }
         std::hint::black_box(n);
+    });
+
+    // --- trace recording: disabled vs enabled --------------------------
+    // The tracing contract (rust/src/trace/): span recording rides the
+    // claim/extract/flush hot paths, so the *disabled* buffer must cost
+    // a branch and nothing else — no clock read, no allocation. The
+    // enabled side pays two monotonic clock reads plus a fixed-slot ring
+    // write (never an allocation after construction). If the disabled
+    // number here grows past a few ns/op, the gate broke.
+    bench("trace record (disabled: branch only)", it(5_000_000), {
+        let mut t = TraceBuf::new(false);
+        move || {
+            let t0 = t.start();
+            t.record(SpanKind::Claim, 1, 1, std::hint::black_box(t0), 64);
+        }
+    });
+    bench("trace record (enabled: clock + ring write)", it(2_000_000), {
+        let mut t = TraceBuf::new(true);
+        move || {
+            let t0 = t.start();
+            t.record(SpanKind::Claim, 1, 1, std::hint::black_box(t0), 64);
+        }
     });
 
     // --- frontier extraction: staged vs streaming ----------------------

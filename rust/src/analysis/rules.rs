@@ -321,8 +321,9 @@ pub struct MergeSpec {
 /// The repo's merge-coverage bindings: the three engine accounting
 /// structs all funnel through `Cluster::run_with_sink` (workers fold
 /// into `StepStats`, steps fold into `RunResult`), the two stats
-/// structs have their own `merge`, and the distributed barrier folds
-/// `ShardOut` in `Coordinator::merge_shard_outs`.
+/// structs have their own `merge`, the distributed barrier folds
+/// `ShardOut` in `Coordinator::merge_shard_outs`, and shipped trace
+/// buffers fold in `Timeline::fold_shard`.
 pub const MERGE_SPECS: &[MergeSpec] = &[
     MergeSpec {
         strukt: "StepStats",
@@ -368,6 +369,16 @@ pub const MERGE_SPECS: &[MergeSpec] = &[
         impl_owner: "Coordinator",
         fn_name: "merge_shard_outs",
         acc_file: "rust/src/comm/coordinator.rs",
+    },
+    // A ShardTrace field a shard ships that the coordinator's timeline
+    // fold ignores is silently lost observability — the same
+    // dropped-at-barrier bug class, applied to the tracing subsystem.
+    MergeSpec {
+        strukt: "ShardTrace",
+        def_file: "rust/src/trace/mod.rs",
+        impl_owner: "Timeline",
+        fn_name: "fold_shard",
+        acc_file: "rust/src/trace/mod.rs",
     },
 ];
 

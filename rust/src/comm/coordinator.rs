@@ -12,7 +12,19 @@
 //! broadcast byte/message accounting uses the identical formulas over
 //! the identical merged values, so the simulated `CommStats` model is
 //! bit-identical too; `CommStats::wire_bytes` adds what this process
-//! actually put on (and took off) its sockets, measured per step.
+//! actually put on (and took off) its sockets, measured per step and
+//! per socket. Shards keep the mirror-image counter on their side and
+//! report it in every `ShardOut`; the coordinator records both ledgers
+//! as [`crate::trace::WireCheck`] rows so a frame counted on one side
+//! only cannot hide (`rust/tests/trace.rs` asserts they agree).
+//!
+//! **Tracing** (`Config::trace`): the coordinator's control thread
+//! records its own spans (supersteps, frames, merges, every recovery
+//! action) and folds each shard's shipped span buffer into one global
+//! [`crate::trace::Timeline`], shifting shard timestamps by the clock
+//! offset measured at that incarnation's `Hello` — so a `--trace` file
+//! from a kill-injected run renders the failure, respawn, and replay
+//! against the same time axis as the work they interrupted.
 //!
 //! **Fault tolerance** (pinned by `rust/tests/recovery.rs`): the
 //! coordinator is also the recovery authority. Every socket operation
@@ -53,12 +65,13 @@ use crate::graph::{loader, LabeledGraph};
 use crate::odag::OdagStore;
 use crate::output::OutputSink;
 use crate::pattern::Pattern;
-use crate::stats::{CommStats, Phase, PhaseTimes, StepStats};
+use crate::stats::{monotonic_nanos, CommStats, Phase, PhaseTimes, StepStats};
+use crate::trace::{SpanKind, Timeline, TraceBuf, WireCheck};
 use crate::util::codec::Writer;
 use crate::util::err::{Context, Error, Result};
 
 use super::fault::FaultPlan;
-use super::frame::{FrameKind, WireCounter};
+use super::frame::{FrameKind, WireCounter, HEADER_BYTES};
 use super::io::{self, DeadlineStream};
 use super::wire::{
     self, put_embedding_list, put_int_map, put_pattern_map, FinalOut, ShardOut, ShardSnapshot,
@@ -169,22 +182,25 @@ fn validate_hello_id(id: usize, shards: usize, taken: &[bool]) -> Result<()> {
 
 /// Accept one shard connection and read its `Hello`, all under
 /// deadlines — a peer that connects but never identifies itself cannot
-/// wedge the coordinator. Returns the announced id and the wrapped
-/// stream (its per-frame deadline already set to `step_timeout`).
+/// wedge the coordinator. Returns the announced id, the wrapped stream
+/// (its per-frame deadline already set to `step_timeout`), the Hello's
+/// on-the-wire bytes (counted locally here and folded into the right
+/// shard's per-socket ledger once the id is known), and the shard's
+/// monotonic clock sample for timeline alignment.
 fn accept_hello(
     listener: &TcpListener,
     opts: &RecoveryOptions,
-    wire: &WireCounter,
     what: &str,
-) -> Result<(usize, DeadlineStream)> {
+) -> Result<(usize, DeadlineStream, u64, u64)> {
     let stream = io::accept(listener, opts.handshake_timeout, what)?;
     stream.set_nodelay(true).context("set TCP_NODELAY")?;
     let mut ds = DeadlineStream::new(stream, opts.step_timeout);
+    let hello_wire = WireCounter::new();
     let hello = ds
-        .expect_frame(FrameKind::Hello, wire)
+        .expect_frame(FrameKind::Hello, &hello_wire)
         .with_context(|| format!("{what}: await Hello"))?;
-    let id = wire::get_hello(&hello).context("decode Hello frame")?;
-    Ok((id, ds))
+    let (id, shard_clock) = wire::get_hello(&hello).context("decode Hello frame")?;
+    Ok((id, ds, hello_wire.total(), shard_clock))
 }
 
 /// Build one shard's argv from the run configuration and launch it.
@@ -222,6 +238,9 @@ fn spawn_shard(
     if !cfg.two_level_agg {
         cmd.arg("--one-level");
     }
+    if cfg.trace {
+        cmd.arg("--trace-spans");
+    }
     if let Partition::Skewed(pct) = cfg.partition {
         cmd.arg("--skew").arg(pct.to_string());
     }
@@ -246,7 +265,24 @@ struct Coordinator<'a> {
     listener: TcpListener,
     children: Vec<Child>,
     streams: Vec<DeadlineStream>,
-    wire: WireCounter,
+    /// Per shard: bytes this process put on / took off that shard's
+    /// socket, cumulative across all of its incarnations. Never reset —
+    /// [`Self::wire_total`] stays monotonic so per-step deltas in
+    /// `run_distributed_with` survive recoveries.
+    wire_per: Vec<WireCounter>,
+    /// Per shard: `wire_per[k].total()` when its current incarnation was
+    /// spawned. A fresh incarnation's shard-side ledger starts at zero,
+    /// so the agreement check compares against the delta past this base.
+    wire_base: Vec<u64>,
+    /// Per shard: coordinator clock minus shard clock (nanos), sampled
+    /// at the current incarnation's `Hello`. Biased by one-way handshake
+    /// latency — good enough to line spans up on one loopback host.
+    clock_offsets: Vec<i64>,
+    /// Control-thread span recorder (exported as pid 0 / tid 0).
+    trace: TraceBuf,
+    /// The run's merged timeline: shard traces folded at each barrier,
+    /// wire-agreement rows always, `trace` absorbed at the end.
+    timeline: Timeline,
     /// Per shard: the serialized `ShardSnapshot` from its latest merged
     /// `ShardOut` (initially the empty snapshot, so a shard that dies
     /// in superstep 1 restores through the same path as any other).
@@ -297,7 +333,11 @@ impl<'a> Coordinator<'a> {
             listener,
             children,
             streams: Vec::new(),
-            wire: WireCounter::new(),
+            wire_per: (0..shards).map(|_| WireCounter::new()).collect(),
+            wire_base: vec![0; shards],
+            clock_offsets: vec![0; shards],
+            trace: TraceBuf::new(cfg.trace),
+            timeline: Timeline::new(cfg.trace),
             checkpoints: vec![ShardSnapshot::initial(cfg.threads_per_server).serialize(); shards],
             retries: vec![0; shards],
             shard_restarts: 0,
@@ -305,9 +345,12 @@ impl<'a> Coordinator<'a> {
         };
         let mut slots: Vec<Option<DeadlineStream>> = (0..shards).map(|_| None).collect();
         for _ in 0..shards {
-            let (id, ds) = accept_hello(&coord.listener, coord.opts, &coord.wire, "accept shard")?;
+            let (id, ds, hello_bytes, shard_clock) =
+                accept_hello(&coord.listener, coord.opts, "accept shard")?;
             let taken: Vec<bool> = slots.iter().map(Option::is_some).collect();
             validate_hello_id(id, shards, &taken)?;
+            coord.wire_per[id].add(hello_bytes);
+            coord.clock_offsets[id] = monotonic_nanos() as i64 - shard_clock as i64;
             slots[id] = Some(ds);
         }
         coord.streams = slots
@@ -328,8 +371,11 @@ impl<'a> Coordinator<'a> {
     ///
     /// `count_replay` marks rounds that are supersteps (for the
     /// `replayed_steps` ledger; the Finish round is not a superstep).
+    /// `step` labels this round's trace spans — 0 for control rounds
+    /// like Finish, which are exempt from step-nesting.
     fn exchange<T>(
         &mut self,
+        step: usize,
         send_kind: FrameKind,
         payload: &[u8],
         want: FrameKind,
@@ -343,15 +389,27 @@ impl<'a> Coordinator<'a> {
         while done.iter().any(Option::is_none) {
             for k in 0..n {
                 if done[k].is_none() && !sent[k] {
-                    match self.streams[k].send_frame(send_kind, payload, &self.wire, "send") {
-                        Ok(()) => sent[k] = true,
+                    let t_tx = self.trace.start();
+                    match self.streams[k].send_frame(send_kind, payload, &self.wire_per[k], "send")
+                    {
+                        Ok(()) => {
+                            self.trace.record(
+                                SpanKind::FrameSend,
+                                step,
+                                0,
+                                t_tx,
+                                HEADER_BYTES + payload.len() as u64,
+                            );
+                            sent[k] = true;
+                        }
                         Err(e) => {
                             let err =
                                 Error::from(e).wrap(format!("send {send_kind:?} to shard {k}"));
-                            self.recover(k, &err)?;
+                            self.recover(k, step, &err)?;
                             if count_replay && !replay_counted {
                                 replay_counted = true;
                                 self.replayed_steps += 1;
+                                self.trace.mark(SpanKind::Replay, step, 0, k as u64);
                             }
                         }
                     }
@@ -359,19 +417,27 @@ impl<'a> Coordinator<'a> {
             }
             for k in 0..n {
                 if done[k].is_none() && sent[k] {
-                    let got = self.streams[k]
-                        .expect_frame(want, &self.wire)
-                        .map_err(Error::from)
+                    let t_rx = self.trace.start();
+                    // Two statements, so the recorder borrow does not
+                    // overlap the stream borrow inside the chain.
+                    let raw = self.streams[k]
+                        .expect_frame(want, &self.wire_per[k])
+                        .map_err(Error::from);
+                    if let Ok(p) = &raw {
+                        self.trace.record(SpanKind::FrameRecv, step, 0, t_rx, p.len() as u64);
+                    }
+                    let got = raw
                         .and_then(|p| decode(&p))
                         .with_context(|| format!("receive {want:?} from shard {k}"));
                     match got {
                         Ok(v) => done[k] = Some(v),
                         Err(e) => {
-                            self.recover(k, &e)?;
+                            self.recover(k, step, &e)?;
                             sent[k] = false;
                             if count_replay && !replay_counted {
                                 replay_counted = true;
                                 self.replayed_steps += 1;
+                                self.trace.mark(SpanKind::Replay, step, 0, k as u64);
                             }
                         }
                     }
@@ -386,7 +452,8 @@ impl<'a> Coordinator<'a> {
     /// shard id, re-handshake, and replay its barrier checkpoint with a
     /// `Restore` frame. On success `streams[k]` is the new incarnation,
     /// restored and waiting for the round's payload.
-    fn recover(&mut self, k: usize, err: &Error) -> Result<()> {
+    fn recover(&mut self, k: usize, step: usize, err: &Error) -> Result<()> {
+        self.trace.mark(SpanKind::FailureDetected, step, 0, k as u64);
         // A crashed child and a wedged one both surface as socket
         // errors; try_wait tells them apart for the diagnostics.
         let diagnosis = match self.children[k].try_wait() {
@@ -409,7 +476,15 @@ impl<'a> Coordinator<'a> {
         // Exponential backoff: failures from environmental pressure
         // (fork storms, port exhaustion) get breathing room to clear.
         let backoff = self.opts.backoff_base * (1u32 << (self.retries[k] - 1).min(16));
+        let t_bo = self.trace.start();
         std::thread::sleep(backoff);
+        self.trace.record(SpanKind::Backoff, step, 0, t_bo, k as u64);
+        // The dead incarnation's socket bytes stay in `wire_per` (the
+        // run's transport totals are cumulative), but the respawn's
+        // shard-side counter restarts at zero — re-base the agreement
+        // comparison here, before the new incarnation's Hello lands.
+        self.wire_base[k] = self.wire_per[k].total();
+        let t_re = self.trace.start();
         self.children[k] = spawn_shard(
             self.exe,
             self.cfg,
@@ -421,12 +496,20 @@ impl<'a> Coordinator<'a> {
             k,
         )?;
         let what = format!("accept respawned shard {k}");
-        let (id, mut ds) = accept_hello(&self.listener, self.opts, &self.wire, &what)?;
+        let (id, mut ds, hello_bytes, shard_clock) =
+            accept_hello(&self.listener, self.opts, &what)?;
         if id != k {
             bail!("respawned shard announced id {id}, expected {k}");
         }
-        ds.send_frame(FrameKind::Restore, &self.checkpoints[k], &self.wire, "send Restore")
+        self.wire_per[k].add(hello_bytes);
+        // A new process means a new clock epoch on some platforms —
+        // re-measure the offset for this incarnation's spans.
+        self.clock_offsets[k] = monotonic_nanos() as i64 - shard_clock as i64;
+        self.trace.record(SpanKind::Respawn, step, 0, t_re, k as u64);
+        let t_rs = self.trace.start();
+        ds.send_frame(FrameKind::Restore, &self.checkpoints[k], &self.wire_per[k], "send Restore")
             .with_context(|| format!("restore respawned shard {k}"))?;
+        self.trace.record(SpanKind::Restore, step, 0, t_rs, self.checkpoints[k].len() as u64);
         self.streams[k] = ds;
         Ok(())
     }
@@ -464,14 +547,27 @@ impl<'a> Coordinator<'a> {
             st.phases.merge(&PhaseTimes::from_nanos(out.phase_nanos));
             st.busy_max = st.busy_max.max(Duration::from_nanos(out.busy_max_nanos));
             st.busy_sum += Duration::from_nanos(out.busy_sum_nanos);
-            // Shuffle traffic comes pre-summed per shard; wire bytes are
-            // measured on this process's own sockets, never shipped.
+            // Shuffle traffic comes pre-summed per shard; the wire
+            // bytes folded into CommStats are measured on this
+            // process's own sockets. The shard's own socket ledger
+            // (`wire_bytes`) ships only to be *compared*: both sides of
+            // a socket must count the same bytes per incarnation, and
+            // every barrier records the pair for the agreement test.
             st.comm.merge(&CommStats {
                 messages: out.shuffle_messages,
                 bytes: out.shuffle_bytes,
                 wire_bytes: 0,
                 checkpoint_bytes: 0,
             });
+            self.timeline.push_wire_check(WireCheck {
+                step: st.step as u32,
+                shard: i as u32,
+                shard_bytes: out.wire_bytes,
+                coord_bytes: self.wire_per[i].total() - self.wire_base[i],
+            });
+            // Shard spans arrive on the shard's clock; shift them onto
+            // ours by the offset measured at this incarnation's Hello.
+            self.timeline.fold_shard(i as u32 + 1, self.clock_offsets[i], out.trace);
             // The barrier checkpoint: counted (deterministically — one
             // valid ShardOut per shard per step, replays excluded) and
             // stored verbatim for a possible Restore.
@@ -506,6 +602,13 @@ impl<'a> Coordinator<'a> {
             int_merged.unwrap_or_default(),
             merged_list,
         )
+    }
+
+    /// Measured transport total across every shard socket, all
+    /// incarnations. Monotonic (per-socket counters are never reset), so
+    /// per-step deltas stay correct across recoveries.
+    fn wire_total(&self) -> u64 {
+        self.wire_per.iter().map(WireCounter::total).sum()
     }
 
     /// Reap every child, failing if any exited unsuccessfully.
@@ -588,10 +691,12 @@ pub fn run_distributed_with(
     let mut step = 1usize;
     while step <= cfg.max_steps && !frontier.is_empty() {
         let t_step = Instant::now();
-        let wire0 = coord.wire.total();
+        let t_sp = coord.trace.start();
+        let wire0 = coord.wire_total();
 
         let payload = encode_step(step as u64, &frontier, &prev_pattern_aggs, &prev_int_aggs);
         let shard_outs: Vec<ShardOut> = coord.exchange(
+            step,
             FrameKind::Step,
             &payload,
             FrameKind::ShardOut,
@@ -603,6 +708,7 @@ pub fn run_distributed_with(
         // ---- barrier: identical accumulation, reductions, broadcast
         // ---- accounting, and history folds as the in-process engine.
         let t_merge = Instant::now();
+        let t_mg = coord.trace.start();
         let mut st = StepStats { step, ..Default::default() };
         let (merged_odags, step_pattern_aggs, step_int_aggs, merged_list) =
             coord.merge_shard_outs(cfg, &mut st, shard_outs, &mut processed_total);
@@ -644,7 +750,8 @@ pub fn run_distributed_with(
 
         // Measured transport: everything this step put on the sockets
         // (Step broadcast out, ShardOut frames in), header included.
-        st.comm.add_wire(coord.wire.total() - wire0);
+        st.comm.add_wire(coord.wire_total() - wire0);
+        coord.trace.record(SpanKind::Merge, step, 0, t_mg, st.frontier_bytes);
 
         peak_frontier_bytes = peak_frontier_bytes.max(st.frontier_bytes);
         candidates_total += st.candidates;
@@ -657,6 +764,7 @@ pub fn run_distributed_with(
         st.merge_wall = t_merge.elapsed();
         st.sim_wall = st.busy_max + st.merge_critical;
         st.wall = t_step.elapsed();
+        coord.trace.record(SpanKind::Step, step, 0, t_sp, st.processed);
         steps.push(st);
         step += 1;
     }
@@ -664,8 +772,9 @@ pub fn run_distributed_with(
     // ---- end of computation: collect output aggregation + counters
     // ---- (same recoverable exchange — a shard dying at Finish time is
     // ---- restored and asked to Finish again).
-    let wire_finish0 = coord.wire.total();
+    let wire_finish0 = coord.wire_total();
     let finals: Vec<FinalOut> = coord.exchange(
+        0, // control round, not a superstep: spans land out-of-step
         FrameKind::Finish,
         &[],
         FrameKind::FinalOut,
@@ -682,11 +791,15 @@ pub fn run_distributed_with(
         shard_outputs += f.outputs;
         out_parts.push(f.output_part);
     }
-    comm_total.add_wire(coord.wire.total() - wire_finish0);
+    comm_total.add_wire(coord.wire_total() - wire_finish0);
     let pattern_output = agg::merge_global(out_parts);
 
     let shard_restarts = coord.shard_restarts;
     let replayed_steps = coord.replayed_steps;
+    // Close out the merged timeline before `join` consumes the
+    // coordinator: the control thread's own spans go in last.
+    let mut timeline = std::mem::take(&mut coord.timeline);
+    timeline.absorb(0, &mut coord.trace);
     coord.join()?;
 
     let aggregates = RunAggregates { pattern_history, pattern_output, int_history };
@@ -711,6 +824,7 @@ pub fn run_distributed_with(
         replayed_steps,
         comm: comm_total,
         phases: phases_total,
+        trace: timeline,
         agg_stats,
         canonical_patterns,
         peak_frontier_bytes,
@@ -781,8 +895,7 @@ mod tests {
             let s = TcpStream::connect(addr).unwrap();
             client(s);
         });
-        let wire = WireCounter::new();
-        let err = accept_hello(&listener, &fast_opts(), &wire, "test accept").unwrap_err();
+        let err = accept_hello(&listener, &fast_opts(), "test accept").unwrap_err();
         peer.join().unwrap();
         assert!(t0.elapsed() < NO_HANG);
         err

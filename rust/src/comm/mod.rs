@@ -23,6 +23,13 @@
 //! without disturbing bit-identity. Failures are rehearsed
 //! deterministically via [`fault::FaultPlan`] (`--inject`). See
 //! `ARCHITECTURE.md` § "Fault tolerance".
+//!
+//! The whole exchange is observable: both ends of every socket keep a
+//! [`frame::WireCounter`] whose per-incarnation totals must agree at
+//! each barrier, and with `--trace` enabled the shards' span buffers
+//! ride home inside `ShardOut` frames to be merged — clock-aligned at
+//! the `Hello` handshake — into one [`crate::trace::Timeline`]. See
+//! `ARCHITECTURE.md` § "Observability".
 
 pub mod coordinator;
 pub mod fault;

@@ -44,6 +44,7 @@ use crate::graph::LabeledGraph;
 use crate::odag::ExtractionPlan;
 use crate::output::{CountingSink, OutputSink};
 use crate::pattern::Pattern;
+use crate::trace::{SpanKind, TraceBuf};
 use crate::util::err::{Context, Result};
 
 use super::fault::{FaultKind, FaultPlan};
@@ -112,7 +113,18 @@ pub fn run_shard_with(
     stream.set_nodelay(true).context("set TCP_NODELAY")?;
     let mut ds = DeadlineStream::new(stream, opts.peer_timeout);
     let wire_counter = WireCounter::new();
-    ds.send_frame(FrameKind::Hello, &wire::put_hello(shard_id), &wire_counter, "send Hello")?;
+    // The Hello carries a reading of this process's monotonic clock so
+    // the coordinator can place this incarnation's spans on its own
+    // time axis (see `trace`).
+    ds.send_frame(
+        FrameKind::Hello,
+        &wire::put_hello(shard_id, crate::stats::monotonic_nanos()),
+        &wire_counter,
+        "send Hello",
+    )?;
+    // Shard-side control-thread spans (Step/Checkpoint/Restore) record
+    // here on lane 0 and ship inside each ShardOut's trace.
+    let mut trace = TraceBuf::new(cfg.trace);
 
     let mut states: Vec<worker::WorkerState> =
         (0..t_per).map(|_| worker::WorkerState::new(cfg.two_level_agg)).collect();
@@ -128,21 +140,40 @@ pub fn run_shard_with(
             .with_context(|| format!("shard {shard_id} awaiting coordinator"))?;
         match kind {
             FrameKind::Step => {
+                let t_sp = trace.start();
                 let msg = StepMsg::deserialize(&payload).context("decode Step frame")?;
                 if let Some(fault) = opts.faults.fire(shard_id, msg.step) {
                     inject(fault, &mut ds, &wire_counter);
                 }
                 let mut out =
                     run_one_step(shard_id, cfg, g, app, &mut states, sink.as_ref(), &msg);
+                let t_ck = trace.start();
                 out.snapshot = checkpoint(&states, sink.count() + restored_outputs);
-                ds.send_frame(
-                    FrameKind::ShardOut,
-                    &out.serialize(),
-                    &wire_counter,
-                    "send ShardOut",
-                )?;
+                trace.record(
+                    SpanKind::Checkpoint,
+                    msg.step as usize,
+                    0,
+                    t_ck,
+                    out.snapshot.len() as u64,
+                );
+                // The Step span must close BEFORE serialization so it
+                // ships inside this very ShardOut (a span covering its
+                // own send could only ride the *next* frame).
+                trace.record(SpanKind::Step, msg.step as usize, 0, t_sp, out.processed);
+                out.trace.absorb(&mut trace);
+                let mut bytes = out.serialize();
+                // Satellite accounting: this shard's cumulative socket
+                // bytes, *including the frame about to carry them* —
+                // patched into the payload's fixed 0..8 lead-in (see
+                // `ShardOut::wire_bytes`). Must mirror what the
+                // coordinator's counter sees for this incarnation.
+                let total =
+                    wire_counter.total() + super::frame::HEADER_BYTES + bytes.len() as u64;
+                bytes[..8].copy_from_slice(&total.to_le_bytes());
+                ds.send_frame(FrameKind::ShardOut, &bytes, &wire_counter, "send ShardOut")?;
             }
             FrameKind::Restore => {
+                let t_rs = trace.start();
                 let snap =
                     ShardSnapshot::deserialize(&payload).context("decode Restore frame")?;
                 if snap.workers.len() != t_per {
@@ -156,6 +187,9 @@ pub fn run_shard_with(
                     state.pattern_agg.restore(ws.pattern);
                 }
                 restored_outputs = snap.outputs;
+                // Step 0: restores happen between supersteps; the span
+                // ships with the next barrier's ShardOut.
+                trace.record(SpanKind::Restore, 0, 0, t_rs, payload.len() as u64);
             }
             FrameKind::Finish => {
                 let mut out_parts = Vec::with_capacity(t_per);
@@ -308,7 +342,7 @@ mod tests {
             let wire = WireCounter::new();
             let mut ds = DeadlineStream::new(s.try_clone().unwrap(), Duration::from_secs(5));
             let hello = ds.expect_frame(FrameKind::Hello, &wire).unwrap();
-            assert_eq!(wire::get_hello(&hello).unwrap(), 0);
+            assert_eq!(wire::get_hello(&hello).unwrap().0, 0);
             script(s);
         });
         let g = gen::erdos_renyi(10, 20, 1, 1, 1).unlabeled();

@@ -20,6 +20,7 @@ use crate::engine::worker::WorkerOut;
 use crate::odag::OdagStore;
 use crate::pattern::Pattern;
 use crate::stats::PhaseTimes;
+use crate::trace::ShardTrace;
 use crate::util::codec::{CodecError, Reader, Writer};
 
 // ---------------------------------------------------------------- AggVal
@@ -191,10 +192,20 @@ impl StepMsg {
 ///
 /// Durations cross the wire as nanosecond counters ([`PhaseTimes::nanos`]
 /// layout for phases); `shuffle_*` is the simulated §4.3 model computed
-/// worker-side — measured socket bytes are counted by the coordinator's
-/// own [`super::frame::WireCounter`], never shipped (a shard reporting
-/// its socket bytes would double-count the same frames).
+/// worker-side. Measured socket traffic is counted on **both** sides
+/// independently ([`super::frame::WireCounter`]): the coordinator's
+/// counters feed `CommStats::wire_bytes`, while each shard ships its own
+/// cumulative count in [`ShardOut::wire_bytes`] purely as a cross-check
+/// — the coordinator never adds it into any total (that would
+/// double-count the same frames), it only compares the two sides per
+/// step (`trace::WireCheck`).
 pub struct ShardOut {
+    /// Cumulative socket bytes this shard incarnation has moved (both
+    /// directions, headers included, this frame itself included).
+    /// Serialized **first** so the shard can patch the final value into
+    /// payload bytes `0..8` after measuring the frame it is about to
+    /// send (the count must cover the `ShardOut` frame's own bytes).
+    pub wire_bytes: u64,
     pub frontier_list: Vec<Vec<u32>>,
     pub frontier_odag: OdagStore,
     pub frontier_added: u64,
@@ -218,6 +229,10 @@ pub struct ShardOut {
     /// and re-ships them in a `Restore` frame if this shard must be
     /// respawned — only a shard ever decodes them.
     pub snapshot: Vec<u8>,
+    /// Spans this shard's threads recorded since its previous barrier
+    /// (empty unless the run traces). Folded into the global timeline by
+    /// `trace::Timeline::fold_shard` after clock alignment.
+    pub trace: ShardTrace,
 }
 
 impl ShardOut {
@@ -241,7 +256,8 @@ impl ShardOut {
         let mut phases = PhaseTimes::default();
         let mut busy_max = Duration::ZERO;
         let mut busy_sum = Duration::ZERO;
-        for out in outs {
+        let mut trace = ShardTrace::default();
+        for mut out in outs {
             candidates += out.candidates;
             processed += out.processed;
             frontier_added += out.frontier_added;
@@ -255,6 +271,7 @@ impl ShardOut {
             phases.merge(&out.phases);
             busy_max = busy_max.max(out.busy);
             busy_sum += out.busy;
+            trace.absorb(&mut out.trace);
             crate::agg::merge_into(&mut pattern_part, out.pattern_part);
             crate::agg::merge_into(&mut int_part, out.int_part);
             if use_odag {
@@ -264,6 +281,9 @@ impl ShardOut {
             }
         }
         ShardOut {
+            // Patched in by run_shard after measuring the frame about
+            // to carry this struct (see `serialize`).
+            wire_bytes: 0,
             frontier_list,
             frontier_odag,
             frontier_added,
@@ -284,11 +304,17 @@ impl ShardOut {
             // The shard attaches its checkpoint after the pre-merge
             // (run_shard fills this in before sending).
             snapshot: Vec::new(),
+            trace,
         }
     }
 
     pub fn serialize(&self) -> Vec<u8> {
         let mut w = Writer::new();
+        // wire_bytes leads the payload at a fixed offset: the shard
+        // serializes with a placeholder, counts the resulting frame,
+        // then patches bytes 0..8 — the only field whose final value
+        // depends on the serialized size.
+        w.put_u64(self.wire_bytes);
         put_embedding_list(&mut w, &self.frontier_list);
         self.frontier_odag.serialize(&mut w);
         w.put_u64(self.frontier_added);
@@ -313,11 +339,13 @@ impl ShardOut {
         w.put_u64(self.busy_max_nanos);
         w.put_u64(self.busy_sum_nanos);
         w.put_bytes(&self.snapshot);
+        self.trace.serialize(&mut w);
         w.into_bytes()
     }
 
     pub fn deserialize(bytes: &[u8]) -> Result<ShardOut, CodecError> {
         let mut r = Reader::new(bytes);
+        let wire_bytes = r.get_u64()?;
         let frontier_list = get_embedding_list(&mut r)?;
         let frontier_odag = OdagStore::deserialize(&mut r)?;
         let frontier_added = r.get_u64()?;
@@ -335,9 +363,11 @@ impl ShardOut {
         let busy_max_nanos = r.get_u64()?;
         let busy_sum_nanos = r.get_u64()?;
         let snapshot = r.get_bytes()?;
+        let trace = ShardTrace::deserialize(&mut r)?;
         let [candidates, processed, steals, stolen_units, pattern_rescans, root_descents, shuffle_messages, shuffle_bytes] =
             scalars;
         Ok(ShardOut {
+            wire_bytes,
             frontier_list,
             frontier_odag,
             frontier_added,
@@ -356,6 +386,7 @@ impl ShardOut {
             busy_max_nanos,
             busy_sum_nanos,
             snapshot,
+            trace,
         })
     }
 }
@@ -506,19 +537,28 @@ impl FinalOut {
 
 // ---------------------------------------------------------------- Hello
 
-pub fn put_hello(shard_id: usize) -> Vec<u8> {
+/// Shard → coordinator handshake: the shard's id plus a reading of its
+/// own monotonic clock taken at send time. The coordinator subtracts the
+/// shipped clock from its own at receipt to estimate this incarnation's
+/// clock offset (best effort: the one-way handshake latency biases the
+/// offset by well under a loopback round trip — see
+/// ARCHITECTURE.md "Observability").
+pub fn put_hello(shard_id: usize, clock_nanos: u64) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_u32(shard_id as u32);
+    w.put_u64(clock_nanos);
     w.into_bytes()
 }
 
-pub fn get_hello(bytes: &[u8]) -> Result<usize, CodecError> {
-    Ok(Reader::new(bytes).get_u32()? as usize)
+pub fn get_hello(bytes: &[u8]) -> Result<(usize, u64), CodecError> {
+    let mut r = Reader::new(bytes);
+    Ok((r.get_u32()? as usize, r.get_u64()?))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::{Span, SpanKind};
     use crate::util::rng::Rng;
 
     fn sample_pattern(rng: &mut Rng) -> Pattern {
@@ -645,7 +685,29 @@ mod tests {
         store.add(&p, &[1, 2]);
         let mut int_part = HashMap::new();
         int_part.insert(3, AggVal::Long(rng.gen_range(50) as i64));
+        let trace = ShardTrace {
+            spans: vec![
+                Span {
+                    kind: SpanKind::Step,
+                    step: 2,
+                    worker: 0,
+                    t_start: rng.gen_range(1 << 40),
+                    t_end: rng.gen_range(1 << 40),
+                    payload: rng.gen_range(1 << 20),
+                },
+                Span {
+                    kind: SpanKind::Steal,
+                    step: 2,
+                    worker: 1,
+                    t_start: 5,
+                    t_end: 9,
+                    payload: 64,
+                },
+            ],
+            dropped: rng.gen_range(10),
+        };
         ShardOut {
+            wire_bytes: rng.gen_range(1 << 30),
             frontier_list: vec![vec![1, 2], vec![3, 4]],
             frontier_odag: store,
             frontier_added: rng.gen_range(100),
@@ -664,6 +726,7 @@ mod tests {
             busy_max_nanos: rng.gen_range(1 << 40),
             busy_sum_nanos: rng.gen_range(1 << 40),
             snapshot: sample_shard_snapshot(&mut rng).serialize(),
+            trace,
         }
     }
 
@@ -720,7 +783,24 @@ mod tests {
             assert_eq!(back.pattern_rescans, s.pattern_rescans);
             assert_eq!(back.root_descents, s.root_descents);
             assert_eq!(back.snapshot, s.snapshot, "checkpoint bytes ride along verbatim");
+            assert_eq!(back.wire_bytes, s.wire_bytes, "shard-side wire count rides along");
+            assert_eq!(back.trace, s.trace, "trace spans ride along");
         }
+    }
+
+    #[test]
+    fn shard_out_wire_bytes_is_patchable_at_offset_zero() {
+        // The shard serializes with a placeholder count, measures the
+        // frame, then overwrites payload bytes 0..8 — the layout
+        // contract run_shard depends on.
+        let mut s = sample_shard_out(4);
+        s.wire_bytes = 0;
+        let mut bytes = s.serialize();
+        bytes[..8].copy_from_slice(&0xABCD_EF01_2345u64.to_le_bytes());
+        let back = ShardOut::deserialize(&bytes).unwrap();
+        assert_eq!(back.wire_bytes, 0xABCD_EF01_2345);
+        assert_eq!(back.candidates, s.candidates, "patch touches nothing else");
+        assert_eq!(back.trace, s.trace);
     }
 
     #[test]
@@ -793,9 +873,10 @@ mod tests {
                 let _ = ShardOut::deserialize(&evil);
             }
         }
-        // An oversized count prefix is rejected before allocation.
+        // An oversized count prefix is rejected before allocation. The
+        // embedding-list count sits after the 8-byte wire_bytes lead-in.
         let mut evil = bytes.clone();
-        evil[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        evil[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(matches!(
             ShardOut::deserialize(&evil),
             Err(CodecError::Oversized { .. })
@@ -846,8 +927,10 @@ mod tests {
 
     #[test]
     fn hello_roundtrip() {
-        assert_eq!(get_hello(&put_hello(3)).unwrap(), 3);
+        assert_eq!(get_hello(&put_hello(3, 123_456)).unwrap(), (3, 123_456));
         assert!(get_hello(&[1, 2]).is_err());
+        // id alone without the clock is a truncated handshake.
+        assert!(get_hello(&put_hello(3, 9)[..4]).is_err());
     }
 
     #[test]

@@ -80,6 +80,7 @@ use crate::odag::{ExtractionPlan, OdagStore};
 use crate::output::{CountingSink, OutputSink};
 use crate::pattern::Pattern;
 use crate::stats::{CommStats, Phase, PhaseTimes, StepStats};
+use crate::trace::{SpanKind, Timeline, TraceBuf};
 
 pub use steal::{ChunkQueues, Claim, Partition};
 pub use worker::WorkerState;
@@ -113,6 +114,11 @@ pub struct Config {
     /// Safety cap on exploration steps (applications normally terminate
     /// via `should_expand` / empty frontiers).
     pub max_steps: usize,
+    /// Record trace spans on every worker and control thread (see
+    /// [`crate::trace`]) for `--trace`/`--metrics` export. Off by
+    /// default; the disabled path is a branch and no allocation
+    /// (pinned by the `hotpath` bench pair).
+    pub trace: bool,
 }
 
 impl Config {
@@ -126,6 +132,7 @@ impl Config {
             steal: true,
             partition: Partition::RoundRobin,
             max_steps: 64,
+            trace: false,
         }
     }
 
@@ -161,6 +168,11 @@ impl Config {
 
     pub fn with_max_steps(mut self, n: usize) -> Self {
         self.max_steps = n;
+        self
+    }
+
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.trace = on;
         self
     }
 }
@@ -224,6 +236,10 @@ pub struct RunResult {
     pub replayed_steps: u64,
     pub comm: CommStats,
     pub phases: PhaseTimes,
+    /// The merged span timeline (empty unless [`Config::trace`] was
+    /// set; distributed runs fold in every shard's spans shifted onto
+    /// the coordinator clock — see [`crate::trace`]).
+    pub trace: Timeline,
     pub agg_stats: AggStats,
     /// Distinct canonical patterns seen in pattern aggregation.
     pub canonical_patterns: u64,
@@ -377,6 +393,9 @@ impl Cluster {
         let cfg = &self.cfg;
         let w = cfg.workers();
         let t_run = Instant::now();
+        // pid 0 = this process; the control thread records on tid 0.
+        let mut timeline = Timeline::new(cfg.trace);
+        let mut ctl = TraceBuf::new(cfg.trace);
 
         let mut states: Vec<WorkerState> =
             (0..w).map(|_| WorkerState::new(cfg.two_level_agg)).collect();
@@ -400,6 +419,7 @@ impl Cluster {
         let mut step = 1usize;
         while step <= cfg.max_steps && !frontier.is_empty() {
             let t_step = Instant::now();
+            let t_sp = ctl.start();
 
             // ---- chunk ledger: the step's elastic partition ---------
             // Step 1's word list is computed once here (the seed had
@@ -445,6 +465,7 @@ impl Cluster {
             // Scalar accumulation + part collection; shuffle accounting
             // arrives precomputed per worker and only sums here.
             let t_merge = Instant::now();
+            let t_mg = ctl.start();
             let mut st = StepStats { step, ..Default::default() };
             let mut agg_parts: Vec<HashMap<Pattern, AggVal>> = Vec::with_capacity(w);
             let mut int_parts: Vec<HashMap<i64, AggVal>> = Vec::with_capacity(w);
@@ -464,6 +485,7 @@ impl Cluster {
                 st.busy_max = st.busy_max.max(out.busy);
                 st.busy_sum += out.busy;
                 st.comm.merge(&out.shuffle_comm);
+                timeline.absorb(0, &mut out.trace);
                 processed_total += out.processed;
                 agg_parts.push(std::mem::take(&mut out.pattern_part));
                 int_parts.push(std::mem::take(&mut out.int_part));
@@ -480,12 +502,21 @@ impl Cluster {
             // the simulated parallel time of each tree.
             let t_par = Instant::now();
             let parallel = w > 1;
+            // Barrier component spans (payload = component index):
+            // 0 = ODAG union, 1 = pattern reduce, 2 = int reduce,
+            // 3 = broadcast fold, 4 = extraction-plan build.
+            let t_b = ctl.start();
             let (odags_merged, c_odag, u_odag) =
                 tree_reduce(odag_parts, OdagStore::merge_owned, parallel);
+            ctl.record(SpanKind::Barrier, step, 0, t_b, 0);
+            let t_b = ctl.start();
             let (pat_merged, c_pat, u_pat) =
                 tree_reduce(agg_parts, agg::merge_into, parallel);
+            ctl.record(SpanKind::Barrier, step, 0, t_b, 1);
+            let t_b = ctl.start();
             let (int_merged, c_int, u_int) =
                 tree_reduce(int_parts, agg::merge_into, parallel);
+            ctl.record(SpanKind::Barrier, step, 0, t_b, 2);
             let mut par_wall = t_par.elapsed();
             st.merge_cpu = u_odag + u_pat + u_int;
             let mut merge_critical_par = c_odag + c_pat + c_int;
@@ -507,6 +538,7 @@ impl Cluster {
             // in a single measured pass per side — the two coordinator
             // loops this replaces ran sequentially after the merge.
             let t_bcast = Instant::now();
+            let t_b = ctl.start();
             let (pat_fold, int_fold) = if parallel {
                 std::thread::scope(|scope| {
                     let ph = std::mem::take(&mut pattern_history);
@@ -532,6 +564,7 @@ impl Cluster {
                 )
             };
             par_wall += t_bcast.elapsed();
+            ctl.record(SpanKind::Barrier, step, 0, t_b, 3);
             let (new_pat_history, pat_bytes, c_hp) = pat_fold;
             let (new_int_history, int_bytes, c_hi) = int_fold;
             pattern_history = new_pat_history;
@@ -551,10 +584,12 @@ impl Cluster {
             let odag_next = if cfg.use_odag {
                 let merged_odags = odags_merged.unwrap_or_default();
                 let t_plan = Instant::now();
+                let t_b = ctl.start();
                 let (plan, c_plan, u_plan) = ExtractionPlan::build_measured(
                     &merged_odags,
                     if parallel { w } else { 1 },
                 );
+                ctl.record(SpanKind::Barrier, step, 0, t_b, 4);
                 par_wall += t_plan.elapsed();
                 st.merge_cpu += u_plan;
                 merge_critical_par += c_plan;
@@ -597,6 +632,7 @@ impl Cluster {
                 Frontier::List(merged_list)
             };
 
+            ctl.record(SpanKind::Merge, step, 0, t_mg, st.frontier_bytes);
             peak_frontier_bytes = peak_frontier_bytes.max(st.frontier_bytes);
             candidates_total += st.candidates;
             steals_total += st.steals;
@@ -610,6 +646,7 @@ impl Cluster {
                 merge_critical_par + st.merge_wall.saturating_sub(par_wall);
             st.sim_wall = st.busy_max + st.merge_critical;
             st.wall = t_step.elapsed();
+            ctl.record(SpanKind::Step, step, 0, t_sp, st.processed);
             steps.push(st);
             step += 1;
         }
@@ -641,6 +678,7 @@ impl Cluster {
             .max(aggregates.pattern_output.len()) as u64;
 
         let sim_wall = steps.iter().map(|s| s.sim_wall).sum();
+        timeline.absorb(0, &mut ctl);
         RunResult {
             steps,
             wall: t_run.elapsed(),
@@ -657,6 +695,7 @@ impl Cluster {
             replayed_steps: 0,
             comm: comm_total,
             phases: phases_total,
+            trace: timeline,
             agg_stats,
             canonical_patterns,
             peak_frontier_bytes,

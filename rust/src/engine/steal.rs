@@ -47,6 +47,11 @@
 //! and counted in [`StepStats::steals`](crate::stats::StepStats::steals)
 //! / [`StepStats::stolen_units`](crate::stats::StepStats::stolen_units),
 //! so the `paper` bench's `steal` experiment can show the flattening.
+//! With `--trace` on, every individual claim and steal additionally
+//! lands as a `Claim`/`Steal` span on the claiming worker's trace lane
+//! (recorded in [`super::worker`] around `ChunkQueues::next`, payload =
+//! units moved — see [`crate::trace`]), so a skewed run's rescue is
+//! visible as a burst of `Steal` spans on the idle workers' lanes.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

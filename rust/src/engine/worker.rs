@@ -45,6 +45,7 @@ use crate::odag::OdagStore;
 use crate::output::OutputSink;
 use crate::pattern::{self, Pattern};
 use crate::stats::{CommStats, Phase, PhaseTimes};
+use crate::trace::{SpanKind, TraceBuf};
 
 use super::steal::ChunkQueues;
 use super::{owner_of, Config, Frontier};
@@ -121,6 +122,9 @@ pub struct WorkerOut {
     pub phases: PhaseTimes,
     /// This worker's total compute time for the step.
     pub busy: std::time::Duration,
+    /// This worker's trace spans for the step (empty and allocation-free
+    /// unless [`Config::trace`] is set — see [`crate::trace`]).
+    pub trace: TraceBuf,
 }
 
 /// The streaming candidate pipeline — one per worker per superstep.
@@ -289,6 +293,11 @@ pub fn run_step(
     let mode = app.mode();
     let w = cfg.workers();
     let cpu0 = crate::stats::thread_cpu_time();
+    // Worker spans live on trace lane `wid + 1` (0 is the control
+    // thread). The recorder is thread-local by construction — it rides
+    // this stack frame, not the shared ledger.
+    let mut trace = TraceBuf::new(cfg.trace);
+    let tid = wid as u32 + 1;
     // New superstep: previous-step aggregates changed, app memos expire.
     state.step_memo.clear();
 
@@ -339,6 +348,7 @@ pub fn run_step(
     };
     loop {
         let t_claim = Instant::now();
+        let t_cl = trace.start();
         let Some(claim) = queues.next(wid) else {
             // The final (empty) scan is ledger traffic too.
             pipe.phases.add(Phase::Steal, t_claim.elapsed());
@@ -348,9 +358,12 @@ pub fn run_step(
             pipe.out.steals += 1;
             pipe.out.stolen_units += claim.units();
             pipe.phases.add(Phase::Steal, t_claim.elapsed());
+            trace.record(SpanKind::Steal, step, tid, t_cl, claim.units());
         } else {
             pipe.phases.add(Phase::Read, t_claim.elapsed());
+            trace.record(SpanKind::Claim, step, tid, t_cl, claim.units());
         }
+        let t_ex = trace.start();
         match frontier {
             Frontier::Init => {
                 // Step 1: the "undefined" embedding expands to all words.
@@ -412,6 +425,7 @@ pub fn run_step(
                 pipe.phases.add(Phase::Read, read_clock.elapsed());
             }
         }
+        trace.record(SpanKind::Extract, step, tid, t_ex, claim.units());
     }
     if let Some(cur) = &odag_cursor {
         pipe.out.root_descents = cur.root_descents();
@@ -424,9 +438,11 @@ pub fn run_step(
 
     // ---- P: flush current-step aggregation (canonize quick patterns) --
     let t = Instant::now();
+    let t_fl = trace.start();
     out.pattern_part = state.pattern_agg.flush();
     phases.add(Phase::PatternAgg, t.elapsed());
     out.int_part = state.int_agg.flush();
+    trace.record(SpanKind::Flush, step, tid, t_fl, out.pattern_part.len() as u64);
 
     // ---- shuffle accounting (paper §4.3), worker-side ----------------
     // Each (key, value) flows to its owner worker; only entries whose
@@ -462,5 +478,6 @@ pub fn run_step(
     out.phases = phases;
     // Thread CPU time, not wall: workers may share cores (see stats).
     out.busy = crate::stats::thread_cpu_time().saturating_sub(cpu0);
+    out.trace = trace;
     out
 }

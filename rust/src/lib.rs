@@ -13,7 +13,8 @@
 //!   three paper applications ([`apps`]) and the TLV / TLP / centralized
 //!   baselines ([`baselines`]). The same superstep also runs across real
 //!   OS processes over TCP ([`comm`]), pinned bit-identical to the
-//!   in-process engine by a differential conformance suite.
+//!   in-process engine by a differential conformance suite, and every
+//!   run can emit a merged span timeline + metrics registry ([`trace`]).
 //! * **L2/L1 (python/, build-time only)** — the structural census
 //!   (motif-3 counts + degree moments) as a JAX model around a Pallas
 //!   masked-matmul-reduce kernel, AOT-lowered to HLO text in
@@ -51,6 +52,7 @@ pub mod output;
 pub mod pattern;
 pub mod runtime;
 pub mod stats;
+pub mod trace;
 pub mod util;
 
 pub use api::{ExplorationMode, GraphMiningApp};

@@ -56,6 +56,10 @@ run options:
   --skew <pct>           start pct% of frontier chunks on worker 0
   --keep-labels          keep vertex labels for motifs/cliques
   --stats                print per-step statistics
+  --trace <path>         write the run's merged span timeline as Chrome
+                         trace-event JSON (tle only; view in chrome://tracing)
+  --metrics <path>       write every run counter as a named-metric JSON
+                         registry (tle only)
 ";
 
 fn main() {
@@ -69,7 +73,7 @@ fn main() {
 fn dispatch(raw: Vec<String>) -> Result<()> {
     let args = Args::parse(
         raw,
-        &["no-odag", "one-level", "no-steal", "stats", "help", "keep-labels"],
+        &["no-odag", "one-level", "no-steal", "stats", "help", "keep-labels", "trace-spans"],
     )?;
     if args.flag("help") || args.positional.is_empty() {
         print!("{USAGE}");
@@ -123,7 +127,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .with_odag(!args.flag("no-odag"))
         .with_two_level(!args.flag("one-level"))
         .with_steal(!args.flag("no-steal"))
-        .with_block(args.get_u64("block", 64)?);
+        .with_block(args.get_u64("block", 64)?)
+        .with_trace(args.get("trace").is_some());
     if skew > 0 {
         cfg = cfg.with_partition(Partition::Skewed(skew as u8));
     }
@@ -154,6 +159,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 Cluster::new(cfg).run_with_sink(&g, app.as_ref(), sink)
             };
             print_run(&r, args.flag("stats"));
+            write_observability(args, &r)?;
         }
         "tlv" => {
             if shards > 0 {
@@ -207,7 +213,8 @@ fn cmd_shard(args: &Args) -> Result<()> {
         .with_odag(!args.flag("no-odag"))
         .with_two_level(!args.flag("one-level"))
         .with_steal(false)
-        .with_block(args.get_u64("block", 64)?);
+        .with_block(args.get_u64("block", 64)?)
+        .with_trace(args.flag("trace-spans"));
     if skew > 0 {
         cfg = cfg.with_partition(Partition::Skewed(skew as u8));
     }
@@ -220,6 +227,25 @@ fn cmd_shard(args: &Args) -> Result<()> {
         },
     };
     comm::run_shard_with(connect, shard_id, &cfg, &g, app.as_ref(), &opts)
+}
+
+/// Write the `--trace` / `--metrics` artifacts for a finished tle run.
+fn write_observability(args: &Args, r: &RunResult) -> Result<()> {
+    if let Some(path) = args.get("trace") {
+        let json = arabesque::trace::export::chrome_trace_json(&r.trace);
+        std::fs::write(path, json).with_context(|| format!("write trace file {path}"))?;
+        println!(
+            "trace: {} spans from {} processes -> {path}",
+            r.trace.span_count(),
+            r.trace.pids().len(),
+        );
+    }
+    if let Some(path) = args.get("metrics") {
+        let json = arabesque::trace::export::metrics_json(r);
+        std::fs::write(path, json).with_context(|| format!("write metrics file {path}"))?;
+        println!("metrics: {} steps -> {path}", r.steps.len());
+    }
+    Ok(())
 }
 
 fn print_run(r: &RunResult, per_step: bool) {

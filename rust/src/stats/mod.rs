@@ -247,17 +247,10 @@ pub struct StepStats {
     pub sim_wall: Duration,
 }
 
-/// CPU time consumed by the calling thread (CLOCK_THREAD_CPUTIME_ID).
-///
-/// Worker `busy` times must be CPU time, not wall time: on a machine
-/// with fewer cores than workers the OS time-slices the threads, and a
-/// wall clock would charge every worker for its neighbours' work.
-///
-/// The syscall surface is declared directly (no `libc` crate in the
-/// offline vendor set); non-Linux platforms fall back to a monotonic
-/// process clock, which degrades `busy` to wall time there.
+/// Read one POSIX clock as nanoseconds. The syscall surface is declared
+/// directly (no `libc` crate in the offline vendor set).
 #[cfg(target_os = "linux")]
-pub fn thread_cpu_time() -> Duration {
+fn clock_nanos(clock_id: i32) -> u64 {
     use std::ffi::{c_int, c_long};
     // glibc timespec is { time_t tv_sec; long tv_nsec } with time_t ==
     // long on both 32- and 64-bit default ABIs; c_long tracks that.
@@ -266,17 +259,31 @@ pub fn thread_cpu_time() -> Duration {
         tv_sec: c_long,
         tv_nsec: c_long,
     }
-    const CLOCK_THREAD_CPUTIME_ID: c_int = 3;
     extern "C" {
         fn clock_gettime(clock_id: c_int, tp: *mut Timespec) -> c_int;
     }
     let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
-    // SAFETY: ts is a valid out-pointer; the clock id is a constant.
-    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    // SAFETY: ts is a valid out-pointer; the clock id is a caller
+    // constant from the two wrappers below.
+    let rc = unsafe { clock_gettime(clock_id as c_int, &mut ts) };
     if rc != 0 {
-        return Duration::ZERO;
+        return 0;
     }
-    Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+/// CPU time consumed by the calling thread (CLOCK_THREAD_CPUTIME_ID).
+///
+/// Worker `busy` times must be CPU time, not wall time: on a machine
+/// with fewer cores than workers the OS time-slices the threads, and a
+/// wall clock would charge every worker for its neighbours' work.
+///
+/// Non-Linux platforms fall back to a monotonic process clock, which
+/// degrades `busy` to wall time there.
+#[cfg(target_os = "linux")]
+pub fn thread_cpu_time() -> Duration {
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    Duration::from_nanos(clock_nanos(CLOCK_THREAD_CPUTIME_ID))
 }
 
 /// Non-Linux fallback: monotonic time since first call.
@@ -285,6 +292,26 @@ pub fn thread_cpu_time() -> Duration {
     use std::sync::OnceLock;
     static EPOCH: OnceLock<Instant> = OnceLock::new();
     EPOCH.get_or_init(Instant::now).elapsed()
+}
+
+/// The system monotonic clock (CLOCK_MONOTONIC) in nanoseconds — the
+/// timestamp source for `trace` spans. Unlike [`thread_cpu_time`] this
+/// is *wall* time on a clock every thread of a process shares, so spans
+/// stamped by different workers are directly comparable; across
+/// processes the coordinator aligns each shard's clock against its own
+/// at handshake time (see `comm::coordinator`).
+#[cfg(target_os = "linux")]
+pub fn monotonic_nanos() -> u64 {
+    const CLOCK_MONOTONIC: i32 = 1;
+    clock_nanos(CLOCK_MONOTONIC)
+}
+
+/// Non-Linux fallback: monotonic time since first call.
+#[cfg(not(target_os = "linux"))]
+pub fn monotonic_nanos() -> u64 {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
 }
 
 /// Peak resident set size of this process in bytes (Linux VmHWM).
@@ -388,6 +415,17 @@ mod tests {
         std::hint::black_box(x);
         let t1 = thread_cpu_time();
         assert!(t1 > t0);
+    }
+
+    #[test]
+    fn monotonic_nanos_is_nonzero_and_nondecreasing() {
+        let a = monotonic_nanos();
+        let b = monotonic_nanos();
+        assert!(a > 0, "a dead monotonic clock would flatten every trace");
+        assert!(b >= a);
+        std::thread::sleep(Duration::from_millis(2));
+        let c = monotonic_nanos();
+        assert!(c >= a + 1_000_000, "2ms of sleep must advance the clock");
     }
 
     #[test]

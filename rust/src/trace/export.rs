@@ -1,0 +1,464 @@
+//! Render a merged [`Timeline`](super::Timeline) as Chrome trace-event
+//! JSON (`--trace`, loadable in Perfetto / `chrome://tracing`) and a
+//! [`RunResult`](crate::engine::RunResult) as a named-counter metrics
+//! registry (`--metrics`).
+//!
+//! Both emitters are deterministic: events are grouped and ordered by
+//! `(pid, tid, t_start)` and counters by sorted name, so two runs with
+//! the same span structure serialize identically modulo timestamps
+//! (pinned by `rust/tests/trace.rs`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::engine::RunResult;
+use crate::stats::ALL_PHASES;
+
+use super::Timeline;
+
+/// One Chrome trace event, pre-rendering. Tests validate this
+/// intermediate form (balanced `B`/`E`, nesting, pid/tid mapping)
+/// without needing a JSON parser; [`chrome_trace_json`] renders it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    /// `'B'` (begin), `'E'` (end), or `'M'` (metadata).
+    pub ph: char,
+    /// Span-kind name, or `process_name`/`thread_name` for `'M'`.
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// Nanoseconds on the merged (coordinator) clock; rendered as
+    /// fractional microseconds. 0 for metadata events.
+    pub ts_nanos: u64,
+    pub pid: u32,
+    pub tid: u32,
+    /// `args.step` on `'B'` events.
+    pub step: u32,
+    /// `args.payload` on `'B'` events.
+    pub payload: u64,
+    /// `args.name` on `'M'` events (the process/thread display name).
+    pub meta: Option<String>,
+}
+
+/// Lower a timeline to Chrome trace events.
+///
+/// Within each `(pid, tid)` lane, spans sort by `(t_start, t_end desc)`
+/// and emit as a properly nested `B`/`E` stack: a span still open when
+/// the next one starts becomes its parent, and a child that outlives
+/// its parent (possible across clock-alignment shifts) is clamped to
+/// the parent's end so the duration stack never crosses. Metadata
+/// events naming every process ("coordinator", "shard k") and thread
+/// ("control", "worker w") come first.
+pub fn chrome_trace_events(tl: &Timeline) -> Vec<Event> {
+    // Group spans into (pid, tid) lanes; BTreeMap keeps lane order
+    // deterministic.
+    let mut lanes: BTreeMap<(u32, u32), Vec<super::Span>> = BTreeMap::new();
+    for (pid, s) in &tl.spans {
+        lanes.entry((*pid, s.worker)).or_default().push(*s);
+    }
+
+    let mut events = Vec::new();
+    // Process/thread naming metadata.
+    let mut pids: Vec<u32> = lanes.keys().map(|(pid, _)| *pid).collect();
+    pids.dedup();
+    for pid in pids {
+        let label = if pid == 0 {
+            "coordinator".to_string()
+        } else {
+            format!("shard {}", pid - 1)
+        };
+        events.push(Event {
+            ph: 'M',
+            name: "process_name",
+            cat: "__metadata",
+            ts_nanos: 0,
+            pid,
+            tid: 0,
+            step: 0,
+            payload: 0,
+            meta: Some(label),
+        });
+    }
+    for &(pid, tid) in lanes.keys() {
+        let label = if tid == 0 {
+            "control".to_string()
+        } else {
+            format!("worker {}", tid - 1)
+        };
+        events.push(Event {
+            ph: 'M',
+            name: "thread_name",
+            cat: "__metadata",
+            ts_nanos: 0,
+            pid,
+            tid,
+            step: 0,
+            payload: 0,
+            meta: Some(label),
+        });
+    }
+
+    for ((pid, tid), mut spans) in lanes {
+        spans.sort_by(|a, b| {
+            a.t_start.cmp(&b.t_start).then(b.t_end.cmp(&a.t_end))
+        });
+        // Stack of open spans: (name, cat, clamped t_end).
+        let mut open: Vec<(&'static str, &'static str, u64)> = Vec::new();
+        for s in spans {
+            while let Some(&(name, cat, end)) = open.last() {
+                if end <= s.t_start {
+                    events.push(Event {
+                        ph: 'E',
+                        name,
+                        cat,
+                        ts_nanos: end,
+                        pid,
+                        tid,
+                        step: 0,
+                        payload: 0,
+                        meta: None,
+                    });
+                    open.pop();
+                } else {
+                    break;
+                }
+            }
+            let parent_end = open.last().map_or(u64::MAX, |&(_, _, e)| e);
+            let end = s.t_end.min(parent_end).max(s.t_start);
+            events.push(Event {
+                ph: 'B',
+                name: s.kind.name(),
+                cat: s.kind.category(),
+                ts_nanos: s.t_start,
+                pid,
+                tid,
+                step: s.step,
+                payload: s.payload,
+                meta: None,
+            });
+            open.push((s.kind.name(), s.kind.category(), end));
+        }
+        while let Some((name, cat, end)) = open.pop() {
+            events.push(Event {
+                ph: 'E',
+                name,
+                cat,
+                ts_nanos: end,
+                pid,
+                tid,
+                step: 0,
+                payload: 0,
+                meta: None,
+            });
+        }
+    }
+    events
+}
+
+/// Nanoseconds → the Chrome `ts` field (fractional microseconds).
+fn ts_micros(nanos: u64) -> String {
+    format!("{}.{:03}", nanos / 1000, nanos % 1000)
+}
+
+/// Render a timeline as a Chrome trace-event JSON document:
+/// `{"traceEvents": [...], "otherData": {...}}`.
+pub fn chrome_trace_json(tl: &Timeline) -> String {
+    let events = chrome_trace_events(tl);
+    let mut out = String::with_capacity(events.len() * 96 + 128);
+    out.push_str("{\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n{");
+        let _ = write!(out, "\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{}\"", e.name, e.cat, e.ph);
+        match e.ph {
+            'M' => {
+                let _ = write!(out, ",\"pid\":{},\"tid\":{}", e.pid, e.tid);
+                if let Some(meta) = &e.meta {
+                    let _ = write!(out, ",\"args\":{{\"name\":\"{meta}\"}}");
+                }
+            }
+            'B' => {
+                let _ = write!(
+                    out,
+                    ",\"ts\":{},\"pid\":{},\"tid\":{},\"args\":{{\"step\":{},\"payload\":{}}}",
+                    ts_micros(e.ts_nanos),
+                    e.pid,
+                    e.tid,
+                    e.step,
+                    e.payload
+                );
+            }
+            _ => {
+                let _ = write!(
+                    out,
+                    ",\"ts\":{},\"pid\":{},\"tid\":{}",
+                    ts_micros(e.ts_nanos),
+                    e.pid,
+                    e.tid
+                );
+            }
+        }
+        out.push('}');
+    }
+    let _ = write!(
+        out,
+        "\n],\"otherData\":{{\"droppedSpans\":{},\"wireChecks\":{}}}}}",
+        tl.dropped,
+        tl.wire_checks.len()
+    );
+    out.push('\n');
+    out
+}
+
+/// Render a run as a named-counter registry:
+/// `{"counters": {...}, "meta": {...}}` with counter names sorted.
+///
+/// Every `StepStats`/`CommStats` scalar gets a stable name — per step
+/// (`step3/comm/wire_bytes`, `step3/phase/W_nanos`) and as run totals
+/// (`total/processed`) — so trajectory tooling can diff runs without
+/// parsing human-readable report text.
+pub fn metrics_json(r: &RunResult) -> String {
+    let mut c: BTreeMap<String, u64> = BTreeMap::new();
+    for s in &r.steps {
+        let p = format!("step{}", s.step);
+        c.insert(format!("{p}/candidates"), s.candidates);
+        c.insert(format!("{p}/processed"), s.processed);
+        c.insert(format!("{p}/frontier"), s.frontier);
+        c.insert(format!("{p}/steals"), s.steals);
+        c.insert(format!("{p}/stolen_units"), s.stolen_units);
+        c.insert(format!("{p}/pattern_rescans"), s.pattern_rescans);
+        c.insert(format!("{p}/root_descents"), s.root_descents);
+        c.insert(format!("{p}/frontier_bytes"), s.frontier_bytes);
+        c.insert(format!("{p}/list_bytes"), s.list_bytes);
+        c.insert(format!("{p}/comm/messages"), s.comm.messages);
+        c.insert(format!("{p}/comm/bytes"), s.comm.bytes);
+        c.insert(format!("{p}/comm/wire_bytes"), s.comm.wire_bytes);
+        c.insert(format!("{p}/comm/checkpoint_bytes"), s.comm.checkpoint_bytes);
+        let nanos = s.phases.nanos();
+        for (i, ph) in ALL_PHASES.iter().enumerate() {
+            c.insert(format!("{p}/phase/{}_nanos", ph.letter()), nanos[i]);
+        }
+        c.insert(format!("{p}/wall_nanos"), s.wall.as_nanos() as u64);
+        c.insert(format!("{p}/busy_max_nanos"), s.busy_max.as_nanos() as u64);
+        c.insert(format!("{p}/busy_sum_nanos"), s.busy_sum.as_nanos() as u64);
+        c.insert(format!("{p}/merge_wall_nanos"), s.merge_wall.as_nanos() as u64);
+        c.insert(
+            format!("{p}/merge_critical_nanos"),
+            s.merge_critical.as_nanos() as u64,
+        );
+        c.insert(format!("{p}/merge_cpu_nanos"), s.merge_cpu.as_nanos() as u64);
+        c.insert(format!("{p}/sim_wall_nanos"), s.sim_wall.as_nanos() as u64);
+    }
+
+    c.insert("total/steps".into(), r.steps.len() as u64);
+    c.insert("total/outputs".into(), r.num_outputs);
+    c.insert("total/processed".into(), r.processed);
+    c.insert("total/candidates".into(), r.candidates);
+    c.insert("total/frontier".into(), r.total_frontier());
+    c.insert("total/steals".into(), r.steals);
+    c.insert("total/stolen_units".into(), r.stolen_units);
+    c.insert("total/pattern_rescans".into(), r.pattern_rescans);
+    c.insert("total/root_descents".into(), r.root_descents);
+    c.insert("total/shard_restarts".into(), r.shard_restarts);
+    c.insert("total/replayed_steps".into(), r.replayed_steps);
+    c.insert("total/canonical_patterns".into(), r.canonical_patterns);
+    c.insert("total/peak_frontier_bytes".into(), r.peak_frontier_bytes);
+    c.insert("total/comm/messages".into(), r.comm.messages);
+    c.insert("total/comm/bytes".into(), r.comm.bytes);
+    c.insert("total/comm/wire_bytes".into(), r.comm.wire_bytes);
+    c.insert("total/comm/checkpoint_bytes".into(), r.comm.checkpoint_bytes);
+    let nanos = r.phases.nanos();
+    for (i, ph) in ALL_PHASES.iter().enumerate() {
+        c.insert(format!("total/phase/{}_nanos", ph.letter()), nanos[i]);
+    }
+    c.insert("total/wall_nanos".into(), r.wall.as_nanos() as u64);
+    c.insert("total/sim_wall_nanos".into(), r.sim_wall.as_nanos() as u64);
+    c.insert("total/agg/mapped".into(), r.agg_stats.mapped);
+    c.insert("total/agg/canonize_calls".into(), r.agg_stats.canonize_calls);
+    c.insert("total/agg/quick_patterns".into(), r.agg_stats.quick_patterns);
+    c.insert("trace/spans".into(), r.trace.span_count() as u64);
+    c.insert("trace/dropped".into(), r.trace.dropped);
+    c.insert("trace/wire_checks".into(), r.trace.wire_checks.len() as u64);
+
+    let mut out = String::with_capacity(c.len() * 48 + 128);
+    out.push_str("{\"counters\":{");
+    for (i, (k, v)) in c.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\n\"{k}\":{v}");
+    }
+    let _ = write!(
+        out,
+        "\n}},\"meta\":{{\"schema\":\"arabesque-metrics-v1\",\"steps\":{}}}}}",
+        r.steps.len()
+    );
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ShardTrace, Span, SpanKind, Timeline};
+    use super::*;
+    use crate::apps::cliques::Cliques;
+    use crate::engine::{Cluster, Config};
+    use crate::graph::gen;
+
+    fn span(kind: SpanKind, step: u32, worker: u32, t0: u64, t1: u64) -> Span {
+        Span { kind, step, worker, t_start: t0, t_end: t1, payload: 1 }
+    }
+
+    fn sample_timeline() -> Timeline {
+        let mut tl = Timeline::new(true);
+        // Coordinator lane: a Step containing a Merge.
+        tl.fold_shard(
+            0,
+            0,
+            ShardTrace {
+                spans: vec![
+                    span(SpanKind::Step, 1, 0, 100, 900),
+                    span(SpanKind::Merge, 1, 0, 600, 800),
+                ],
+                dropped: 0,
+            },
+        );
+        // Shard 0, worker lane: two claims inside an extract window,
+        // the second overlapping the window end (must clamp).
+        tl.fold_shard(
+            1,
+            0,
+            ShardTrace {
+                spans: vec![
+                    span(SpanKind::Extract, 1, 1, 150, 500),
+                    span(SpanKind::Claim, 1, 1, 160, 200),
+                    span(SpanKind::Claim, 1, 1, 300, 550),
+                ],
+                dropped: 2,
+            },
+        );
+        tl
+    }
+
+    /// Per-(pid, tid) lane, every B must close with a matching E, LIFO.
+    fn assert_balanced(events: &[Event]) {
+        let mut stacks: BTreeMap<(u32, u32), Vec<(&str, u64)>> = BTreeMap::new();
+        for e in events {
+            let stack = stacks.entry((e.pid, e.tid)).or_default();
+            match e.ph {
+                'B' => stack.push((e.name, e.ts_nanos)),
+                'E' => {
+                    let (name, t0) = stack.pop().expect("E without open B");
+                    assert_eq!(name, e.name, "E must close the innermost B");
+                    assert!(e.ts_nanos >= t0, "span ends before it starts");
+                }
+                'M' => {}
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        for ((pid, tid), stack) in stacks {
+            assert!(stack.is_empty(), "unclosed spans on ({pid}, {tid}): {stack:?}");
+        }
+    }
+
+    #[test]
+    fn events_are_balanced_nested_and_labeled() {
+        let events = chrome_trace_events(&sample_timeline());
+        assert_balanced(&events);
+        // Process/thread metadata precedes spans and names every lane.
+        let metas: Vec<&Event> = events.iter().filter(|e| e.ph == 'M').collect();
+        assert!(metas.iter().any(|e| {
+            e.name == "process_name" && e.pid == 0 && e.meta.as_deref() == Some("coordinator")
+        }));
+        assert!(metas.iter().any(|e| {
+            e.name == "process_name" && e.pid == 1 && e.meta.as_deref() == Some("shard 0")
+        }));
+        assert!(metas.iter().any(|e| {
+            e.name == "thread_name" && e.tid == 1 && e.meta.as_deref() == Some("worker 0")
+        }));
+        // The overlapping claim was clamped into its Extract parent: on
+        // lane (1,1) the E for the second Claim lands at the Extract
+        // window end, not 550.
+        let lane: Vec<&Event> =
+            events.iter().filter(|e| e.pid == 1 && e.tid == 1 && e.ph != 'M').collect();
+        let names: Vec<(char, &str)> = lane.iter().map(|e| (e.ph, e.name)).collect();
+        assert_eq!(
+            names,
+            vec![
+                ('B', "Extract"),
+                ('B', "Claim"),
+                ('E', "Claim"),
+                ('B', "Claim"),
+                ('E', "Claim"),
+                ('E', "Extract"),
+            ]
+        );
+        assert_eq!(lane[4].ts_nanos, 500, "child clamped to parent end");
+        // B events carry step/payload args; Merge nests inside Step.
+        let coord: Vec<&Event> =
+            events.iter().filter(|e| e.pid == 0 && e.ph != 'M').collect();
+        let names: Vec<(char, &str)> = coord.iter().map(|e| (e.ph, e.name)).collect();
+        assert_eq!(
+            names,
+            vec![('B', "Step"), ('B', "Merge"), ('E', "Merge"), ('E', "Step")]
+        );
+        assert_eq!(coord[0].step, 1);
+    }
+
+    #[test]
+    fn json_renders_fractional_micros_and_other_data() {
+        let tl = sample_timeline();
+        let json = chrome_trace_json(&tl);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        // 100ns = 0.100µs.
+        assert!(json.contains("\"ts\":0.100"), "{json}");
+        assert!(json.contains("\"otherData\":{\"droppedSpans\":2,\"wireChecks\":0}"));
+        // Every event object is complete (crude but parser-free check).
+        assert_eq!(json.matches("\"ph\":").count(), json.matches("{\"name\":").count());
+    }
+
+    #[test]
+    fn instant_spans_still_emit_a_pair() {
+        let mut tl = Timeline::new(true);
+        tl.fold_shard(
+            0,
+            0,
+            ShardTrace { spans: vec![span(SpanKind::Replay, 2, 0, 50, 50)], dropped: 0 },
+        );
+        let events = chrome_trace_events(&tl);
+        assert_balanced(&events);
+        assert_eq!(events.iter().filter(|e| e.ph == 'B').count(), 1);
+        assert_eq!(events.iter().filter(|e| e.ph == 'E').count(), 1);
+    }
+
+    #[test]
+    fn metrics_registry_names_every_counter() {
+        let g = gen::small("k5").unwrap();
+        let r = Cluster::new(Config::new(1, 2)).run(&g, &Cliques::new(3));
+        let json = metrics_json(&r);
+        assert!(json.starts_with("{\"counters\":{"));
+        for key in [
+            "\"step1/candidates\":",
+            "\"step1/comm/wire_bytes\":",
+            "\"step1/phase/W_nanos\":",
+            "\"step1/sim_wall_nanos\":",
+            "\"total/processed\":",
+            "\"total/outputs\":25",
+            "\"total/shard_restarts\":0",
+            "\"total/agg/mapped\":",
+            "\"trace/spans\":",
+            "\"meta\":{\"schema\":\"arabesque-metrics-v1\",\"steps\":3}",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        // Sorted counter names: deterministic output for diffing.
+        let keys: Vec<&str> = json
+            .match_indices("\n\"")
+            .map(|(i, _)| &json[i + 2..i + 2 + json[i + 2..].find('"').unwrap_or(0)])
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+    }
+}

@@ -1,0 +1,566 @@
+//! Distributed tracing & metrics: span timelines across workers,
+//! shards, and recoveries (see ARCHITECTURE.md "Observability").
+//!
+//! The scalar counters in `stats` say *how much* happened; this module
+//! says *when* and *where*. Three layers:
+//!
+//! 1. **Recording** — every worker thread (and each control thread)
+//!    owns a [`TraceBuf`], a bounded ring of [`Span`]s stamped with
+//!    [`crate::stats::monotonic_nanos`]. Buffers are owned, never
+//!    shared, so recording needs no locks and no atomics; when tracing
+//!    is disabled (the default) every recording call is a branch — no
+//!    clock read, no allocation — so the hot paths cost nothing (the
+//!    `hotpath` bench pins the pair).
+//! 2. **Collection** — shard processes drain their buffers into a
+//!    [`ShardTrace`] that rides each `ShardOut` frame; the coordinator
+//!    maps shard timestamps onto its own clock (offset measured at the
+//!    `Hello` handshake) and folds everything into one [`Timeline`],
+//!    spans for detected failures, respawns, and replayed supersteps
+//!    included. The `merge-coverage` lint binds `ShardTrace`'s fields
+//!    to [`Timeline::fold_shard`] so nothing a shard ships can be
+//!    silently dropped at the barrier.
+//! 3. **Export** — [`export`] renders the merged timeline as Chrome
+//!    trace-event JSON (`--trace`, pid = shard, tid = worker) and the
+//!    run's counters as a named-metric registry (`--metrics`).
+
+pub mod export;
+
+use crate::util::codec::{CodecError, Reader, Writer};
+
+/// What a span measures. Dense `u8` tags (`tag`/[`Self::from_tag`]) are
+/// the wire representation inside [`ShardTrace`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// One superstep, recorded by a control thread (tid 0). Every other
+    /// same-process span with the same `step` nests inside one of
+    /// these; the exporter test enforces it.
+    Step,
+    /// One chunk's extraction + filter/process drain on a worker.
+    Extract,
+    /// Acquiring a chunk claim from the worker's own queue.
+    Claim,
+    /// Acquiring a *stolen* chunk claim from a victim's queue.
+    Steal,
+    /// End-of-step aggregation flush on a worker.
+    Flush,
+    /// The whole barrier merge on the control thread.
+    Merge,
+    /// One component of the barrier (payload: 0 = ODAG union,
+    /// 1 = pattern reduce, 2 = int reduce, 3 = broadcast fold,
+    /// 4 = extraction-plan build).
+    Barrier,
+    /// One frame written to a socket (payload: bytes incl. header).
+    FrameSend,
+    /// One frame read off a socket (payload: payload bytes).
+    FrameRecv,
+    /// Serializing a shard's barrier checkpoint (payload: bytes).
+    Checkpoint,
+    /// Applying a `Restore` frame (shard) or sending one (coordinator).
+    Restore,
+    /// Instant: the coordinator declared a shard dead (payload: shard).
+    FailureDetected,
+    /// Backoff sleep before a respawn.
+    Backoff,
+    /// Respawning a shard process + its re-handshake.
+    Respawn,
+    /// Instant: a superstep is being replayed after a recovery.
+    Replay,
+}
+
+/// Every kind, in tag order — `ALL_KINDS[k].tag() == k`.
+pub const ALL_KINDS: [SpanKind; 15] = [
+    SpanKind::Step,
+    SpanKind::Extract,
+    SpanKind::Claim,
+    SpanKind::Steal,
+    SpanKind::Flush,
+    SpanKind::Merge,
+    SpanKind::Barrier,
+    SpanKind::FrameSend,
+    SpanKind::FrameRecv,
+    SpanKind::Checkpoint,
+    SpanKind::Restore,
+    SpanKind::FailureDetected,
+    SpanKind::Backoff,
+    SpanKind::Respawn,
+    SpanKind::Replay,
+];
+
+impl SpanKind {
+    pub fn tag(&self) -> u8 {
+        match self {
+            SpanKind::Step => 0,
+            SpanKind::Extract => 1,
+            SpanKind::Claim => 2,
+            SpanKind::Steal => 3,
+            SpanKind::Flush => 4,
+            SpanKind::Merge => 5,
+            SpanKind::Barrier => 6,
+            SpanKind::FrameSend => 7,
+            SpanKind::FrameRecv => 8,
+            SpanKind::Checkpoint => 9,
+            SpanKind::Restore => 10,
+            SpanKind::FailureDetected => 11,
+            SpanKind::Backoff => 12,
+            SpanKind::Respawn => 13,
+            SpanKind::Replay => 14,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<SpanKind> {
+        ALL_KINDS.get(tag as usize).copied()
+    }
+
+    /// Stable display name (the Chrome trace event `name`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Step => "Step",
+            SpanKind::Extract => "Extract",
+            SpanKind::Claim => "Claim",
+            SpanKind::Steal => "Steal",
+            SpanKind::Flush => "Flush",
+            SpanKind::Merge => "Merge",
+            SpanKind::Barrier => "Barrier",
+            SpanKind::FrameSend => "FrameSend",
+            SpanKind::FrameRecv => "FrameRecv",
+            SpanKind::Checkpoint => "Checkpoint",
+            SpanKind::Restore => "Restore",
+            SpanKind::FailureDetected => "FailureDetected",
+            SpanKind::Backoff => "Backoff",
+            SpanKind::Respawn => "Respawn",
+            SpanKind::Replay => "Replay",
+        }
+    }
+
+    /// Coarse grouping (the Chrome trace event `cat`).
+    pub fn category(&self) -> &'static str {
+        match self {
+            SpanKind::Step | SpanKind::Extract | SpanKind::Claim | SpanKind::Steal
+            | SpanKind::Flush | SpanKind::Merge | SpanKind::Barrier => "engine",
+            SpanKind::FrameSend | SpanKind::FrameRecv | SpanKind::Checkpoint => "comm",
+            SpanKind::Restore | SpanKind::FailureDetected | SpanKind::Backoff
+            | SpanKind::Respawn | SpanKind::Replay => "recovery",
+        }
+    }
+}
+
+/// One timed interval. Instant events (failure detection, replay marks)
+/// have `t_start == t_end`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Superstep the span belongs to; 0 for out-of-step control work
+    /// (restores between steps, the final Finish round).
+    pub step: u32,
+    /// Thread lane: 0 = the process's control thread, `w + 1` = global
+    /// worker id `w`. This is the exported Chrome `tid`.
+    pub worker: u32,
+    /// Nanoseconds on the recording process's monotonic clock; shard
+    /// spans are shifted onto the coordinator's clock at fold time.
+    pub t_start: u64,
+    pub t_end: u64,
+    /// Kind-specific scalar (units claimed, bytes moved, component
+    /// index — see each [`SpanKind`]'s doc).
+    pub payload: u64,
+}
+
+/// Serialized size of one span: tag + step + worker + two stamps +
+/// payload.
+const SPAN_BYTES: u64 = 1 + 4 + 4 + 8 + 8 + 8;
+
+fn put_span(w: &mut Writer, s: &Span) {
+    w.put_u8(s.kind.tag());
+    w.put_u32(s.step);
+    w.put_u32(s.worker);
+    w.put_u64(s.t_start);
+    w.put_u64(s.t_end);
+    w.put_u64(s.payload);
+}
+
+fn get_span(r: &mut Reader) -> Result<Span, CodecError> {
+    let tag = r.get_tag(ALL_KINDS.len() as u8, "span kind")?;
+    // from_tag cannot fail: get_tag already bounded it.
+    let kind = SpanKind::from_tag(tag).unwrap_or(SpanKind::Step);
+    Ok(Span {
+        kind,
+        step: r.get_u32()?,
+        worker: r.get_u32()?,
+        t_start: r.get_u64()?,
+        t_end: r.get_u64()?,
+        payload: r.get_u64()?,
+    })
+}
+
+/// A bounded per-thread span recorder. Owned by exactly one thread, so
+/// recording is plain memory writes — no locks, no atomics (the
+/// `atomics-scope` lint holds this module to that).
+///
+/// **Disabled-path contract:** when `enabled` is false, every method is
+/// a branch and an immediate return — no clock read, no allocation, no
+/// buffer growth. The `hotpath` bench pair pins the cost.
+///
+/// When full, the ring overwrites the *oldest* span and counts the
+/// casualty in `dropped` — a long step degrades to a recent-history
+/// window instead of unbounded memory.
+#[derive(Debug, Clone, Default)]
+pub struct TraceBuf {
+    enabled: bool,
+    cap: usize,
+    /// Next overwrite slot once `spans.len() == cap`.
+    head: usize,
+    spans: Vec<Span>,
+    dropped: u64,
+}
+
+impl TraceBuf {
+    /// Default ring capacity per thread. 64Ki spans × 33 wire bytes ≈
+    /// 2 MiB per thread at worst — bounded however long the run is.
+    pub const DEFAULT_CAP: usize = 1 << 16;
+
+    pub fn new(enabled: bool) -> TraceBuf {
+        TraceBuf::with_cap(enabled, TraceBuf::DEFAULT_CAP)
+    }
+
+    /// Capacity-bounded recorder. Nothing is allocated up front — the
+    /// span vector grows on demand up to `cap`, and not at all while
+    /// disabled.
+    pub fn with_cap(enabled: bool, cap: usize) -> TraceBuf {
+        TraceBuf { enabled, cap: cap.max(1), head: 0, spans: Vec::new(), dropped: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Number of spans currently buffered.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Spans overwritten by the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Open a span: the `t_start` stamp for a later [`Self::record`].
+    /// Disabled recorders return 0 without touching the clock.
+    #[inline]
+    pub fn start(&self) -> u64 {
+        if self.enabled {
+            crate::stats::monotonic_nanos()
+        } else {
+            0
+        }
+    }
+
+    /// Close and record a span opened with [`Self::start`].
+    #[inline]
+    pub fn record(&mut self, kind: SpanKind, step: usize, worker: u32, t_start: u64, payload: u64) {
+        if !self.enabled {
+            return;
+        }
+        let t_end = crate::stats::monotonic_nanos();
+        self.push(Span { kind, step: step as u32, worker, t_start, t_end, payload });
+    }
+
+    /// Record an instant event (`t_start == t_end`).
+    #[inline]
+    pub fn mark(&mut self, kind: SpanKind, step: usize, worker: u32, payload: u64) {
+        if !self.enabled {
+            return;
+        }
+        let t = crate::stats::monotonic_nanos();
+        self.push(Span { kind, step: step as u32, worker, t_start: t, t_end: t, payload });
+    }
+
+    /// Append a complete span, ring-overwriting the oldest when full.
+    pub fn push(&mut self, span: Span) {
+        if !self.enabled {
+            return;
+        }
+        if self.spans.len() < self.cap {
+            self.spans.push(span);
+        } else {
+            self.dropped += 1;
+            self.spans[self.head] = span;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Take everything recorded so far, leaving the buffer empty (and
+    /// still enabled) for the next step.
+    pub fn drain(&mut self) -> (Vec<Span>, u64) {
+        self.head = 0;
+        (std::mem::take(&mut self.spans), std::mem::take(&mut self.dropped))
+    }
+}
+
+/// One shard's trace contribution to a barrier: the spans its threads
+/// recorded since the previous `ShardOut`, still on the shard's own
+/// clock. Rides inside the `ShardOut` frame (`comm::wire`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShardTrace {
+    pub spans: Vec<Span>,
+    /// Ring-overwritten spans (lost history, counted, never silent).
+    pub dropped: u64,
+}
+
+impl ShardTrace {
+    /// Drain a thread's recorder into this shipment.
+    pub fn absorb(&mut self, buf: &mut TraceBuf) {
+        let (spans, dropped) = buf.drain();
+        self.spans.extend(spans);
+        self.dropped += dropped;
+    }
+
+    pub fn serialize(&self, w: &mut Writer) {
+        w.put_u32(self.spans.len() as u32);
+        for s in &self.spans {
+            put_span(w, s);
+        }
+        w.put_u64(self.dropped);
+    }
+
+    pub fn deserialize(r: &mut Reader) -> Result<ShardTrace, CodecError> {
+        // Every span costs SPAN_BYTES on the wire; a count the
+        // remaining bytes cannot hold is corrupt.
+        let n = r.get_count(r.remaining() as u64 / SPAN_BYTES)?;
+        let mut spans = Vec::with_capacity(n);
+        for _ in 0..n {
+            spans.push(get_span(r)?);
+        }
+        Ok(ShardTrace { spans, dropped: r.get_u64()? })
+    }
+}
+
+/// A per-step shard-vs-coordinator wire-byte agreement record: both
+/// sides of every socket count what they moved (`frame::WireCounter`),
+/// and at each barrier the totals must match. A mismatch means a frame
+/// was counted on one side only — the accounting bug this row exists to
+/// surface (`rust/tests/trace.rs` asserts equality).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireCheck {
+    pub step: u32,
+    pub shard: u32,
+    /// Cumulative socket bytes the shard's incarnation counted, as
+    /// reported in its `ShardOut`.
+    pub shard_bytes: u64,
+    /// Cumulative bytes the coordinator counted on its side of that
+    /// shard's socket (re-based at each respawn, so incarnations
+    /// compare cleanly).
+    pub coord_bytes: u64,
+}
+
+/// The merged global timeline: every process's spans on the
+/// coordinator's clock, plus per-shard wire accounting checks. Lives in
+/// `RunResult::trace`; rendered by [`export`].
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    enabled: bool,
+    /// `(pid, span)` — pid 0 is the coordinator (or the in-process
+    /// engine), pid `k + 1` is shard `k` across all its incarnations.
+    pub spans: Vec<(u32, Span)>,
+    /// Total ring-overwritten spans across all processes.
+    pub dropped: u64,
+    pub wire_checks: Vec<WireCheck>,
+}
+
+impl Timeline {
+    pub fn new(enabled: bool) -> Timeline {
+        Timeline { enabled, ..Timeline::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Drain a local (same-process) recorder into the timeline — no
+    /// clock shift needed.
+    pub fn absorb(&mut self, pid: u32, buf: &mut TraceBuf) {
+        if !self.enabled {
+            return;
+        }
+        let (spans, dropped) = buf.drain();
+        self.dropped += dropped;
+        self.spans.extend(spans.into_iter().map(|s| (pid, s)));
+    }
+
+    /// Fold one shard's shipped trace into the timeline, shifting its
+    /// timestamps by `clock_offset` (coordinator clock − shard clock,
+    /// measured at that incarnation's handshake) so all processes share
+    /// one time axis. The `merge-coverage` lint binds every
+    /// [`ShardTrace`] field to this function.
+    pub fn fold_shard(&mut self, pid: u32, clock_offset: i64, t: ShardTrace) {
+        if !self.enabled {
+            return;
+        }
+        self.dropped += t.dropped;
+        for mut s in t.spans {
+            s.t_start = shift(s.t_start, clock_offset);
+            s.t_end = shift(s.t_end, clock_offset);
+            self.spans.push((pid, s));
+        }
+    }
+
+    /// Record a wire-byte agreement row (kept even when span recording
+    /// is disabled: the check is accounting, not tracing).
+    pub fn push_wire_check(&mut self, check: WireCheck) {
+        self.wire_checks.push(check);
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Distinct pids present, sorted — the processes that contributed.
+    pub fn pids(&self) -> Vec<u32> {
+        let mut pids: Vec<u32> = self.spans.iter().map(|(pid, _)| *pid).collect();
+        pids.sort_unstable();
+        pids.dedup();
+        pids
+    }
+}
+
+/// Shift a shard timestamp onto the coordinator clock, saturating at
+/// the axis ends (a negative offset larger than `t` clamps to 0).
+fn shift(t: u64, offset: i64) -> u64 {
+    let shifted = t as i128 + offset as i128;
+    shifted.clamp(0, u64::MAX as i128) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, step: u32, worker: u32, t0: u64, t1: u64) -> Span {
+        Span { kind, step, worker, t_start: t0, t_end: t1, payload: 7 }
+    }
+
+    #[test]
+    fn kinds_roundtrip_through_tags() {
+        for (i, k) in ALL_KINDS.iter().enumerate() {
+            assert_eq!(k.tag() as usize, i);
+            assert_eq!(SpanKind::from_tag(k.tag()), Some(*k));
+        }
+        assert_eq!(SpanKind::from_tag(ALL_KINDS.len() as u8), None);
+    }
+
+    #[test]
+    fn disabled_recorder_never_allocates_and_returns_zero_stamps() {
+        let mut buf = TraceBuf::new(false);
+        assert_eq!(buf.start(), 0);
+        buf.record(SpanKind::Claim, 1, 1, 0, 3);
+        buf.mark(SpanKind::Replay, 1, 0, 0);
+        buf.push(span(SpanKind::Step, 1, 0, 0, 5));
+        assert!(buf.is_empty(), "disabled recording must be a no-op");
+        assert_eq!(buf.spans.capacity(), 0, "disabled recording must not allocate");
+        assert_eq!(buf.dropped(), 0);
+    }
+
+    #[test]
+    fn enabled_recorder_stamps_monotonic_intervals() {
+        let mut buf = TraceBuf::new(true);
+        let t0 = buf.start();
+        assert!(t0 > 0);
+        buf.record(SpanKind::Extract, 2, 3, t0, 42);
+        assert_eq!(buf.len(), 1);
+        let s = buf.spans[0];
+        assert_eq!((s.kind, s.step, s.worker, s.payload), (SpanKind::Extract, 2, 3, 42));
+        assert!(s.t_end >= s.t_start);
+    }
+
+    #[test]
+    fn full_ring_overwrites_oldest_and_counts_drops() {
+        let mut buf = TraceBuf::with_cap(true, 3);
+        for i in 0..5u64 {
+            buf.push(span(SpanKind::Claim, 1, 1, i * 10, i * 10 + 1));
+        }
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf.dropped(), 2);
+        let starts: Vec<u64> = buf.spans.iter().map(|s| s.t_start).collect();
+        // Slots 0 and 1 were overwritten by spans 3 and 4; span 2 kept.
+        assert_eq!(starts, vec![30, 40, 20]);
+        let (spans, dropped) = buf.drain();
+        assert_eq!((spans.len(), dropped), (3, 2));
+        assert!(buf.is_empty());
+        assert_eq!(buf.dropped(), 0);
+        assert!(buf.enabled(), "drain must not disable the recorder");
+    }
+
+    #[test]
+    fn shard_trace_roundtrips_and_rejects_hostile_bytes() {
+        let mut t = ShardTrace::default();
+        for (i, k) in ALL_KINDS.iter().enumerate() {
+            t.spans.push(span(*k, i as u32, i as u32 + 1, i as u64, i as u64 + 9));
+        }
+        t.dropped = 13;
+        let mut w = Writer::new();
+        t.serialize(&mut w);
+        let bytes = w.into_bytes();
+        let back = ShardTrace::deserialize(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(back, t);
+        // Re-serializing yields identical bytes (deterministic codec).
+        let mut w2 = Writer::new();
+        back.serialize(&mut w2);
+        assert_eq!(w2.into_bytes(), bytes);
+        // Every truncation errors; no truncation panics.
+        for cut in 0..bytes.len() {
+            assert!(ShardTrace::deserialize(&mut Reader::new(&bytes[..cut])).is_err(), "cut={cut}");
+        }
+        // An oversized count prefix is rejected before allocation.
+        let mut evil = bytes.clone();
+        evil[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            ShardTrace::deserialize(&mut Reader::new(&evil)),
+            Err(CodecError::Oversized { .. })
+        ));
+        // A bad span-kind tag is a typed error.
+        let mut evil = bytes.clone();
+        evil[4] = 0xFF;
+        assert!(matches!(
+            ShardTrace::deserialize(&mut Reader::new(&evil)),
+            Err(CodecError::BadTag { .. })
+        ));
+    }
+
+    #[test]
+    fn fold_shard_shifts_onto_the_coordinator_clock() {
+        let mut tl = Timeline::new(true);
+        let t = ShardTrace {
+            spans: vec![span(SpanKind::Step, 1, 0, 1000, 2000)],
+            dropped: 4,
+        };
+        tl.fold_shard(2, 500, t);
+        let t = ShardTrace {
+            spans: vec![span(SpanKind::Claim, 1, 1, 1000, 2000)],
+            dropped: 0,
+        };
+        tl.fold_shard(3, -1500, t);
+        assert_eq!(tl.dropped, 4);
+        assert_eq!(tl.spans.len(), 2);
+        let (pid_a, a) = tl.spans[0];
+        assert_eq!((pid_a, a.t_start, a.t_end), (2, 1500, 2500));
+        let (pid_b, b) = tl.spans[1];
+        // The negative offset exceeds t_start: clamped to the axis.
+        assert_eq!((pid_b, b.t_start, b.t_end), (3, 0, 500));
+        assert_eq!(tl.pids(), vec![2, 3]);
+    }
+
+    #[test]
+    fn disabled_timeline_folds_nothing_but_keeps_wire_checks() {
+        let mut tl = Timeline::new(false);
+        let mut buf = TraceBuf::new(true);
+        buf.push(span(SpanKind::Step, 1, 0, 1, 2));
+        tl.absorb(0, &mut buf);
+        tl.fold_shard(1, 0, ShardTrace { spans: vec![span(SpanKind::Step, 1, 0, 1, 2)], dropped: 1 });
+        assert_eq!(tl.span_count(), 0);
+        assert_eq!(tl.dropped, 0);
+        // Wire accounting is cheap and always on.
+        tl.push_wire_check(WireCheck { step: 1, shard: 0, shard_bytes: 10, coord_bytes: 10 });
+        assert_eq!(tl.wire_checks.len(), 1);
+    }
+}

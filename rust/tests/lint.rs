@@ -152,6 +152,39 @@ fn merge_coverage_pins_the_shard_out_binding() {
 }
 
 #[test]
+fn merge_coverage_pins_the_shard_trace_binding() {
+    // The spec table must bind ShardTrace to the timeline fold: a trace
+    // field a shard ships but the coordinator never folds is silently
+    // lost observability — dropped-at-barrier, tracing edition.
+    assert!(
+        rules::MERGE_SPECS.iter().any(|s| s.strukt == "ShardTrace"
+            && s.impl_owner == "Timeline"
+            && s.fn_name == "fold_shard"
+            && s.acc_file == "rust/src/trace/mod.rs"),
+        "MERGE_SPECS lost the ShardTrace binding"
+    );
+
+    let def = lexer::lex(include_str!("lint_fixtures/trace_merge_def.rs"));
+    let acc = lexer::lex(include_str!("lint_fixtures/trace_merge_acc.rs"));
+    let spec = MergeSpec {
+        strukt: "Shipment",
+        def_file: "rust/tests/lint_fixtures/trace_merge_def.rs",
+        impl_owner: "Timeline",
+        fn_name: "fold_shard",
+        acc_file: "rust/tests/lint_fixtures/trace_merge_acc.rs",
+    };
+    let f = rules::merge_coverage(&spec, &def, &acc);
+    // `spans`/`dropped` fold and `span_rate` is allowlisted; only
+    // `forgotten_marks` (line 7) escapes the fold.
+    assert_eq!(lines(&f, "merge-coverage"), vec![7]);
+    assert!(f[0].msg.contains("forgotten_marks"), "{}", f[0].msg);
+    // The decoy owner mentions every field — the real spec must not
+    // inherit the decoy's coverage.
+    let decoy = MergeSpec { impl_owner: "ShardTrace", ..spec };
+    assert!(rules::merge_coverage(&decoy, &def, &acc).is_empty());
+}
+
+#[test]
 fn merge_coverage_flags_stale_specs_loudly() {
     let def = lexer::lex(include_str!("lint_fixtures/merge_def.rs"));
     let acc = lexer::lex(include_str!("lint_fixtures/merge_acc.rs"));

@@ -1,0 +1,21 @@
+// Fixture: `merge-coverage` accumulate side — the Timeline's
+// fold_shard keeps everything except `forgotten_marks`.
+
+impl Timeline {
+    fn pids(&self) {}
+
+    fn fold_shard(&mut self, pid: u32, t: Shipment) {
+        self.dropped += t.dropped;
+        for s in t.spans {
+            self.spans.push((pid, s));
+        }
+    }
+}
+
+impl ShardTrace {
+    // Decoy on the wrong owner: it happens to mention every field, so
+    // pointing the spec here must yield a clean (not inherited) result.
+    fn fold_shard(&mut self, t: &Shipment) {
+        let _ = (&t.spans, t.dropped, t.forgotten_marks, t.span_rate);
+    }
+}

@@ -1,0 +1,10 @@
+// Fixture: `merge-coverage` tracing binding — a ShardTrace-style
+// shipment whose timeline fold must touch every field.
+
+pub struct Shipment {
+    pub spans: Vec<Span>,
+    pub dropped: u64,
+    pub forgotten_marks: u64,
+    // lint:allow(merge-coverage) — derived at export time, not folded.
+    pub span_rate: f64,
+}

@@ -1,0 +1,233 @@
+//! Observability suite: golden-shape checks on the Chrome trace export
+//! (every `B` closes with a matching `E`, spans nest inside their
+//! superstep, pid/tid map to shard/worker), span-structure determinism,
+//! two-sided wire-byte agreement (satellite of the tracing work: shards
+//! now count their side of every socket and the coordinator compares),
+//! and recovery visibility — a kill-injected run must render the
+//! failure, respawn, restore, and replay in the merged timeline.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use arabesque::comm::{self, AppSpec, FaultPlan, RecoveryOptions};
+use arabesque::engine::{Cluster, Config, RunResult};
+use arabesque::graph::gen;
+use arabesque::output::{CountingSink, OutputSink};
+use arabesque::trace::export::{chrome_trace_events, chrome_trace_json, Event};
+use arabesque::trace::{SpanKind, Timeline};
+use arabesque::LabeledGraph;
+
+fn exe() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_arabesque"))
+}
+
+fn graph() -> LabeledGraph {
+    gen::erdos_renyi(35, 110, 1, 1, 7).unlabeled()
+}
+
+fn run_local(cfg: &Config, g: &LabeledGraph) -> RunResult {
+    Cluster::new(cfg.clone()).run(g, &arabesque::apps::Motifs::new(3))
+}
+
+fn run_dist(cfg: &Config, g: &LabeledGraph, plan: &str) -> RunResult {
+    let opts = RecoveryOptions {
+        step_timeout: Duration::from_secs(3),
+        handshake_timeout: Duration::from_secs(10),
+        max_shard_retries: 3,
+        backoff_base: Duration::from_millis(20),
+        faults: FaultPlan::parse(plan).expect("test fault plan"),
+    };
+    let sink: Arc<dyn OutputSink> = Arc::new(CountingSink::default());
+    comm::run_distributed_with(exe(), g, &AppSpec::Motifs(3), cfg, sink, &opts)
+        .unwrap_or_else(|e| panic!("distributed run failed: {e:#}"))
+}
+
+/// Golden shape, part 1: per (pid, tid) lane, every `B` must close with
+/// a matching `E` in LIFO order, never ending before it starts.
+fn assert_balanced(events: &[Event]) {
+    let mut stacks: BTreeMap<(u32, u32), Vec<(&str, u64)>> = BTreeMap::new();
+    for e in events {
+        let stack = stacks.entry((e.pid, e.tid)).or_default();
+        match e.ph {
+            'B' => stack.push((e.name, e.ts_nanos)),
+            'E' => {
+                let (name, t0) = stack.pop().expect("E without an open B");
+                assert_eq!(name, e.name, "E must close the innermost B");
+                assert!(e.ts_nanos >= t0, "{name} ends before it starts");
+            }
+            'M' => {}
+            other => panic!("unexpected phase {other}"),
+        }
+    }
+    for ((pid, tid), stack) in stacks {
+        assert!(stack.is_empty(), "unclosed spans on ({pid}, {tid}): {stack:?}");
+    }
+}
+
+/// Golden shape, part 2: every non-`Step` span tagged with a superstep
+/// must sit inside at least one `Step` span of the same process and
+/// step ("at least one" because replays legitimately produce several
+/// `Step` spans for one superstep on one pid). Step-0 spans are control
+/// work between supersteps (restores, the Finish round) and are exempt.
+fn assert_step_nesting(tl: &Timeline) {
+    let steps: Vec<(u32, u64, u64, u32)> = tl
+        .spans
+        .iter()
+        .filter(|(_, s)| s.kind == SpanKind::Step)
+        .map(|(pid, s)| (*pid, s.t_start, s.t_end, s.step))
+        .collect();
+    for (pid, s) in &tl.spans {
+        if s.kind == SpanKind::Step || s.step == 0 {
+            continue;
+        }
+        let contained = steps.iter().any(|&(sp, t0, t1, step)| {
+            sp == *pid && step == s.step && t0 <= s.t_start && s.t_end <= t1
+        });
+        assert!(
+            contained,
+            "{:?} span (pid {pid}, step {}, {}..{}) outside every Step window",
+            s.kind, s.step, s.t_start, s.t_end
+        );
+    }
+}
+
+/// The run's span structure with timestamps erased — what determinism
+/// is asserted over.
+fn structure(tl: &Timeline) -> Vec<(u32, u32, &'static str, u32, u64)> {
+    tl.spans.iter().map(|(pid, s)| (*pid, s.worker, s.kind.name(), s.step, s.payload)).collect()
+}
+
+#[test]
+fn traced_run_exports_balanced_nested_chrome_events() {
+    let g = graph();
+    let cfg = Config::new(1, 2).with_trace(true);
+    let r = run_local(&cfg, &g);
+
+    assert!(r.trace.enabled(), "Config::trace must flow into the timeline");
+    assert!(r.trace.span_count() > 0, "a traced run must record spans");
+    assert_eq!(r.trace.pids(), vec![0], "in-process runs are all pid 0");
+    assert_step_nesting(&r.trace);
+
+    let events = chrome_trace_events(&r.trace);
+    assert_balanced(&events);
+    // tid mapping: 0 is the control thread, w + 1 is worker w — nothing
+    // past the configured worker count may appear.
+    for e in &events {
+        assert!(e.tid <= 2, "tid {} exceeds control + 2 workers", e.tid);
+    }
+    // Worker lanes actually recorded extraction work, the control lane
+    // the supersteps.
+    assert!(events.iter().any(|e| e.ph == 'B' && e.name == "Extract" && e.tid > 0));
+    assert!(events.iter().any(|e| e.ph == 'B' && e.name == "Step" && e.tid == 0));
+
+    let json = chrome_trace_json(&r.trace);
+    assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+    assert!(json.contains("\"otherData\":"), "{json}");
+}
+
+#[test]
+fn untraced_run_records_nothing() {
+    let g = graph();
+    let r = run_local(&Config::new(1, 2), &g);
+    assert!(!r.trace.enabled());
+    assert_eq!(r.trace.span_count(), 0, "tracing is strictly opt-in");
+    assert_eq!(r.trace.dropped, 0);
+    // The exporters still produce valid (empty) documents.
+    assert!(chrome_trace_events(&r.trace).is_empty());
+    assert!(chrome_trace_json(&r.trace).contains("\"traceEvents\":["));
+}
+
+#[test]
+fn trace_structure_is_deterministic_modulo_timestamps() {
+    // Work stealing is the one nondeterministic scheduler in the
+    // engine, so it is off: the remaining span stream — claims,
+    // extraction windows, flushes, barrier components, supersteps —
+    // must replay identically, payloads included.
+    let g = graph();
+    let cfg = Config::new(2, 2).with_steal(false).with_trace(true);
+    let a = run_local(&cfg, &g);
+    let b = run_local(&cfg, &g);
+    assert!(a.trace.span_count() > 0);
+    assert_eq!(structure(&a.trace), structure(&b.trace));
+}
+
+#[test]
+fn distributed_wire_accounting_agrees_on_both_sides() {
+    // Satellite check: each shard counts its side of the socket
+    // (headers included, its own in-flight ShardOut included) and the
+    // coordinator compares against its per-socket counter at every
+    // barrier. Any frame counted on one side only breaks the equality.
+    let g = graph();
+    for shards in [2usize, 3] {
+        let cfg = Config::new(shards, 2).with_steal(false);
+        let r = run_dist(&cfg, &g, "");
+        let checks = &r.trace.wire_checks;
+        assert_eq!(
+            checks.len(),
+            r.steps.len() * shards,
+            "one agreement row per shard per superstep"
+        );
+        for c in checks {
+            assert!(c.shard_bytes > 0, "shard {} step {} counted nothing", c.shard, c.step);
+            assert_eq!(
+                c.shard_bytes, c.coord_bytes,
+                "shards={shards}: wire ledgers diverge at step {} shard {}",
+                c.step, c.shard
+            );
+        }
+        // Wire checks are accounting, not tracing: they are recorded
+        // even though this run had span recording disabled.
+        assert_eq!(r.trace.span_count(), 0);
+    }
+}
+
+#[test]
+fn recovery_is_visible_in_the_merged_timeline() {
+    // The acceptance scenario: a 2-shard run, shard 1 killed at step 2,
+    // traced end to end. The merged timeline must carry spans from the
+    // coordinator and both shards on one clock, and the recovery —
+    // detection, respawn, restore, replay — must be visible.
+    let g = graph();
+    let cfg = Config::new(2, 2).with_steal(false).with_trace(true);
+    let r = run_dist(&cfg, &g, "kill:shard=1,step=2");
+    assert!(r.shard_restarts > 0, "the injected kill must have fired");
+
+    let tl = &r.trace;
+    assert_eq!(tl.pids(), vec![0, 1, 2], "coordinator + both shards must contribute spans");
+    for kind in
+        [SpanKind::FailureDetected, SpanKind::Backoff, SpanKind::Respawn, SpanKind::Replay]
+    {
+        assert!(
+            tl.spans.iter().any(|(pid, s)| *pid == 0 && s.kind == kind),
+            "recovery span {kind:?} missing from the coordinator lane"
+        );
+    }
+    // The respawned incarnation restored its checkpoint: a Restore span
+    // on both ends of that socket.
+    assert!(tl.spans.iter().any(|(pid, s)| *pid == 0 && s.kind == SpanKind::Restore));
+    assert!(tl.spans.iter().any(|(pid, s)| *pid == 2 && s.kind == SpanKind::Restore));
+    // Both shards ran supersteps; workers extracted on both.
+    for pid in [1u32, 2] {
+        assert!(tl.spans.iter().any(|(p, s)| *p == pid && s.kind == SpanKind::Step));
+        assert!(
+            tl.spans.iter().any(|(p, s)| *p == pid && s.kind == SpanKind::Extract && s.worker > 0),
+            "shard {pid} shipped no worker spans"
+        );
+    }
+    assert_step_nesting(tl);
+    assert_balanced(&chrome_trace_events(tl));
+
+    // The wire agreement must survive recovery: the coordinator re-bases
+    // its per-socket counter at each respawn, so even the replayed
+    // barrier compares the same bytes the new incarnation counted.
+    assert!(!tl.wire_checks.is_empty());
+    for c in &tl.wire_checks {
+        assert_eq!(
+            c.shard_bytes, c.coord_bytes,
+            "wire ledgers diverge at step {} shard {} after recovery",
+            c.step, c.shard
+        );
+    }
+}
