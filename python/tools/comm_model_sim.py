@@ -1,0 +1,417 @@
+"""Independent simulation of the coordinator-shard recovery protocol.
+
+This is the cross-check for the exhaustive Rust model checker in
+``rust/src/comm/comm_model.rs`` — the same role ``python/tests``'s model
+suite plays for ``engine/steal_model.rs``. It re-implements, from the
+protocol description alone, the two state machines production code
+drives (``CoordSm`` in ``coordinator.rs``, ``ShardSm`` in ``shard.rs``),
+the fault grammar's ``fire``/``for_respawn`` semantics, and the memoized
+DFS over all interleavings of frame deliveries and injected faults. The
+pytest suite pins exact state-space sizes and outcomes for canonical
+configurations; the Rust checker asserts the same numbers, so the two
+implementations validate each other without sharing a line of code.
+
+Model of one distributed run:
+
+* rounds ``1..=steps`` are supersteps; round ``steps+1`` is the Finish
+  round. Each round drives one ``CoordSm`` per shard from SEND to DONE.
+* a *reply fault* at ``(shard, step)`` fires when the shard receives the
+  round's frame, before computing anything (production's injection
+  point); a *send fault* fires when the coordinator's send is attempted
+  (a shard that died between rounds). Both surface as the FAILED event.
+* recovery = charge the retry budget via ``CoordSm``, respawn a fresh
+  incarnation (one-shot faults stripped), deliver the retained barrier
+  checkpoint in a Restore frame, re-enter SEND for that shard alone.
+
+Invariants checked on every explored path:
+
+* each shard's reply is folded exactly once per round, and the folded
+  aggregate is exactly ``[1..=round]`` (no double-counting across
+  replays);
+* a respawned shard always restores the step ``round-1`` checkpoint;
+* a shard never computes a superstep twice (healthy shards never re-run);
+* a spent retry budget terminates as EXHAUSTED (the oracle decides which
+  plans must complete and which must exhaust — a mismatch either way is
+  a violation);
+* every path terminates (a revisited on-stack state is a violation).
+
+Seeded mutations (``--mutation``) break the *driver glue*, never the
+state machines, mirroring the Rust checker's mutation tests: each must
+be caught as a violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass, replace
+from typing import Optional
+
+# CoordSm states / events / actions.
+SEND, AWAIT, DONE = "Send", "Await", "Done"
+SENT, REPLY, FAILED = "Sent", "Reply", "Failed"
+A_NONE, A_FOLD, A_RESPAWN, A_EXHAUSTED = "None", "Fold", "Respawn", "Exhausted"
+
+# ShardSm states / frame kinds / actions.
+S_AWAIT, S_FINISHED = "Await", "Finished"
+F_STEP, F_RESTORE, F_FINISH = "Step", "Restore", "Finish"
+SA_RUNSTEP, SA_RESTORE, SA_FINISH, SA_PROTOCOL = "RunStep", "Restore", "Finish", "Protocol"
+
+MUTATIONS = ("none", "stale-restore", "skip-restore", "keep-oneshot", "rebroadcast")
+
+
+class Violation(Exception):
+    """An invariant of the recovery protocol failed on some path."""
+
+
+def coord_on_event(state, ev, retries, max_retries):
+    """Transliteration of ``CoordSm::on_event`` (coordinator.rs).
+
+    Returns ``(next_state, action, retries)`` — the retry charge and the
+    exhaustion decision live inside the transition function there too.
+    """
+    if state == SEND and ev == SENT:
+        return AWAIT, A_NONE, retries
+    if state == AWAIT and ev == REPLY:
+        return DONE, A_FOLD, retries
+    if state in (SEND, AWAIT) and ev == FAILED:
+        retries += 1
+        if retries > max_retries:
+            return state, A_EXHAUSTED, retries
+        return SEND, A_RESPAWN, retries
+    return state, A_NONE, retries
+
+
+def shard_on_frame(state, kind):
+    """Transliteration of ``ShardSm::on_frame`` (shard.rs)."""
+    if state == S_AWAIT and kind == F_STEP:
+        return S_AWAIT, SA_RUNSTEP
+    if state == S_AWAIT and kind == F_RESTORE:
+        return S_AWAIT, SA_RESTORE
+    if state == S_AWAIT and kind == F_FINISH:
+        return S_FINISHED, SA_FINISH
+    return state, SA_PROTOCOL
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One spec of the ``--inject`` grammar (fault.rs ``FaultSpec``)."""
+
+    shard: int
+    step: int
+    repeat: bool = False
+    # Model extra: fail the coordinator's *send* instead of the reply.
+    at_send: bool = False
+
+
+def parse_fault(text):
+    """``shard=K,step=S[,repeat][,send]`` — a compact CLI fault form."""
+    shard = step = None
+    repeat = at_send = False
+    for part in text.split(","):
+        part = part.strip()
+        if part == "repeat":
+            repeat = True
+        elif part == "send":
+            at_send = True
+        elif part.startswith("shard="):
+            shard = int(part[len("shard="):])
+        elif part.startswith("step="):
+            step = int(part[len("step="):])
+        else:
+            raise ValueError(f"bad fault part {part!r}")
+    if shard is None or step is None:
+        raise ValueError(f"fault {text!r} needs shard= and step=")
+    return Fault(shard, step, repeat, at_send)
+
+
+def fires(faults, cfg, fresh, at_send, shard, rnd):
+    """Mirror of ``FaultPlan::fire`` over ``for_respawn``-filtered specs:
+    a respawned incarnation only keeps its own ``repeat`` faults (unless
+    the keep-oneshot mutation forgets to strip)."""
+    for f in faults:
+        if f.at_send != at_send or f.shard != shard or f.step != rnd:
+            continue
+        if fresh or f.repeat or cfg.mutation == "keep-oneshot":
+            return True
+    return False
+
+
+@dataclass(frozen=True)
+class Config:
+    shards: int
+    steps: int
+    budget: int
+    faults: tuple = ()
+    mutation: str = "none"
+
+
+@dataclass
+class Shard:
+    coord: str = SEND
+    sm: str = S_AWAIT
+    retries: int = 0
+    fresh: bool = True
+    folded: bool = False
+    agg: tuple = ()
+
+    def key(self):
+        return (self.coord, self.sm, self.retries, self.fresh, self.folded, self.agg)
+
+
+@dataclass
+class State:
+    rnd: int
+    shards: list
+    checkpoints: list
+    replayed: int = 0
+    replay_counted: bool = False
+    outcome: Optional[str] = None  # None | "completed" | "exhausted"
+
+    def key(self):
+        return (
+            self.rnd,
+            self.replayed,
+            self.replay_counted,
+            self.outcome,
+            tuple(s.key() for s in self.shards),
+            tuple(self.checkpoints),
+        )
+
+    def clone(self):
+        return State(
+            self.rnd,
+            [replace(s) for s in self.shards],
+            list(self.checkpoints),
+            self.replayed,
+            self.replay_counted,
+            self.outcome,
+        )
+
+
+def initial_state(cfg):
+    return State(1, [Shard() for _ in range(cfg.shards)], [() for _ in range(cfg.shards)])
+
+
+def oracle(cfg):
+    """The plan-determined outcome every explored path must reach:
+    ``("completed", restarts, replayed)`` or ``("exhausted",)``."""
+    relevant = [f for f in cfg.faults if f.shard < cfg.shards and 1 <= f.step <= cfg.steps + 1]
+    if any(f.repeat for f in relevant):
+        return ("exhausted",)
+    first = {}
+    for f in relevant:  # one-shot: the earliest fires, the respawn strips the rest
+        if f.shard not in first or f.step < first[f.shard]:
+            first[f.shard] = f.step
+    if first and cfg.budget == 0:
+        return ("exhausted",)
+    replayed = len({s for s in first.values() if s <= cfg.steps})
+    return ("completed", len(first), replayed)
+
+
+def fail(cfg, st, k):
+    """A shard's round failed: drive CoordSm, then model the respawn
+    mechanics of ``Coordinator::respawn`` + the shard's Restore arm."""
+    sh = st.shards[k]
+    nxt, action, sh.retries = coord_on_event(sh.coord, FAILED, sh.retries, cfg.budget)
+    if action == A_EXHAUSTED:
+        st.outcome = "exhausted"
+        return
+    if action != A_RESPAWN:
+        raise Violation(f"CoordSm answered {action} to Failed in {sh.coord}")
+    sh.coord = nxt
+    # Respawn: a fresh incarnation of the same shard id.
+    sh.sm = S_AWAIT
+    sh.fresh = False
+    expected = tuple(range(1, st.rnd))  # the step rnd-1 barrier checkpoint
+    if cfg.mutation == "skip-restore":
+        restored = ()
+    else:
+        sh.sm, act = shard_on_frame(sh.sm, F_RESTORE)
+        if act != SA_RESTORE:
+            raise Violation(f"respawned shard {k} rejected Restore: {act}")
+        restored = () if cfg.mutation == "stale-restore" else st.checkpoints[k]
+    if restored != expected:
+        raise Violation(
+            f"shard {k} at round {st.rnd} restored {restored}, "
+            f"expected the step-{st.rnd - 1} checkpoint {expected}"
+        )
+    sh.agg = restored
+    if st.rnd <= cfg.steps and not st.replay_counted:
+        st.replay_counted = True
+        st.replayed += 1
+    if cfg.mutation == "rebroadcast":
+        # Driver bug: recovery re-enters the round for *every* shard.
+        for j, other in enumerate(st.shards):
+            if j != k and other.coord == DONE:
+                other.coord = SEND
+
+
+def deliver_send(cfg, st, k):
+    sh = st.shards[k]
+    if fires(cfg.faults, cfg, sh.fresh, True, k, st.rnd):
+        fail(cfg, st, k)
+        return
+    sh.coord, action, sh.retries = coord_on_event(sh.coord, SENT, sh.retries, cfg.budget)
+    if action != A_NONE:
+        raise Violation(f"CoordSm answered {action} to Sent")
+
+
+def deliver_reply(cfg, st, k):
+    sh = st.shards[k]
+    frame = F_STEP if st.rnd <= cfg.steps else F_FINISH
+    sh.sm, act = shard_on_frame(sh.sm, frame)
+    if act == SA_PROTOCOL:
+        raise Violation(f"shard {k} rejected {frame} in round {st.rnd}")
+    # Production injection point: on Step receipt, before any compute.
+    if fires(cfg.faults, cfg, sh.fresh, False, k, st.rnd):
+        fail(cfg, st, k)
+        return
+    if st.rnd <= cfg.steps:
+        if st.rnd in sh.agg:
+            raise Violation(f"shard {k} re-ran step {st.rnd} (agg {sh.agg})")
+        if sh.agg != tuple(range(1, st.rnd)):
+            raise Violation(f"shard {k} computed step {st.rnd} from base {sh.agg}")
+        sh.agg = sh.agg + (st.rnd,)
+    sh.coord, action, sh.retries = coord_on_event(sh.coord, REPLY, sh.retries, cfg.budget)
+    if action != A_FOLD:
+        raise Violation(f"CoordSm answered {action} to Reply")
+    if sh.folded:
+        raise Violation(f"shard {k} folded twice in round {st.rnd}")
+    sh.folded = True
+    if st.rnd <= cfg.steps:
+        if sh.agg != tuple(range(1, st.rnd + 1)):
+            raise Violation(f"folded wrong aggregate {sh.agg} for step {st.rnd}")
+        st.checkpoints[k] = sh.agg
+    elif sh.agg != tuple(range(1, cfg.steps + 1)):
+        raise Violation(f"shard {k} final output {sh.agg} misses steps")
+
+
+def advance_if_round_done(cfg, st, orc):
+    if any(s.coord != DONE for s in st.shards):
+        return
+    for k, s in enumerate(st.shards):
+        if not s.folded:
+            raise Violation(f"round {st.rnd} closed without folding shard {k}")
+        if st.rnd <= cfg.steps and st.checkpoints[k] != tuple(range(1, st.rnd + 1)):
+            raise Violation(f"round {st.rnd} checkpoint for {k}: {st.checkpoints[k]}")
+    st.rnd += 1
+    st.replay_counted = False
+    if st.rnd > cfg.steps + 1:
+        if any(s.sm != S_FINISHED for s in st.shards):
+            raise Violation("run completed with an unfinished shard")
+        if orc[0] != "completed":
+            raise Violation("run completed but the oracle expected exhaustion")
+        restarts = sum(s.retries for s in st.shards)
+        if (restarts, st.replayed) != (orc[1], orc[2]):
+            raise Violation(
+                f"completed with restarts={restarts} replayed={st.replayed}, "
+                f"oracle said {orc[1]}/{orc[2]}"
+            )
+        st.outcome = "completed"
+    else:
+        for s in st.shards:
+            s.coord = SEND
+            s.folded = False
+
+
+def enabled(st):
+    if st.outcome is not None:
+        return []
+    moves = []
+    for k, s in enumerate(st.shards):
+        if s.coord == SEND:
+            moves.append(("send", k))
+        elif s.coord == AWAIT:
+            moves.append(("reply", k))
+    return moves
+
+
+def apply_move(cfg, st, move, orc):
+    nxt = st.clone()
+    kind, k = move
+    if kind == "send":
+        deliver_send(cfg, nxt, k)
+    else:
+        deliver_reply(cfg, nxt, k)
+    if nxt.outcome == "exhausted" and orc[0] != "exhausted":
+        raise Violation(f"budget exhausted but the oracle expected completion {orc}")
+    if nxt.outcome is None:
+        advance_if_round_done(cfg, nxt, orc)
+    return nxt
+
+
+@dataclass
+class Report:
+    states: int = 0
+    transitions: int = 0
+    terminals: int = 0
+    max_depth: int = 0
+    outcome: tuple = ()
+
+
+def check(cfg):
+    """Memoized DFS over every interleaving; raises Violation on any
+    broken invariant, returns a Report otherwise."""
+    orc = oracle(cfg)
+    rep = Report(outcome=orc)
+    done, on_stack = set(), set()
+
+    def explore(st, depth):
+        key = st.key()
+        if key in on_stack:
+            raise Violation("cycle: the protocol can fail to terminate")
+        if key in done:
+            return
+        rep.states += 1
+        rep.max_depth = max(rep.max_depth, depth)
+        moves = enabled(st)
+        if not moves:
+            rep.terminals += 1
+            done.add(key)
+            return
+        on_stack.add(key)
+        for move in moves:
+            rep.transitions += 1
+            explore(apply_move(cfg, st, move, orc), depth + 1)
+        on_stack.discard(key)
+        done.add(key)
+
+    explore(initial_state(cfg), 0)
+    if rep.terminals == 0:
+        raise Violation("no terminal state reached")
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--budget", type=int, default=1)
+    ap.add_argument(
+        "--fault",
+        action="append",
+        default=[],
+        help="shard=K,step=S[,repeat][,send]; may be given repeatedly",
+    )
+    ap.add_argument("--mutation", choices=MUTATIONS, default="none")
+    args = ap.parse_args()
+    cfg = Config(
+        args.shards,
+        args.steps,
+        args.budget,
+        tuple(parse_fault(f) for f in args.fault),
+        args.mutation,
+    )
+    try:
+        rep = check(cfg)
+    except Violation as v:
+        print(f"VIOLATION: {v}")
+        raise SystemExit(1)
+    print(
+        f"ok: states={rep.states} transitions={rep.transitions} "
+        f"terminals={rep.terminals} max_depth={rep.max_depth} outcome={rep.outcome}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,10 @@ pub mod rules;
 use std::fs;
 use std::path::{Path, PathBuf};
 
-pub use rules::{Finding, MergeSpec, ATOMICS_ALLOWLIST, MERGE_SPECS};
+pub use rules::{
+    Finding, FrameDispatchSpec, MergeSpec, ATOMICS_ALLOWLIST, FRAME_DISPATCH, MERGE_SPECS,
+    RULE_IDS,
+};
 
 /// Root-level Markdown files that are append-only logs or external
 /// references — their historical mentions of since-renamed docs are
@@ -86,7 +89,8 @@ pub fn doc_refs_in_text(root: &Path, rel: &str, src: &str) -> Vec<Finding> {
 ///   (tests/benches are exempt from the code rules by design);
 /// * `**/*.md` (minus the append-only logs) and `python/**/*.py` —
 ///   `doc-refs`;
-/// * the [`MERGE_SPECS`] bindings — `merge-coverage`.
+/// * the [`MERGE_SPECS`] bindings — `merge-coverage`;
+/// * the [`FRAME_DISPATCH`] binding — `frame-kind-coverage`.
 ///
 /// Findings come back sorted by file then line. `Err` is an I/O-level
 /// failure (unreadable tree), not a lint result.
@@ -132,8 +136,34 @@ pub fn lint_repo(root: &Path) -> Result<Vec<Finding>, String> {
         out.extend(rules::merge_coverage(spec, &def, &acc));
     }
 
+    {
+        let spec = &FRAME_DISPATCH;
+        let def = lexer::lex(&read(&root.join(spec.def_file))?);
+        let coord = lexer::lex(&read(&root.join(spec.coord_file))?);
+        let shard = lexer::lex(&read(&root.join(spec.shard_file))?);
+        out.extend(rules::frame_kind_coverage(spec, &def, &coord, &shard));
+    }
+
     out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
     Ok(out)
+}
+
+/// Per-rule `lint:allow(…)` escape counts across the scanned tree — the
+/// `--stats` accounting that keeps allow-drift visible in CI logs (an
+/// allow is an audited exception; its population growing silently is
+/// how exceptions become the norm).
+pub fn allow_counts(root: &Path) -> Result<Vec<(&'static str, usize)>, String> {
+    let mut files = Vec::new();
+    walk(root, root, &mut files)?;
+    let mut counts = vec![0usize; RULE_IDS.len()];
+    for rel in &files {
+        let src = read(&root.join(rel))?;
+        for (i, rule) in RULE_IDS.iter().enumerate() {
+            let needle = format!("lint:allow({rule})");
+            counts[i] += src.matches(needle.as_str()).count();
+        }
+    }
+    Ok(RULE_IDS.iter().copied().zip(counts).collect())
 }
 
 fn read(path: &Path) -> Result<String, String> {
@@ -198,5 +228,34 @@ mod tests {
                 spec.strukt
             );
         }
+    }
+
+    #[test]
+    fn frame_dispatch_spec_resolves() {
+        // Same inverse guard for frame-kind-coverage: renaming the enum
+        // (or its file) must surface as a loud stale-spec finding here,
+        // not silently disable the rule.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let spec = &FRAME_DISPATCH;
+        let def = lexer::lex(&read(&root.join(spec.def_file)).expect("def file"));
+        let coord = lexer::lex(&read(&root.join(spec.coord_file)).expect("coord file"));
+        let shard = lexer::lex(&read(&root.join(spec.shard_file)).expect("shard file"));
+        let findings = rules::frame_kind_coverage(spec, &def, &coord, &shard);
+        assert!(
+            findings.iter().all(|f| !f.msg.contains("spec out of date")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn allow_counts_cover_every_rule_id() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let counts = allow_counts(root).expect("repo must be readable");
+        assert_eq!(counts.len(), RULE_IDS.len());
+        // The audited escapes that exist today keep their rules nonzero;
+        // a rule with no escapes reports an honest zero.
+        let get = |rule: &str| counts.iter().find(|(r, _)| *r == rule).map(|(_, n)| *n);
+        assert!(get("no-unwrap").unwrap() > 0, "known audited unwraps exist");
+        assert_eq!(get("frame-kind-coverage"), Some(0), "no escapes for the new rule");
     }
 }

@@ -3,16 +3,18 @@
 //! `// lint:allow(<rule-id>)` on the same line or in the comment block
 //! directly above.
 //!
-//! | id                 | invariant                                              |
-//! |--------------------|--------------------------------------------------------|
-//! | `merge-coverage`   | every field of the stats structs appears in its merge  |
-//! | `atomics-scope`    | `unsafe`/`AtomicU64`/`Ordering::*` only in allowlisted |
-//! |                    | modules                                                |
-//! | `ordering-comment` | every `Ordering::*` use carries an `ordering:` comment |
-//! | `unsafe-comment`   | every `unsafe` carries a `SAFETY` comment              |
-//! | `no-unwrap`        | no `unwrap()`/`expect()` in library code               |
-//! | `comm-deadline`    | socket ops in `comm/` go through `comm::io` deadlines  |
-//! | `doc-refs`         | `.md` references in comments/docs must exist           |
+//! | id                    | invariant                                              |
+//! |-----------------------|--------------------------------------------------------|
+//! | `merge-coverage`      | every field of the stats structs appears in its merge  |
+//! | `frame-kind-coverage` | every `comm::frame` kind is dispatched on both the     |
+//! |                       | coordinator and the shard side                         |
+//! | `atomics-scope`       | `unsafe`/`AtomicU64`/`Ordering::*` only in allowlisted |
+//! |                       | modules                                                |
+//! | `ordering-comment`    | every `Ordering::*` use carries an `ordering:` comment |
+//! | `unsafe-comment`      | every `unsafe` carries a `SAFETY` comment              |
+//! | `no-unwrap`           | no `unwrap()`/`expect()` in library code               |
+//! | `comm-deadline`       | socket ops in `comm/` go through `comm::io` deadlines  |
+//! | `doc-refs`            | `.md` references in comments/docs must exist           |
 //!
 //! Rules operate on [`lexer::Lexed`] token streams, never raw text, so
 //! occurrences inside strings or comments don't count (and `.md`
@@ -39,6 +41,20 @@ impl std::fmt::Display for Finding {
         write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
     }
 }
+
+/// Every rule id in the catalog, in the doc-table order above. The
+/// `lint` binary's `--stats` mode and its "clean (N rules)" banner both
+/// derive from this list, so a new rule cannot be forgotten in either.
+pub const RULE_IDS: &[&str] = &[
+    "merge-coverage",
+    "frame-kind-coverage",
+    "atomics-scope",
+    "ordering-comment",
+    "unsafe-comment",
+    "no-unwrap",
+    "comm-deadline",
+    "doc-refs",
+];
 
 /// Modules allowed to touch `unsafe` / `AtomicU64` / `Ordering`:
 /// the steal ledger and its model checker, the stats clock syscall,
@@ -296,6 +312,145 @@ fn md_refs(text: &str) -> Vec<String> {
         let word = word.trim_matches(|c| matches!(c, '.' | '-' | '/' | ':')).to_string();
         if word.ends_with(".md") && word.len() > 3 {
             out.push(word);
+        }
+    }
+    out
+}
+
+/// Binding between a protocol-kind enum and the two dispatch sides
+/// that must each handle every variant.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameDispatchSpec {
+    /// Enum whose variants are checked.
+    pub enum_name: &'static str,
+    /// Repo-relative file defining the enum.
+    pub def_file: &'static str,
+    /// Repo-relative file with the coordinator-side dispatch.
+    pub coord_file: &'static str,
+    /// Repo-relative file with the shard-side dispatch.
+    pub shard_file: &'static str,
+}
+
+/// The repo's frame-dispatch binding: every [`FrameKind`] variant of
+/// the wire protocol must appear (as a qualified `FrameKind::…` path,
+/// outside unit tests) in both `comm::coordinator` and `comm::shard` —
+/// a kind one side can send that the other never handles is a protocol
+/// hole the type system cannot see.
+///
+/// [`FrameKind`]: crate::comm::frame::FrameKind
+pub const FRAME_DISPATCH: FrameDispatchSpec = FrameDispatchSpec {
+    enum_name: "FrameKind",
+    def_file: "rust/src/comm/frame.rs",
+    coord_file: "rust/src/comm/coordinator.rs",
+    shard_file: "rust/src/comm/shard.rs",
+};
+
+/// `frame-kind-coverage`: every variant of `spec.enum_name` must be
+/// dispatched — appear as a qualified `Enum::Variant` path in library
+/// code — on *both* sides of the wire. Suppress with a `lint:allow`
+/// marker naming this rule at the variant's definition line.
+pub fn frame_kind_coverage(
+    spec: &FrameDispatchSpec,
+    def: &Lexed,
+    coord: &Lexed,
+    shard: &Lexed,
+) -> Vec<Finding> {
+    let variants = enum_variants(def, spec.enum_name);
+    let mut out = Vec::new();
+    if variants.is_empty() {
+        out.push(Finding {
+            rule: "frame-kind-coverage",
+            file: spec.def_file.to_string(),
+            line: 1,
+            msg: format!("enum `{}` not found (spec out of date?)", spec.enum_name),
+        });
+        return out;
+    }
+    let sides = [
+        ("coordinator", spec.coord_file, qualified_uses(coord, spec.enum_name)),
+        ("shard", spec.shard_file, qualified_uses(shard, spec.enum_name)),
+    ];
+    for (name, line) in &variants {
+        if def.allowed_at(*line, "frame-kind-coverage") {
+            continue;
+        }
+        for (side, side_file, dispatched) in &sides {
+            if dispatched.contains(name.as_str()) {
+                continue;
+            }
+            out.push(Finding {
+                rule: "frame-kind-coverage",
+                file: spec.def_file.to_string(),
+                line: *line,
+                msg: format!(
+                    "frame kind `{}::{name}` is never dispatched on the {side} side \
+                     ({side_file}) — a frame one side sends and the other ignores",
+                    spec.enum_name
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Variant names and definition lines of `enum name { … }`: the
+/// identifier opening each depth-1 item (so payloads, discriminants and
+/// struct-variant fields never count).
+fn enum_variants(lx: &Lexed, name: &str) -> Vec<(String, u32)> {
+    let t = &lx.toks;
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k + 1 < t.len() {
+        if t[k].text != "enum" || t[k + 1].text != name {
+            k += 1;
+            continue;
+        }
+        let mut j = k + 2;
+        while j < t.len() && t[j].text != "{" {
+            j += 1;
+        }
+        let mut depth = 0i64;
+        while j < t.len() {
+            match t[j].text.as_str() {
+                "{" | "(" | "[" => depth += 1,
+                "}" | ")" | "]" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return out;
+                    }
+                }
+                _ => {
+                    if depth == 1
+                        && t[j].kind == TokKind::Ident
+                        && j >= 1
+                        && (t[j - 1].text == "{" || t[j - 1].text == ",")
+                    {
+                        out.push((t[j].text.clone(), t[j].line));
+                    }
+                }
+            }
+            j += 1;
+        }
+        return out;
+    }
+    out
+}
+
+/// Names appearing as `owner::name` path expressions outside
+/// `#[cfg(test)]` spans — unit-test mentions are not dispatch. The
+/// lexer splits `::` into two `:` puncts.
+fn qualified_uses<'a>(lx: &'a Lexed, owner: &str) -> std::collections::HashSet<&'a str> {
+    let spans = cfg_test_spans(lx);
+    let t = &lx.toks;
+    let mut out = std::collections::HashSet::new();
+    for k in 3..t.len() {
+        if t[k].kind == TokKind::Ident
+            && t[k - 1].text == ":"
+            && t[k - 2].text == ":"
+            && t[k - 3].text == owner
+            && !in_spans(&spans, t[k].line)
+        {
+            out.insert(t[k].text.as_str());
         }
     }
     out

@@ -1,14 +1,17 @@
 //! The repo's invariant linter. Blocking in CI:
 //!
 //! ```text
-//! cargo run --release --bin lint          # scan the repo root
-//! cargo run --release --bin lint -- PATH  # scan another tree
+//! cargo run --release --bin lint              # scan the repo root
+//! cargo run --release --bin lint -- PATH      # scan another tree
+//! cargo run --release --bin lint -- --stats   # + per-rule finding/allow counts
 //! ```
 //!
 //! Exit code 0 when clean, 1 on violations (printed one per line as
-//! `file:line: [rule-id] message`), 2 on I/O failure. Rule catalog and
-//! suppression syntax: `rust/src/analysis/` and ARCHITECTURE.md's
-//! "Static analysis & model checking" section.
+//! `file:line: [rule-id] message`), 2 on I/O failure. `--stats` prints
+//! one `rule: findings/allows` line per catalog rule so allow-drift
+//! stays visible in CI logs. Rule catalog and suppression syntax:
+//! `rust/src/analysis/` and ARCHITECTURE.md's "Static analysis & model
+//! checking" section.
 
 use std::path::PathBuf;
 
@@ -21,31 +24,45 @@ fn main() {
 fn run() -> i32 {
     // Default to the crate root baked in at compile time — correct for
     // `cargo run` from anywhere inside the repo — overridable by arg.
-    let root = std::env::args()
-        .nth(1)
-        .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
-    match analysis::lint_repo(&root) {
-        Ok(findings) if findings.is_empty() => {
-            println!("lint: clean ({} rules)", rule_count());
-            0
-        }
-        Ok(findings) => {
-            for f in &findings {
-                println!("{f}");
-            }
-            println!("lint: {} violation(s)", findings.len());
-            1
-        }
-        Err(e) => {
-            eprintln!("lint: error: {e}");
-            2
+    let mut stats = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        if arg == "--stats" {
+            stats = true;
+        } else {
+            root = Some(PathBuf::from(arg));
         }
     }
-}
-
-fn rule_count() -> usize {
-    // One per rule id in the catalog (see analysis::rules).
-    ["merge-coverage", "atomics-scope", "ordering-comment", "unsafe-comment", "no-unwrap", "doc-refs"]
-        .len()
+    let root = root.unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let findings = match analysis::lint_repo(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lint: error: {e}");
+            return 2;
+        }
+    };
+    if stats {
+        match analysis::allow_counts(&root) {
+            Ok(counts) => {
+                for (rule, allows) in counts {
+                    let fired = findings.iter().filter(|f| f.rule == rule).count();
+                    println!("lint: stats {rule}: {fired} finding(s), {allows} allow(s)");
+                }
+            }
+            Err(e) => {
+                eprintln!("lint: error: {e}");
+                return 2;
+            }
+        }
+    }
+    if findings.is_empty() {
+        println!("lint: clean ({} rules)", analysis::RULE_IDS.len());
+        0
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        println!("lint: {} violation(s)", findings.len());
+        1
+    }
 }

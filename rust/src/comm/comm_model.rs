@@ -1,0 +1,884 @@
+//! Exhaustive model checker for the coordinator–shard recovery protocol.
+//!
+//! PR 8's correctness argument — "on failure the coordinator restores
+//! the last barrier checkpoint and replays the superstep for that shard
+//! only, so results stay bit-identical" — was pinned by example-based
+//! fault schedules in `rust/tests/recovery.rs`. Examples sample the
+//! interleaving space; this module *enumerates* it, in the same style as
+//! [`crate::engine::steal_model`] does for the chunk ledger:
+//!
+//! * The per-shard round protocol is the explicit state machine
+//!   [`CoordSm`] in `comm::coordinator` and the shard's frame dispatch
+//!   is [`ShardSm`] in `comm::shard`. Production drives both one event
+//!   at a time (`Coordinator::exchange`, `run_shard_with`); the checker
+//!   drives the **same transition functions**, so it verifies shipped
+//!   code, not a parallel reimplementation.
+//! * Fault semantics come from the production [`FaultPlan`]: a fault
+//!   fires per [`FaultPlan::fire`] in a shard's first incarnation and a
+//!   respawn keeps only [`FaultPlan::for_respawn`]'s repeat specs —
+//!   again the very functions the coordinator calls.
+//! * A memoized DFS explores **every** interleaving of per-shard frame
+//!   deliveries (send / reply order across shards is unconstrained) and
+//!   injected faults, for 2–3 model shards × 1–3 supersteps × retry
+//!   budgets 0–2. Each shard's superstep output is modelled as the list
+//!   of steps it computed, so replay bugs show up as concrete wrong
+//!   aggregates rather than abstract flags.
+//!
+//! Checked on every explored path:
+//!
+//! * **exactly-once fold** — each shard's `ShardOut` is folded exactly
+//!   once per round, and the folded aggregate is exactly `[1..=round]`
+//!   (a double fold or a replay that double-counts is a violation);
+//! * **fresh checkpoints** — a respawned shard always restores the
+//!   round−1 barrier checkpoint, never a stale or empty snapshot;
+//! * **no spurious re-runs** — a healthy shard never computes the same
+//!   superstep twice;
+//! * **typed exhaustion** — a spent retry budget terminates the run as
+//!   [`ModelOutcome::Exhausted`] (production's `comm-retries-exhausted`
+//!   error), and an *oracle* derived from the fault plan alone decides
+//!   which plans must complete and which must exhaust — drifting either
+//!   way (silent loss or spurious give-up) is a violation;
+//! * **termination** — revisiting an on-stack state means a schedule
+//!   can cycle without progress; the DFS reports it.
+//!
+//! The checker is validated two ways. `python/tools/comm_model_sim.py`
+//! re-implements the model independently (as `steal_model`'s Python
+//! twin does) and its pytest suite pins the same exact state-space
+//! sizes the tests below pin — 25 states for 2 shards × 2 steps, 153
+//! for the 3×3 double-fault config, 28 999 summed over the full
+//! 540-configuration single-fault matrix. And the mutation tests seed
+//! driver-glue bugs (restore a stale snapshot, skip the restore, forget
+//! the one-shot fault strip, rebroadcast the round to healthy shards)
+//! that the checker must catch.
+//!
+//! Run it with `cargo test -q comm_model` (blocking in CI).
+
+use std::collections::HashSet;
+
+use super::coordinator::{CoordAction, CoordEvent, CoordSm};
+use super::fault::FaultPlan;
+use super::frame::FrameKind;
+use super::shard::{ShardAction, ShardSm};
+
+/// A seeded driver-glue bug for the checker's mutation tests. The state
+/// machines are never mutated — production owns them — only the glue
+/// the model layers on top, mirroring the ways `respawn`/`exchange`
+/// could misuse them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    /// Faithful model.
+    None,
+    /// Respawn delivers the initial (empty) snapshot instead of the
+    /// retained checkpoint — the "forgot to re-base" bug.
+    StaleRestore,
+    /// Respawn skips the Restore frame entirely.
+    SkipRestore,
+    /// Respawn forgets to strip one-shot faults
+    /// ([`FaultPlan::for_respawn`] never applied), so they re-fire
+    /// forever.
+    KeepOneShotFaults,
+    /// Recovery re-enters the round for *every* shard, not just the
+    /// failed one — healthy shards get the Step frame again.
+    Rebroadcast,
+}
+
+/// One model configuration: the bounds plus a fault plan, split by
+/// injection point. `reply` faults fire when the shard receives the
+/// round's frame (production's `--inject` point, before any compute);
+/// `send` faults fail the coordinator's send attempt (a shard that died
+/// between rounds), exercising `exchange`'s send-failure leg.
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub shards: usize,
+    pub steps: u64,
+    /// `--max-shard-retries` for the model run.
+    pub budget: u32,
+    pub reply: FaultPlan,
+    pub send: FaultPlan,
+    pub mutation: Mutation,
+}
+
+impl ModelCfg {
+    pub fn new(shards: usize, steps: u64, budget: u32) -> ModelCfg {
+        ModelCfg {
+            shards,
+            steps,
+            budget,
+            reply: FaultPlan::default(),
+            send: FaultPlan::default(),
+            mutation: Mutation::None,
+        }
+    }
+
+    pub fn with_reply(mut self, plan: FaultPlan) -> ModelCfg {
+        self.reply = plan;
+        self
+    }
+
+    pub fn with_send(mut self, plan: FaultPlan) -> ModelCfg {
+        self.send = plan;
+        self
+    }
+
+    pub fn with_mutation(mut self, mutation: Mutation) -> ModelCfg {
+        self.mutation = mutation;
+        self
+    }
+}
+
+/// The plan-determined terminal every explored path must reach.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelOutcome {
+    /// All supersteps folded; the counters are what production reports
+    /// as `RunResult::{shard_restarts, replayed_steps}`.
+    Completed { restarts: u64, replayed: u64 },
+    /// The retry budget was spent: production's
+    /// `comm-retries-exhausted` fail-fast path.
+    Exhausted,
+}
+
+/// What an exhaustive run explored, for reporting and for asserting the
+/// search actually covered a nontrivial space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelReport {
+    /// Distinct model states visited (after memoization).
+    pub states: u64,
+    /// Single-delivery transitions executed.
+    pub transitions: u64,
+    /// Distinct terminal states.
+    pub terminals: u64,
+    /// Longest schedule prefix explored, in deliveries.
+    pub max_depth: usize,
+    /// The oracle outcome every path reached.
+    pub outcome: ModelOutcome,
+}
+
+/// Derive the outcome from the plan alone, without running the model:
+/// any in-range `repeat` fault outlives every respawn, so the budget
+/// must exhaust; otherwise each faulted shard fails exactly once (at
+/// its earliest one-shot spec — the respawn strips the rest), so the
+/// run completes with one restart per faulted shard and one replayed
+/// round per distinct superstep a fault fired in. The DFS asserts every
+/// path agrees with this — disagreement in either direction is a
+/// violation.
+fn oracle(cfg: &ModelCfg) -> ModelOutcome {
+    let relevant = |plan: &FaultPlan| -> Vec<(usize, u64, bool)> {
+        plan.specs
+            .iter()
+            .filter(|f| f.shard < cfg.shards && f.step >= 1 && f.step <= cfg.steps + 1)
+            .map(|f| (f.shard, f.step, f.repeat))
+            .collect()
+    };
+    let mut all = relevant(&cfg.reply);
+    all.extend(relevant(&cfg.send));
+    if all.iter().any(|&(_, _, repeat)| repeat) {
+        return ModelOutcome::Exhausted;
+    }
+    let mut first: Vec<Option<u64>> = vec![None; cfg.shards];
+    for &(shard, step, _) in &all {
+        first[shard] = Some(first[shard].map_or(step, |s| s.min(step)));
+    }
+    let faulted = first.iter().flatten().count() as u64;
+    if faulted > 0 && cfg.budget == 0 {
+        return ModelOutcome::Exhausted;
+    }
+    let replayed_rounds: HashSet<u64> =
+        first.iter().flatten().copied().filter(|&s| s <= cfg.steps).collect();
+    ModelOutcome::Completed { restarts: faulted, replayed: replayed_rounds.len() as u64 }
+}
+
+/// Per-shard model state: the coordinator's machine for it, its own
+/// frame machine, and what it has computed so far (`agg` is the list of
+/// superstep ids folded into its running aggregate — the model's stand-
+/// in for the real frontier/aggregation payload).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct ShardState {
+    coord: CoordSm,
+    sm: ShardSm,
+    retries: u32,
+    /// First incarnation? Respawns get the `for_respawn` plan.
+    fresh: bool,
+    /// Folded into this round's barrier already?
+    folded: bool,
+    agg: Vec<u64>,
+}
+
+#[derive(Debug, Clone)]
+struct ModelState {
+    /// Rounds `1..=steps` are supersteps; round `steps + 1` is the
+    /// Finish round.
+    round: u64,
+    shards: Vec<ShardState>,
+    /// Per-shard retained barrier checkpoint (the `ShardSnapshot`).
+    checkpoints: Vec<Vec<u64>>,
+    /// Distinct rounds that saw a replay (production's
+    /// `replayed_steps`: counted once per round, however many shards
+    /// failed in it).
+    replayed: u64,
+    replay_counted: bool,
+    outcome: Option<ModelOutcome>,
+}
+
+fn initial(cfg: &ModelCfg) -> ModelState {
+    ModelState {
+        round: 1,
+        shards: (0..cfg.shards)
+            .map(|_| ShardState {
+                coord: CoordSm::Send,
+                sm: ShardSm::Await,
+                retries: 0,
+                fresh: true,
+                folded: false,
+                agg: Vec::new(),
+            })
+            .collect(),
+        checkpoints: vec![Vec::new(); cfg.shards],
+        replayed: 0,
+        replay_counted: false,
+        outcome: None,
+    }
+}
+
+/// Canonical encoding of the full model state for memoization. Globals
+/// first, then each shard (fixed-width tags), then the length-prefixed
+/// aggregates and checkpoints — prefix-unambiguous.
+fn encode(st: &ModelState) -> Vec<u64> {
+    let mut key = vec![
+        st.round,
+        st.replayed,
+        st.replay_counted as u64,
+        match st.outcome {
+            None => 0,
+            Some(ModelOutcome::Completed { .. }) => 1,
+            Some(ModelOutcome::Exhausted) => 2,
+        },
+    ];
+    for s in &st.shards {
+        key.push(match s.coord {
+            CoordSm::Send => 0,
+            CoordSm::Await => 1,
+            CoordSm::Done => 2,
+        });
+        key.push(match s.sm {
+            ShardSm::Await => 0,
+            ShardSm::Finished => 1,
+        });
+        key.push(u64::from(s.retries));
+        key.push(s.fresh as u64);
+        key.push(s.folded as u64);
+        key.push(s.agg.len() as u64);
+        key.extend(&s.agg);
+    }
+    for c in &st.checkpoints {
+        key.push(c.len() as u64);
+        key.extend(c);
+    }
+    key
+}
+
+/// Does `plan` fire for shard `k` in `round`? Mirrors production: the
+/// first incarnation consults the full plan ([`FaultPlan::fire`]); a
+/// respawn only the `for_respawn` remnant — unless the keep-oneshot
+/// mutation forgets the strip.
+fn fires(cfg: &ModelCfg, plan: &FaultPlan, fresh: bool, k: usize, round: u64) -> bool {
+    if fresh || cfg.mutation == Mutation::KeepOneShotFaults {
+        plan.fire(k, round).is_some()
+    } else {
+        plan.for_respawn(k).fire(k, round).is_some()
+    }
+}
+
+/// A shard's round failed: drive [`CoordSm`] with the Failed event,
+/// then model the respawn mechanics of `Coordinator::respawn` plus the
+/// shard's Restore arm.
+fn fail(cfg: &ModelCfg, st: &mut ModelState, k: usize) -> Result<(), String> {
+    let coord = st.shards[k].coord;
+    let (next, action) = coord.on_event(CoordEvent::Failed, &mut st.shards[k].retries, cfg.budget);
+    match action {
+        CoordAction::Exhausted => {
+            st.outcome = Some(ModelOutcome::Exhausted);
+            return Ok(());
+        }
+        CoordAction::Respawn => {}
+        other => return Err(format!("CoordSm answered {other:?} to Failed in {coord:?}")),
+    }
+    st.shards[k].coord = next;
+    // Respawn: a fresh process for the same shard id.
+    st.shards[k].sm = ShardSm::Await;
+    st.shards[k].fresh = false;
+    let expected: Vec<u64> = (1..st.round).collect(); // the round−1 barrier checkpoint
+    let restored = if cfg.mutation == Mutation::SkipRestore {
+        Vec::new()
+    } else {
+        let (sm, act) = st.shards[k].sm.on_frame(FrameKind::Restore);
+        if act != ShardAction::Restore {
+            return Err(format!("respawned shard {k} rejected Restore: {act:?}"));
+        }
+        st.shards[k].sm = sm;
+        if cfg.mutation == Mutation::StaleRestore {
+            Vec::new()
+        } else {
+            st.checkpoints[k].clone()
+        }
+    };
+    if restored != expected {
+        return Err(format!(
+            "shard {k} at round {} restored {restored:?}, expected the step-{} checkpoint \
+             {expected:?}",
+            st.round,
+            st.round - 1
+        ));
+    }
+    st.shards[k].agg = restored;
+    if st.round <= cfg.steps && !st.replay_counted {
+        st.replay_counted = true;
+        st.replayed += 1;
+    }
+    if cfg.mutation == Mutation::Rebroadcast {
+        // Driver bug: recovery re-enters the round for *every* shard.
+        for (j, other) in st.shards.iter_mut().enumerate() {
+            if j != k && other.coord == CoordSm::Done {
+                other.coord = CoordSm::Send;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The coordinator attempts this round's send to shard `k`.
+fn deliver_send(cfg: &ModelCfg, st: &mut ModelState, k: usize) -> Result<(), String> {
+    if fires(cfg, &cfg.send, st.shards[k].fresh, k, st.round) {
+        return fail(cfg, st, k);
+    }
+    let coord = st.shards[k].coord;
+    let (next, action) = coord.on_event(CoordEvent::Sent, &mut st.shards[k].retries, cfg.budget);
+    if action != CoordAction::None {
+        return Err(format!("CoordSm answered {action:?} to Sent"));
+    }
+    st.shards[k].coord = next;
+    Ok(())
+}
+
+/// Shard `k` receives the round's frame, computes, and its reply is
+/// folded at the coordinator.
+fn deliver_reply(cfg: &ModelCfg, st: &mut ModelState, k: usize) -> Result<(), String> {
+    let frame = if st.round <= cfg.steps { FrameKind::Step } else { FrameKind::Finish };
+    let (sm, act) = st.shards[k].sm.on_frame(frame);
+    if act == ShardAction::Protocol {
+        return Err(format!("shard {k} rejected {frame:?} in round {}", st.round));
+    }
+    st.shards[k].sm = sm;
+    // Production injection point: on Step receipt, before any compute.
+    if fires(cfg, &cfg.reply, st.shards[k].fresh, k, st.round) {
+        return fail(cfg, st, k);
+    }
+    let round = st.round;
+    if round <= cfg.steps {
+        if st.shards[k].agg.contains(&round) {
+            return Err(format!("shard {k} re-ran step {round} (agg {:?})", st.shards[k].agg));
+        }
+        let base: Vec<u64> = (1..round).collect();
+        if st.shards[k].agg != base {
+            return Err(format!(
+                "shard {k} computed step {round} from base {:?}",
+                st.shards[k].agg
+            ));
+        }
+        st.shards[k].agg.push(round);
+    }
+    let coord = st.shards[k].coord;
+    let (next, action) = coord.on_event(CoordEvent::Reply, &mut st.shards[k].retries, cfg.budget);
+    if action != CoordAction::Fold {
+        return Err(format!("CoordSm answered {action:?} to Reply"));
+    }
+    if st.shards[k].folded {
+        return Err(format!("shard {k} folded twice in round {round}"));
+    }
+    st.shards[k].folded = true;
+    st.shards[k].coord = next;
+    if round <= cfg.steps {
+        let want: Vec<u64> = (1..=round).collect();
+        if st.shards[k].agg != want {
+            return Err(format!(
+                "folded wrong aggregate {:?} for step {round}",
+                st.shards[k].agg
+            ));
+        }
+        st.checkpoints[k] = st.shards[k].agg.clone();
+    } else {
+        let want: Vec<u64> = (1..=cfg.steps).collect();
+        if st.shards[k].agg != want {
+            return Err(format!("shard {k} final output {:?} misses steps", st.shards[k].agg));
+        }
+    }
+    Ok(())
+}
+
+/// Close the round once every shard is Done; open the next, or declare
+/// the run completed after the Finish round (checking the oracle).
+fn advance_if_round_done(
+    cfg: &ModelCfg,
+    st: &mut ModelState,
+    orc: ModelOutcome,
+) -> Result<(), String> {
+    if st.shards.iter().any(|s| s.coord != CoordSm::Done) {
+        return Ok(());
+    }
+    for (k, s) in st.shards.iter().enumerate() {
+        if !s.folded {
+            return Err(format!("round {} closed without folding shard {k}", st.round));
+        }
+        if st.round <= cfg.steps {
+            let want: Vec<u64> = (1..=st.round).collect();
+            if st.checkpoints[k] != want {
+                return Err(format!(
+                    "round {} checkpoint for {k}: {:?}",
+                    st.round, st.checkpoints[k]
+                ));
+            }
+        }
+    }
+    st.round += 1;
+    st.replay_counted = false;
+    if st.round > cfg.steps + 1 {
+        if st.shards.iter().any(|s| s.sm != ShardSm::Finished) {
+            return Err("run completed with an unfinished shard".to_string());
+        }
+        let restarts: u64 = st.shards.iter().map(|s| u64::from(s.retries)).sum();
+        match orc {
+            ModelOutcome::Completed { restarts: want_r, replayed: want_p } => {
+                if (restarts, st.replayed) != (want_r, want_p) {
+                    return Err(format!(
+                        "completed with restarts={restarts} replayed={}, oracle said \
+                         {want_r}/{want_p}",
+                        st.replayed
+                    ));
+                }
+            }
+            ModelOutcome::Exhausted => {
+                return Err("run completed but the oracle expected exhaustion".to_string());
+            }
+        }
+        st.outcome = Some(ModelOutcome::Completed { restarts, replayed: st.replayed });
+    } else {
+        for s in &mut st.shards {
+            s.coord = CoordSm::Send;
+            s.folded = false;
+        }
+    }
+    Ok(())
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Move {
+    Send(usize),
+    Reply(usize),
+}
+
+fn enabled(st: &ModelState) -> Vec<Move> {
+    if st.outcome.is_some() {
+        return Vec::new();
+    }
+    let mut moves = Vec::new();
+    for (k, s) in st.shards.iter().enumerate() {
+        match s.coord {
+            CoordSm::Send => moves.push(Move::Send(k)),
+            CoordSm::Await => moves.push(Move::Reply(k)),
+            CoordSm::Done => {}
+        }
+    }
+    moves
+}
+
+fn apply_move(
+    cfg: &ModelCfg,
+    st: &ModelState,
+    mv: Move,
+    orc: ModelOutcome,
+) -> Result<ModelState, String> {
+    let mut next = st.clone();
+    match mv {
+        Move::Send(k) => deliver_send(cfg, &mut next, k)?,
+        Move::Reply(k) => deliver_reply(cfg, &mut next, k)?,
+    }
+    if next.outcome == Some(ModelOutcome::Exhausted) {
+        if orc != ModelOutcome::Exhausted {
+            return Err(format!("budget exhausted but the oracle expected completion {orc:?}"));
+        }
+    } else if next.outcome.is_none() {
+        advance_if_round_done(cfg, &mut next, orc)?;
+    }
+    Ok(next)
+}
+
+struct Dfs {
+    /// Fully-explored states: everything reachable from them is clean.
+    done: HashSet<Vec<u64>>,
+    /// States on the current DFS stack — revisiting one means a
+    /// schedule can cycle without progress.
+    on_stack: HashSet<Vec<u64>>,
+    states: u64,
+    transitions: u64,
+    terminals: u64,
+    max_depth: usize,
+}
+
+impl Dfs {
+    fn explore(
+        &mut self,
+        cfg: &ModelCfg,
+        st: &ModelState,
+        orc: ModelOutcome,
+        depth: usize,
+    ) -> Result<(), String> {
+        let key = encode(st);
+        if self.on_stack.contains(&key) {
+            return Err(format!(
+                "termination violated: schedule cycle with no progress at depth {depth}"
+            ));
+        }
+        if self.done.contains(&key) {
+            return Ok(());
+        }
+        self.states += 1;
+        self.max_depth = self.max_depth.max(depth);
+        let moves = enabled(st);
+        if moves.is_empty() {
+            self.terminals += 1;
+            self.done.insert(key);
+            return Ok(());
+        }
+        self.on_stack.insert(key.clone());
+        for mv in moves {
+            self.transitions += 1;
+            let next = apply_move(cfg, st, mv, orc)?;
+            self.explore(cfg, &next, orc, depth + 1)?;
+        }
+        self.on_stack.remove(&key);
+        self.done.insert(key);
+        Ok(())
+    }
+}
+
+/// Exhaustively explore every interleaving of the configuration. `Ok`
+/// carries exploration stats and the oracle outcome every path reached;
+/// `Err` describes the first invariant violation found.
+pub fn check(cfg: &ModelCfg) -> Result<ModelReport, String> {
+    let orc = oracle(cfg);
+    let mut dfs = Dfs {
+        done: HashSet::new(),
+        on_stack: HashSet::new(),
+        states: 0,
+        transitions: 0,
+        terminals: 0,
+        max_depth: 0,
+    };
+    dfs.explore(cfg, &initial(cfg), orc, 0)?;
+    if dfs.terminals == 0 {
+        return Err("no terminal state reached".to_string());
+    }
+    Ok(ModelReport {
+        states: dfs.states,
+        transitions: dfs.transitions,
+        terminals: dfs.terminals,
+        max_depth: dfs.max_depth,
+        outcome: orc,
+    })
+}
+
+/// Model-predicted recovery counters for a production `--inject` plan:
+/// the `(shard_restarts, replayed_steps)` a real run with `shards`
+/// shards, `steps` supersteps and `--max-shard-retries budget` must
+/// report. `Err` if the plan must exhaust the budget (or violates the
+/// model, which would be a checker bug). The conformance suite in
+/// `rust/tests/recovery.rs` asserts real `RunResult`s match bit-for-bit.
+pub fn predict(
+    shards: usize,
+    steps: u64,
+    budget: u32,
+    plan: &FaultPlan,
+) -> Result<(u64, u64), String> {
+    let cfg = ModelCfg::new(shards, steps, budget).with_reply(plan.clone());
+    let report = check(&cfg)?;
+    match report.outcome {
+        ModelOutcome::Completed { restarts, replayed } => Ok((restarts, replayed)),
+        ModelOutcome::Exhausted => Err(format!("plan `{}` exhausts the retry budget", plan.to_arg())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::fault::{FaultKind, FaultSpec};
+
+    // Test names carry the `comm_model` prefix via the module path, so
+    // `cargo test -q comm_model` (the CI step) selects exactly these.
+
+    fn plan(s: &str) -> FaultPlan {
+        FaultPlan::parse(s).expect("test plan must parse")
+    }
+
+    fn spec(shard: usize, step: u64, repeat: bool) -> FaultSpec {
+        FaultSpec { kind: FaultKind::Kill, shard, step, repeat }
+    }
+
+    /// Fault-free runs complete with zero recovery, and their state
+    /// spaces match the independent Python simulation exactly
+    /// (`python/tools/comm_model_sim.py`, pinned in
+    /// `python/tests/test_comm_model_sim.py`).
+    #[test]
+    fn fault_free_matrix_completes_and_matches_python_pins() {
+        for shards in 2..=3usize {
+            for steps in 1..=3u64 {
+                for budget in 0..=2u32 {
+                    let r = check(&ModelCfg::new(shards, steps, budget))
+                        .expect("fault-free run must pass");
+                    assert_eq!(
+                        r.outcome,
+                        ModelOutcome::Completed { restarts: 0, replayed: 0 },
+                        "({shards},{steps},{budget})"
+                    );
+                    // The budget never enters a fault-free space.
+                    let want = match (shards, steps) {
+                        (2, 1) => (17, 24, 1, 8),
+                        (2, 2) => (25, 36, 1, 12),
+                        (2, 3) => (33, 48, 1, 16),
+                        (3, 1) => (53, 108, 1, 12),
+                        (3, 2) => (79, 162, 1, 18),
+                        (3, 3) => (105, 216, 1, 24),
+                        _ => unreachable!("loop bounds"),
+                    };
+                    assert_eq!(
+                        (r.states, r.transitions, r.terminals, r.max_depth),
+                        want,
+                        "({shards},{steps},{budget})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The full single-fault matrix the ISSUE demands: kill/stall/
+    /// corrupt at every protocol point (every shard × every round,
+    /// including the Finish round, reply- and send-side) × 2–3 shards ×
+    /// 1–3 supersteps × budgets 0–2. 540 configurations, each explored
+    /// exhaustively; outcomes must match the oracle's closed form and
+    /// the summed state space must match the Python simulation's.
+    #[test]
+    fn exhaustive_single_fault_matrix_matches_oracle_and_python() {
+        let (mut runs, mut states, mut transitions, mut completed) = (0u64, 0u64, 0u64, 0u64);
+        let mut largest = 0u64;
+        for shards in 2..=3usize {
+            for steps in 1..=3u64 {
+                for budget in 0..=2u32 {
+                    for shard in 0..shards {
+                        for step in 1..=steps + 1 {
+                            for repeat in [false, true] {
+                                for at_send in [false, true] {
+                                    let fp =
+                                        FaultPlan { specs: vec![spec(shard, step, repeat)] };
+                                    let cfg = if at_send {
+                                        ModelCfg::new(shards, steps, budget).with_send(fp)
+                                    } else {
+                                        ModelCfg::new(shards, steps, budget).with_reply(fp)
+                                    };
+                                    let r = check(&cfg).expect("single-fault run must pass");
+                                    let want = if repeat || budget == 0 {
+                                        ModelOutcome::Exhausted
+                                    } else {
+                                        ModelOutcome::Completed {
+                                            restarts: 1,
+                                            replayed: u64::from(step <= steps),
+                                        }
+                                    };
+                                    assert_eq!(
+                                        r.outcome, want,
+                                        "({shards},{steps},{budget}) fault \
+                                         shard={shard},step={step},repeat={repeat},\
+                                         send={at_send}"
+                                    );
+                                    runs += 1;
+                                    states += r.states;
+                                    transitions += r.transitions;
+                                    largest = largest.max(r.states);
+                                    if matches!(r.outcome, ModelOutcome::Completed { .. }) {
+                                        completed += 1;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        println!(
+            "comm_model matrix: {runs} runs, {states} states, {transitions} transitions, \
+             largest space {largest} states"
+        );
+        // Pinned against python/tools/comm_model_sim.py run over the
+        // identical matrix: two independent implementations, same space.
+        assert_eq!(runs, 540);
+        assert_eq!(states, 28_999);
+        assert_eq!(transitions, 54_195);
+        assert_eq!(completed, 180);
+        assert_eq!(largest, 141);
+    }
+
+    /// The model abstracts over *how* a shard fails: kill, stall and
+    /// corrupt-frame plans (production grammar) explore identical
+    /// spaces, because all three surface as the same Failed event —
+    /// which is exactly how `exchange` treats their typed errors.
+    #[test]
+    fn fault_kinds_are_model_equivalent() {
+        let reports: Vec<ModelReport> = [
+            "kill:shard=1,step=2",
+            "stall:shard=1,step=2",
+            "corrupt-frame:shard=1,step=2",
+        ]
+        .iter()
+        .map(|s| {
+            check(&ModelCfg::new(2, 2, 1).with_reply(plan(s))).expect("plan must pass")
+        })
+        .collect();
+        assert_eq!(reports[0], reports[1]);
+        assert_eq!(reports[0], reports[2]);
+        assert_eq!(
+            reports[0].outcome,
+            ModelOutcome::Completed { restarts: 1, replayed: 1 }
+        );
+        // Pinned against the Python simulation.
+        assert_eq!(
+            (reports[0].states, reports[0].transitions, reports[0].terminals),
+            (31, 46, 1)
+        );
+    }
+
+    /// Multi-fault plans, pinned against the Python simulation: double
+    /// faults in one round fold into one replayed step, a second spec
+    /// for an already-respawned shard never fires (the strip), faults
+    /// at the Finish round restart without replaying, and send-side
+    /// faults compose with reply-side ones.
+    #[test]
+    fn multi_fault_plans_match_python_pins() {
+        // (shards, steps, budget, plan, states, transitions, outcome)
+        let cases: &[(usize, u64, u32, &str, u64, u64, (u64, u64))] = &[
+            (2, 2, 2, "kill:shard=0,step=2;kill:shard=1,step=2", 41, 64, (2, 1)),
+            (2, 2, 2, "kill:shard=1,step=1;stall:shard=1,step=2", 31, 46, (1, 1)),
+            (2, 3, 2, "kill:shard=0,step=1;corrupt-frame:shard=1,step=3", 45, 68, (2, 2)),
+            (3, 2, 1, "kill:shard=0,step=1;kill:shard=1,step=1;kill:shard=2,step=2", 145, 320, (3, 2)),
+            (2, 2, 1, "kill:shard=0,step=3", 31, 46, (1, 0)),
+        ];
+        for &(shards, steps, budget, p, states, transitions, (restarts, replayed)) in cases {
+            let r = check(&ModelCfg::new(shards, steps, budget).with_reply(plan(p)))
+                .expect("plan must pass");
+            assert_eq!(
+                (r.states, r.transitions, r.outcome),
+                (states, transitions, ModelOutcome::Completed { restarts, replayed }),
+                "plan {p}"
+            );
+        }
+        // Send-side + reply-side mix (the Python `send` fault flag).
+        let mixed = ModelCfg::new(2, 2, 2)
+            .with_send(FaultPlan { specs: vec![spec(0, 1, false)] })
+            .with_reply(plan("kill:shard=1,step=2"));
+        let r = check(&mixed).expect("mixed plan must pass");
+        assert_eq!(
+            (r.states, r.transitions, r.outcome),
+            (34, 51, ModelOutcome::Completed { restarts: 2, replayed: 2 })
+        );
+    }
+
+    /// A spent budget is a *typed terminal*, reached on every path that
+    /// spends it — never a hang (termination is checked) and never a
+    /// silently-completed run (the oracle cross-check).
+    #[test]
+    fn retry_exhaustion_is_a_typed_terminal() {
+        // A repeat fault outlives every respawn: budget 2 is spent.
+        let r = check(&ModelCfg::new(2, 2, 2).with_reply(plan("kill:shard=1,step=2,repeat")))
+            .expect("exhaustion is a clean terminal, not a violation");
+        assert_eq!(r.outcome, ModelOutcome::Exhausted);
+        assert_eq!((r.states, r.transitions, r.terminals), (29, 42, 3));
+        // Budget 0: the very first failure exhausts.
+        let r = check(&ModelCfg::new(2, 1, 0).with_reply(plan("kill:shard=0,step=1")))
+            .expect("budget-0 exhaustion is a clean terminal");
+        assert_eq!(r.outcome, ModelOutcome::Exhausted);
+        assert_eq!((r.states, r.terminals), (9, 3));
+    }
+
+    /// `predict` is the conformance bridge: the counters it returns for
+    /// a production `--inject` plan are asserted bit-for-bit against
+    /// real `RunResult`s in `rust/tests/recovery.rs`.
+    #[test]
+    fn predict_returns_recovery_counters_or_exhaustion() {
+        assert_eq!(predict(2, 2, 3, &plan("kill:shard=1,step=2")), Ok((1, 1)));
+        assert_eq!(
+            predict(3, 2, 3, &plan("kill:shard=0,step=2;stall:shard=2,step=2")),
+            Ok((2, 1))
+        );
+        assert_eq!(predict(2, 2, 3, &plan("")), Ok((0, 0)));
+        let err = predict(2, 2, 1, &plan("kill:shard=1,step=2,repeat"))
+            .expect_err("repeat fault must exhaust");
+        assert!(err.contains("exhausts the retry budget"), "{err}");
+    }
+
+    /// ISSUE-required mutation: a respawn that does not re-base the
+    /// snapshot (restores the initial empty one) must be caught. Fault
+    /// at step 2 so the retained checkpoint is nonempty — at step 1 the
+    /// empty snapshot is legitimately correct.
+    #[test]
+    fn mutation_stale_restore_is_caught() {
+        let cfg = ModelCfg::new(2, 2, 1)
+            .with_reply(plan("kill:shard=1,step=2"))
+            .with_mutation(Mutation::StaleRestore);
+        let err = check(&cfg).expect_err("stale restore must be detected");
+        assert!(err.contains("restored []"), "{err}");
+        assert!(err.contains("expected the step-1 checkpoint"), "{err}");
+    }
+
+    /// Skipping the Restore frame entirely leaves the respawned shard
+    /// on the empty base — same detector, different bug site.
+    #[test]
+    fn mutation_skip_restore_is_caught() {
+        let cfg = ModelCfg::new(2, 2, 1)
+            .with_reply(plan("kill:shard=1,step=2"))
+            .with_mutation(Mutation::SkipRestore);
+        let err = check(&cfg).expect_err("skipped restore must be detected");
+        assert!(err.contains("expected the step-1 checkpoint"), "{err}");
+    }
+
+    /// Forgetting the one-shot strip (`for_respawn` never applied)
+    /// turns a one-shot fault into a respawn loop that spends the
+    /// budget — caught because the oracle says the plan must complete.
+    #[test]
+    fn mutation_keep_oneshot_faults_is_caught() {
+        let cfg = ModelCfg::new(2, 2, 1)
+            .with_reply(plan("kill:shard=1,step=2"))
+            .with_mutation(Mutation::KeepOneShotFaults);
+        let err = check(&cfg).expect_err("missing one-shot strip must be detected");
+        assert!(err.contains("oracle expected completion"), "{err}");
+    }
+
+    /// Rebroadcasting the round to healthy shards on recovery makes
+    /// them re-receive the Step frame — caught as a re-run (or, had the
+    /// re-run slipped through, as a double fold).
+    #[test]
+    fn mutation_rebroadcast_is_caught() {
+        let cfg = ModelCfg::new(2, 2, 1)
+            .with_reply(plan("kill:shard=1,step=2"))
+            .with_mutation(Mutation::Rebroadcast);
+        let err = check(&cfg).expect_err("round rebroadcast must be detected");
+        assert!(err.contains("re-ran") || err.contains("folded twice"), "{err}");
+    }
+
+    /// Out-of-range specs (shard ≥ n, step > steps+1) never fire: the
+    /// oracle ignores them and the explored space equals fault-free.
+    #[test]
+    fn out_of_range_specs_are_inert() {
+        let clean = check(&ModelCfg::new(2, 2, 1)).expect("fault-free must pass");
+        let inert = check(
+            &ModelCfg::new(2, 2, 1).with_reply(plan("kill:shard=5,step=2;kill:shard=0,step=9")),
+        )
+        .expect("inert plan must pass");
+        assert_eq!(clean, inert);
+    }
+}

@@ -42,6 +42,15 @@
 //! and measured `wire_bytes` differ). A fault repeated past the retry
 //! budget fails fast with a typed `comm-retries-exhausted` error.
 //!
+//! The per-shard round protocol is an explicit one-event-per-step state
+//! machine ([`CoordSm`]): `exchange` owns the sockets, the machine owns
+//! the state and retry arithmetic. The exhaustive recovery checker in
+//! [`comm_model`](super::comm_model) drives this same transition
+//! function (plus the shard side's [`ShardSm`](super::shard::ShardSm))
+//! through **every** interleaving of frame deliveries and injected
+//! faults within its bounds, proving exactly-once folds, fresh-snapshot
+//! restores, and termination instead of asserting them in prose.
+//!
 //! The coordinator holds no workers: its per-step job is serialize,
 //! broadcast, collect, merge, checkpoint, decide termination. At the
 //! end it gathers each shard's flushed output aggregation and sink
@@ -252,6 +261,87 @@ fn spawn_shard(
     cmd.spawn().with_context(|| format!("spawn shard {k} from {exe:?}"))
 }
 
+/// The coordinator's per-shard, per-round protocol logic as an explicit
+/// state machine. Each round of [`Coordinator::exchange`] holds one
+/// `CoordSm` per shard and feeds it one [`CoordEvent`] per socket
+/// operation; the machine answers with the next state and the
+/// [`CoordAction`] the driver must execute. Production drives it over
+/// real sockets; the exhaustive recovery checker in
+/// [`comm_model`](super::comm_model) drives the *same* transition
+/// function over model shards and explores every interleaving of frame
+/// deliveries and injected faults — the same pattern as
+/// [`ClaimSm`](crate::engine::steal) and the steal-ledger checker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoordSm {
+    /// The round's payload has not reached this shard's current
+    /// incarnation (the initial state, and again after every recovery).
+    Send,
+    /// Payload on the wire; awaiting this shard's reply frame.
+    Await,
+    /// Reply decoded and folded — this shard's round is complete.
+    Done,
+}
+
+/// One observable event on a shard's socket during a round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoordEvent {
+    /// The round's payload went onto the socket.
+    Sent,
+    /// A decodable reply frame of the expected kind arrived.
+    Reply,
+    /// Any failure at any protocol point: a send error, an expired
+    /// deadline, a dead peer, or an undecodable reply. All failure
+    /// classes converge here — recovery does not care why a shard died.
+    Failed,
+}
+
+/// What the exchange driver must do after a [`CoordSm`] transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoordAction {
+    /// Nothing; continue the round.
+    None,
+    /// Fold the decoded reply into the barrier. The machine emits this
+    /// exactly once per shard per round — the exactly-once-fold
+    /// invariant the model checker proves over all schedules.
+    Fold,
+    /// Kill, back off, respawn, and restore this shard, then re-send the
+    /// round's payload to it alone ([`Coordinator::respawn`]).
+    Respawn,
+    /// The shard's retry budget is spent: fail the run with a typed
+    /// `comm-retries-exhausted` error instead of looping forever.
+    Exhausted,
+}
+
+impl CoordSm {
+    /// Feed one event; returns the next state and the driver's action.
+    /// `retries` is the shard's cumulative recovery ledger — charging it
+    /// and the exhaustion decision live *here*, inside the verified
+    /// transition function, so the model checker exercises the same
+    /// budget arithmetic production runs. Impossible pairings are
+    /// tolerated as no-ops (the checker feeds arbitrary schedules), the
+    /// same stance [`ClaimSm`](crate::engine::steal) takes.
+    pub fn on_event(
+        self,
+        ev: CoordEvent,
+        retries: &mut u32,
+        max_retries: u32,
+    ) -> (CoordSm, CoordAction) {
+        match (self, ev) {
+            (CoordSm::Send, CoordEvent::Sent) => (CoordSm::Await, CoordAction::None),
+            (CoordSm::Await, CoordEvent::Reply) => (CoordSm::Done, CoordAction::Fold),
+            (CoordSm::Send, CoordEvent::Failed) | (CoordSm::Await, CoordEvent::Failed) => {
+                *retries += 1;
+                if *retries > max_retries {
+                    (self, CoordAction::Exhausted)
+                } else {
+                    (CoordSm::Send, CoordAction::Respawn)
+                }
+            }
+            (s, _) => (s, CoordAction::None),
+        }
+    }
+}
+
 /// Owns the run's listener, shard processes, connections, barrier
 /// checkpoints, and recovery ledger. Dropping it kills every child, so
 /// a coordinator error never leaks orphan processes.
@@ -369,6 +459,13 @@ impl<'a> Coordinator<'a> {
     /// the respawned shard re-receives the payload — a replay of this
     /// round for that shard alone.
     ///
+    /// The round is one [`CoordSm`] per shard, driven to `Done`. Every
+    /// socket outcome becomes a [`CoordEvent`]; the machine owns the
+    /// state/retry arithmetic, this driver owns the sockets and executes
+    /// the returned [`CoordAction`]s. The exhaustive checker in
+    /// [`comm_model`](super::comm_model) drives the same machine through
+    /// every failure interleaving this loop can encounter.
+    ///
     /// `count_replay` marks rounds that are supersteps (for the
     /// `replayed_steps` ledger; the Finish round is not a superstep).
     /// `step` labels this round's trace spans — 0 for control rounds
@@ -383,63 +480,69 @@ impl<'a> Coordinator<'a> {
         count_replay: bool,
     ) -> Result<Vec<T>> {
         let n = self.streams.len();
+        let mut sm = vec![CoordSm::Send; n];
         let mut done: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        let mut sent = vec![false; n];
         let mut replay_counted = false;
-        while done.iter().any(Option::is_none) {
+        while sm.iter().any(|s| *s != CoordSm::Done) {
             for k in 0..n {
-                if done[k].is_none() && !sent[k] {
-                    let t_tx = self.trace.start();
-                    match self.streams[k].send_frame(send_kind, payload, &self.wire_per[k], "send")
-                    {
-                        Ok(()) => {
-                            self.trace.record(
-                                SpanKind::FrameSend,
-                                step,
-                                0,
-                                t_tx,
-                                HEADER_BYTES + payload.len() as u64,
-                            );
-                            sent[k] = true;
-                        }
-                        Err(e) => {
-                            let err =
-                                Error::from(e).wrap(format!("send {send_kind:?} to shard {k}"));
-                            self.recover(k, step, &err)?;
-                            if count_replay && !replay_counted {
-                                replay_counted = true;
-                                self.replayed_steps += 1;
-                                self.trace.mark(SpanKind::Replay, step, 0, k as u64);
-                            }
-                        }
+                if sm[k] != CoordSm::Send {
+                    continue;
+                }
+                let t_tx = self.trace.start();
+                match self.streams[k].send_frame(send_kind, payload, &self.wire_per[k], "send") {
+                    Ok(()) => {
+                        self.trace.record(
+                            SpanKind::FrameSend,
+                            step,
+                            0,
+                            t_tx,
+                            HEADER_BYTES + payload.len() as u64,
+                        );
+                        let (next, _) = sm[k].on_event(
+                            CoordEvent::Sent,
+                            &mut self.retries[k],
+                            self.opts.max_shard_retries,
+                        );
+                        sm[k] = next;
+                    }
+                    Err(e) => {
+                        let err = Error::from(e).wrap(format!("send {send_kind:?} to shard {k}"));
+                        sm[k] = self.shard_failed(k, step, &err, sm[k])?;
+                        self.count_replay(step, k, count_replay, &mut replay_counted);
                     }
                 }
             }
             for k in 0..n {
-                if done[k].is_none() && sent[k] {
-                    let t_rx = self.trace.start();
-                    // Two statements, so the recorder borrow does not
-                    // overlap the stream borrow inside the chain.
-                    let raw = self.streams[k]
-                        .expect_frame(want, &self.wire_per[k])
-                        .map_err(Error::from);
-                    if let Ok(p) = &raw {
-                        self.trace.record(SpanKind::FrameRecv, step, 0, t_rx, p.len() as u64);
+                if sm[k] != CoordSm::Await {
+                    continue;
+                }
+                let t_rx = self.trace.start();
+                // Two statements, so the recorder borrow does not
+                // overlap the stream borrow inside the chain.
+                let raw = self.streams[k]
+                    .expect_frame(want, &self.wire_per[k])
+                    .map_err(Error::from);
+                if let Ok(p) = &raw {
+                    self.trace.record(SpanKind::FrameRecv, step, 0, t_rx, p.len() as u64);
+                }
+                let got = raw
+                    .and_then(|p| decode(&p))
+                    .with_context(|| format!("receive {want:?} from shard {k}"));
+                match got {
+                    Ok(v) => {
+                        let (next, action) = sm[k].on_event(
+                            CoordEvent::Reply,
+                            &mut self.retries[k],
+                            self.opts.max_shard_retries,
+                        );
+                        debug_assert!(matches!(action, CoordAction::Fold));
+                        debug_assert!(done[k].is_none(), "shard {k} reply folded twice");
+                        done[k] = Some(v);
+                        sm[k] = next;
                     }
-                    let got = raw
-                        .and_then(|p| decode(&p))
-                        .with_context(|| format!("receive {want:?} from shard {k}"));
-                    match got {
-                        Ok(v) => done[k] = Some(v),
-                        Err(e) => {
-                            self.recover(k, step, &e)?;
-                            sent[k] = false;
-                            if count_replay && !replay_counted {
-                                replay_counted = true;
-                                self.replayed_steps += 1;
-                                self.trace.mark(SpanKind::Replay, step, 0, k as u64);
-                            }
-                        }
+                    Err(e) => {
+                        sm[k] = self.shard_failed(k, step, &e, sm[k])?;
+                        self.count_replay(step, k, count_replay, &mut replay_counted);
                     }
                 }
             }
@@ -447,12 +550,23 @@ impl<'a> Coordinator<'a> {
         Ok(done.into_iter().flatten().collect())
     }
 
-    /// Replace a failed shard: diagnose the process, charge the retry
-    /// budget, kill the old incarnation, back off, respawn the same
-    /// shard id, re-handshake, and replay its barrier checkpoint with a
-    /// `Restore` frame. On success `streams[k]` is the new incarnation,
-    /// restored and waiting for the round's payload.
-    fn recover(&mut self, k: usize, step: usize, err: &Error) -> Result<()> {
+    /// A superstep round counts at most one replay however many shards
+    /// were recovered in it — the round is re-entered once.
+    fn count_replay(&mut self, step: usize, k: usize, counting: bool, counted: &mut bool) {
+        if counting && !*counted {
+            *counted = true;
+            self.replayed_steps += 1;
+            self.trace.mark(SpanKind::Replay, step, 0, k as u64);
+        }
+    }
+
+    /// A shard's round failed. Diagnose the process, then let the
+    /// shard's [`CoordSm`] decide — [`CoordEvent::Failed`] charges the
+    /// retry budget and returns either [`CoordAction::Respawn`] (execute
+    /// the recovery mechanics, re-enter the round) or
+    /// [`CoordAction::Exhausted`] (fail the run with the typed error).
+    /// Returns the shard's next protocol state.
+    fn shard_failed(&mut self, k: usize, step: usize, err: &Error, sm: CoordSm) -> Result<CoordSm> {
         self.trace.mark(SpanKind::FailureDetected, step, 0, k as u64);
         // A crashed child and a wedged one both surface as socket
         // errors; try_wait tells them apart for the diagnostics.
@@ -461,15 +575,33 @@ impl<'a> Coordinator<'a> {
             Ok(None) => "process still running (wedged)".to_string(),
             Err(e) => format!("process state unknown ({e})"),
         };
-        self.retries[k] += 1;
-        if self.retries[k] > self.opts.max_shard_retries {
-            bail!(
+        let (next, action) =
+            sm.on_event(CoordEvent::Failed, &mut self.retries[k], self.opts.max_shard_retries);
+        match action {
+            CoordAction::Exhausted => bail!(
                 "comm-retries-exhausted: shard {k} failed {} times, over --max-shard-retries {} \
                  (last failure: {err}; {diagnosis})",
                 self.retries[k],
                 self.opts.max_shard_retries
-            );
+            ),
+            CoordAction::Respawn => {
+                self.respawn(k, step)?;
+                Ok(next)
+            }
+            // `Failed` only ever yields Respawn or Exhausted; tolerate
+            // the no-op answers the way the machine itself does.
+            CoordAction::None | CoordAction::Fold => Ok(next),
         }
+    }
+
+    /// Replace a failed shard's incarnation: kill it, back off, respawn
+    /// the same shard id, re-handshake, and replay its barrier
+    /// checkpoint with a `Restore` frame. Pure mechanics — the decision
+    /// to recover at all (vs. exhausting the run) was already made by
+    /// [`CoordSm::on_event`] in [`Self::shard_failed`]. On success
+    /// `streams[k]` is the new incarnation, restored and waiting for the
+    /// round's payload.
+    fn respawn(&mut self, k: usize, step: usize) -> Result<()> {
         self.shard_restarts += 1;
         let _ = self.children[k].kill();
         let _ = self.children[k].wait();
@@ -952,6 +1084,56 @@ mod tests {
         assert!(e.to_string().contains("out-of-range"), "{e}");
         let e = validate_hello_id(0, 2, &[true, false]).unwrap_err();
         assert!(e.to_string().contains("two shards"), "{e}");
+    }
+
+    /// The happy path of the round machine: Send → Await → Done, with
+    /// the fold emitted exactly at the Reply transition and the retry
+    /// ledger untouched.
+    #[test]
+    fn coord_sm_happy_path_folds_once_and_charges_nothing() {
+        let mut retries = 0;
+        let (s, a) = CoordSm::Send.on_event(CoordEvent::Sent, &mut retries, 3);
+        assert_eq!((s, a), (CoordSm::Await, CoordAction::None));
+        let (s, a) = s.on_event(CoordEvent::Reply, &mut retries, 3);
+        assert_eq!((s, a), (CoordSm::Done, CoordAction::Fold));
+        assert_eq!(retries, 0);
+    }
+
+    /// Failures charge the budget from either live state and re-enter
+    /// Send until the budget is spent, then answer Exhausted — the
+    /// decision production's `shard_failed` turns into the typed
+    /// `comm-retries-exhausted` bail.
+    #[test]
+    fn coord_sm_charges_failures_until_exhaustion() {
+        let mut retries = 0;
+        let (s, a) = CoordSm::Await.on_event(CoordEvent::Failed, &mut retries, 2);
+        assert_eq!((s, a, retries), (CoordSm::Send, CoordAction::Respawn, 1));
+        let (s, a) = CoordSm::Send.on_event(CoordEvent::Failed, &mut retries, 2);
+        assert_eq!((s, a, retries), (CoordSm::Send, CoordAction::Respawn, 2));
+        let (_, a) = s.on_event(CoordEvent::Failed, &mut retries, 2);
+        assert_eq!((a, retries), (CoordAction::Exhausted, 3));
+        // Budget 0: the very first failure exhausts.
+        let mut none = 0;
+        let (_, a) = CoordSm::Await.on_event(CoordEvent::Failed, &mut none, 0);
+        assert_eq!(a, CoordAction::Exhausted);
+    }
+
+    /// Impossible pairings are tolerated as no-ops, never panics — the
+    /// model checker feeds the machine arbitrary schedules.
+    #[test]
+    fn coord_sm_tolerates_impossible_events() {
+        let mut retries = 0;
+        for (s, ev) in [
+            (CoordSm::Send, CoordEvent::Reply),
+            (CoordSm::Await, CoordEvent::Sent),
+            (CoordSm::Done, CoordEvent::Sent),
+            (CoordSm::Done, CoordEvent::Reply),
+            (CoordSm::Done, CoordEvent::Failed),
+        ] {
+            let (next, a) = s.on_event(ev, &mut retries, 3);
+            assert_eq!((next, a), (s, CoordAction::None), "{s:?} on {ev:?}");
+        }
+        assert_eq!(retries, 0, "no-ops never charge the budget");
     }
 
     #[test]

@@ -21,7 +21,11 @@
 //! their cross-step state at each barrier, and the coordinator respawns
 //! and replays failed shards ([`coordinator::RecoveryOptions`]) —
 //! without disturbing bit-identity. Failures are rehearsed
-//! deterministically via [`fault::FaultPlan`] (`--inject`). See
+//! deterministically via [`fault::FaultPlan`] (`--inject`), and the
+//! recovery protocol itself is *exhaustively* model-checked: both ends
+//! are explicit state machines ([`coordinator::CoordSm`],
+//! [`shard::ShardSm`]) that [`comm_model`] drives through every
+//! interleaving of frame deliveries and injected faults. See
 //! `ARCHITECTURE.md` § "Fault tolerance".
 //!
 //! The whole exchange is observable: both ends of every socket keep a
@@ -31,6 +35,7 @@
 //! the `Hello` handshake — into one [`crate::trace::Timeline`]. See
 //! `ARCHITECTURE.md` § "Observability".
 
+pub mod comm_model;
 pub mod coordinator;
 pub mod fault;
 pub mod frame;

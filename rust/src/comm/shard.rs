@@ -56,6 +56,52 @@ use super::wire::{self, FinalOut, ShardOut, ShardSnapshot, StepMsg, WireFrontier
 /// shard is spawned, so this only covers process-startup races).
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// The shard's frame loop as an explicit one-event-per-step state
+/// machine: every received frame kind maps to exactly one
+/// [`ShardAction`]. Production ([`run_shard_with`]) drives it over the
+/// real socket; the exhaustive recovery checker in
+/// [`comm_model`](super::comm_model) drives the *same* transition
+/// function for every model shard incarnation — the pattern
+/// [`ClaimSm`](crate::engine::steal) set for the steal ledger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardSm {
+    /// Between frames: ready for a `Step`, a `Restore`, or a `Finish`.
+    Await,
+    /// `Finish` handled; the loop is over and the process exits.
+    Finished,
+}
+
+/// What the shard's frame loop must do with a received frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardAction {
+    /// Run one superstep's share and reply with a `ShardOut` (after the
+    /// injected-fault check — faults fire on `Step` receipt, *before*
+    /// any computation, so a faulted step is never half-computed).
+    RunStep,
+    /// Overwrite cross-step private state from the delivered barrier
+    /// checkpoint (this incarnation was respawned after a failure).
+    Restore,
+    /// Flush, reply with a `FinalOut`, and exit cleanly.
+    Finish,
+    /// A frame the protocol never sends a shard in this state — fail
+    /// with a typed protocol violation.
+    Protocol,
+}
+
+impl ShardSm {
+    /// Dispatch one received frame kind. Total over every
+    /// `(state, kind)` pair — hostile or out-of-order frames land on
+    /// [`ShardAction::Protocol`], never a panic.
+    pub fn on_frame(self, kind: FrameKind) -> (ShardSm, ShardAction) {
+        match (self, kind) {
+            (ShardSm::Await, FrameKind::Step) => (ShardSm::Await, ShardAction::RunStep),
+            (ShardSm::Await, FrameKind::Restore) => (ShardSm::Await, ShardAction::Restore),
+            (ShardSm::Await, FrameKind::Finish) => (ShardSm::Finished, ShardAction::Finish),
+            (s, _) => (s, ShardAction::Protocol),
+        }
+    }
+}
+
 /// Shard-side runtime knobs, set by the coordinator through argv.
 pub struct ShardOptions {
     /// How long a silent coordinator socket is tolerated before this
@@ -134,12 +180,18 @@ pub fn run_shard_with(
     // at zero each incarnation; every reported count adds this base.
     let mut restored_outputs = 0u64;
 
+    // The frame loop: the socket and the app state live here, the
+    // dispatch decision lives in `ShardSm` — the piece the recovery
+    // model checker drives for every model incarnation.
+    let mut sm = ShardSm::Await;
     loop {
         let (kind, payload) = ds
             .recv_frame(&wire_counter)
             .with_context(|| format!("shard {shard_id} awaiting coordinator"))?;
-        match kind {
-            FrameKind::Step => {
+        let (next, action) = sm.on_frame(kind);
+        sm = next;
+        match action {
+            ShardAction::RunStep => {
                 let t_sp = trace.start();
                 let msg = StepMsg::deserialize(&payload).context("decode Step frame")?;
                 if let Some(fault) = opts.faults.fire(shard_id, msg.step) {
@@ -172,7 +224,7 @@ pub fn run_shard_with(
                 bytes[..8].copy_from_slice(&total.to_le_bytes());
                 ds.send_frame(FrameKind::ShardOut, &bytes, &wire_counter, "send ShardOut")?;
             }
-            FrameKind::Restore => {
+            ShardAction::Restore => {
                 let t_rs = trace.start();
                 let snap =
                     ShardSnapshot::deserialize(&payload).context("decode Restore frame")?;
@@ -191,7 +243,7 @@ pub fn run_shard_with(
                 // ships with the next barrier's ShardOut.
                 trace.record(SpanKind::Restore, 0, 0, t_rs, payload.len() as u64);
             }
-            FrameKind::Finish => {
+            ShardAction::Finish => {
                 let mut out_parts = Vec::with_capacity(t_per);
                 let mut mapped = 0u64;
                 let mut canonize_calls = 0u64;
@@ -219,7 +271,9 @@ pub fn run_shard_with(
                 )?;
                 return Ok(());
             }
-            other => bail!("protocol violation: shard got unexpected {other:?} frame"),
+            ShardAction::Protocol => {
+                bail!("protocol violation: shard got unexpected {kind:?} frame")
+            }
         }
     }
 }
@@ -375,6 +429,31 @@ mod tests {
         });
         assert!(err.to_string().contains("comm-timeout:"), "{err}");
         assert!(t0.elapsed() < NO_HANG);
+    }
+
+    /// The dispatch table, pinned pair by pair: the machine the model
+    /// checker drives must be total and match the protocol exactly.
+    #[test]
+    fn shard_sm_dispatch_table_is_total() {
+        use FrameKind::*;
+        use ShardAction as A;
+        use ShardSm::*;
+        let cases = [
+            (Await, Step, Await, A::RunStep),
+            (Await, Restore, Await, A::Restore),
+            (Await, Finish, Finished, A::Finish),
+            // Frames the coordinator never sends a shard:
+            (Await, Hello, Await, A::Protocol),
+            (Await, ShardOut, Await, A::Protocol),
+            (Await, FinalOut, Await, A::Protocol),
+        ];
+        for (s, kind, want_s, want_a) in cases {
+            assert_eq!(s.on_frame(kind), (want_s, want_a), "{s:?} on {kind:?}");
+        }
+        // After Finish, *everything* is a protocol violation.
+        for kind in [Hello, Step, ShardOut, Finish, FinalOut, Restore] {
+            assert_eq!(Finished.on_frame(kind), (Finished, A::Protocol), "Finished on {kind:?}");
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-use arabesque::analysis::rules::{self, Finding, MergeSpec};
+use arabesque::analysis::rules::{self, Finding, FrameDispatchSpec, MergeSpec};
 use arabesque::analysis::{self, lexer};
 
 /// Lines at which `rule` fired, in order.
@@ -182,6 +182,55 @@ fn merge_coverage_pins_the_shard_trace_binding() {
     // inherit the decoy's coverage.
     let decoy = MergeSpec { impl_owner: "ShardTrace", ..spec };
     assert!(rules::merge_coverage(&decoy, &def, &acc).is_empty());
+}
+
+#[test]
+fn frame_kind_coverage_requires_dispatch_on_both_sides() {
+    let def = lexer::lex(include_str!("lint_fixtures/frame_def.rs"));
+    let coord = lexer::lex(include_str!("lint_fixtures/frame_coord.rs"));
+    let shard = lexer::lex(include_str!("lint_fixtures/frame_shard.rs"));
+    let spec = FrameDispatchSpec {
+        enum_name: "WireKind",
+        def_file: "rust/tests/lint_fixtures/frame_def.rs",
+        coord_file: "rust/tests/lint_fixtures/frame_coord.rs",
+        shard_file: "rust/tests/lint_fixtures/frame_shard.rs",
+    };
+    let f = rules::frame_kind_coverage(&spec, &def, &coord, &shard);
+    // Hello/Step are dispatched on both sides. OnlyCoord (def line 6)
+    // is missing from the shard, OnlyShard (line 7) from the
+    // coordinator — where the bare ident, the string mention, and the
+    // unit-test use are all decoys that must not count as dispatch.
+    // `Ignored` (line 9) is allowlisted at its definition.
+    assert_eq!(lines(&f, "frame-kind-coverage"), vec![6, 7]);
+    assert!(f[0].msg.contains("`WireKind::OnlyCoord`"), "{}", f[0].msg);
+    assert!(f[0].msg.contains("shard side"), "{}", f[0].msg);
+    assert!(f[1].msg.contains("`WireKind::OnlyShard`"), "{}", f[1].msg);
+    assert!(f[1].msg.contains("coordinator side"), "{}", f[1].msg);
+}
+
+#[test]
+fn frame_kind_coverage_pins_the_production_binding() {
+    // The production table must bind FrameKind to the two real dispatch
+    // files — losing this binding would silently disable the rule.
+    let spec = rules::FRAME_DISPATCH;
+    assert_eq!(spec.enum_name, "FrameKind");
+    assert_eq!(spec.def_file, "rust/src/comm/frame.rs");
+    assert_eq!(spec.coord_file, "rust/src/comm/coordinator.rs");
+    assert_eq!(spec.shard_file, "rust/src/comm/shard.rs");
+}
+
+#[test]
+fn frame_kind_coverage_flags_stale_specs_loudly() {
+    let def = lexer::lex(include_str!("lint_fixtures/frame_def.rs"));
+    let spec = FrameDispatchSpec {
+        enum_name: "Renamed",
+        def_file: "rust/tests/lint_fixtures/frame_def.rs",
+        coord_file: "rust/tests/lint_fixtures/frame_coord.rs",
+        shard_file: "rust/tests/lint_fixtures/frame_shard.rs",
+    };
+    let f = rules::frame_kind_coverage(&spec, &def, &def, &def);
+    assert_eq!(f.len(), 1);
+    assert!(f[0].msg.contains("spec out of date"), "{}", f[0].msg);
 }
 
 #[test]

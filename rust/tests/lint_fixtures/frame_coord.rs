@@ -1,0 +1,23 @@
+// Coordinator side of the fixture dispatch: handles Hello, Step and
+// OnlyCoord — never OnlyShard. The bare `OnlyShard` ident below and the
+// qualified use inside the unit-test module are decoys: neither is a
+// production dispatch site and neither may satisfy the rule.
+fn dispatch(k: WireKind) {
+    match k {
+        WireKind::Hello => {}
+        WireKind::Step => {}
+        WireKind::OnlyCoord => {}
+        _ => {}
+    }
+    let _ = "WireKind::OnlyShard inside a string is no dispatch either";
+    let only_shard = OnlyShard;
+    drop(only_shard);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn mentions_only_shard() {
+        let _ = WireKind::OnlyShard;
+    }
+}

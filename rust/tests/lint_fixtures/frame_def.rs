@@ -1,0 +1,10 @@
+// Fixture enum for frame-kind-coverage: every variant must be
+// dispatched as a qualified `WireKind::X` path on both sides.
+pub enum WireKind {
+    Hello,
+    Step,
+    OnlyCoord,
+    OnlyShard,
+    // lint:allow(frame-kind-coverage) metrics-only kind: consumed by neither side by design
+    Ignored,
+}

@@ -1,0 +1,10 @@
+// Shard side of the fixture dispatch: handles Hello, Step and
+// OnlyShard — never OnlyCoord.
+fn dispatch(k: WireKind) {
+    match k {
+        WireKind::Hello => {}
+        WireKind::Step => {}
+        WireKind::OnlyShard => {}
+        _ => {}
+    }
+}
